@@ -1,0 +1,72 @@
+"""Shared benchmark utilities: timing + scheme-uniform op drivers."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+
+def timeit(fn, *args, warmup=1, iters=3):
+    """Median wall time of ``fn(*args)`` (jitted fns block on result)."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts)), out
+
+
+class SchemeDriver:
+    """Uniform (insert/delete/update/lookup) driver over the three schemes."""
+
+    def __init__(self, name: str, table_slots: int = 4096):
+        import repro.core.continuity as ch
+        import repro.core.level as lv
+        import repro.core.pfarm as pf
+        self.name = name
+        if name == "continuity":
+            # slots = pairs * 20
+            pairs = table_slots // 20
+            self.cfg = ch.ContinuityConfig(num_buckets=2 * pairs)
+            self.mod = ch
+        elif name == "level":
+            # slots = 1.5 * num_top * bucket_slots
+            top = int(table_slots / 1.5 / 4)
+            self.cfg = lv.LevelConfig(num_top=top + top % 2)
+            self.mod = lv
+        elif name == "pfarm":
+            nb = int(table_slots / 1.25 / 4)
+            self.cfg = pf.PFarmConfig(num_buckets=nb)
+            self.mod = pf
+        else:
+            raise ValueError(name)
+        self.table = self.mod.create(self.cfg)
+
+    def insert(self, keys, vals):
+        self.table, ok, ctr = self.mod.insert(self.cfg, self.table, keys, vals)
+        return ok, ctr
+
+    def update(self, keys, vals):
+        self.table, ok, ctr = self.mod.update(self.cfg, self.table, keys, vals)
+        return ok, ctr
+
+    def delete(self, keys):
+        self.table, ok, ctr = self.mod.delete(self.cfg, self.table, keys)
+        return ok, ctr
+
+    def lookup(self, keys):
+        res = self.mod.lookup(self.cfg, self.table, keys)
+        ctr = self.mod.read_counters(self.cfg, res) \
+            if hasattr(self.mod, "read_counters") else None
+        return res, ctr
+
+    def lookup_fn(self):
+        """Jit-stable lookup callable for timing."""
+        mod, cfg = self.mod, self.cfg
+        return lambda table, keys: mod.lookup(cfg, table, keys)

@@ -1,0 +1,49 @@
+"""Roofline table builder: reads experiments/dryrun/*.json into the
+EXPERIMENTS.md §Roofline table (and prints CSV rows for benchmarks.run)."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+HW = {"peak_flops": 197e12, "hbm_bw": 819e9, "ici_bw": 50e9}
+
+
+def load_records(dirpath="experiments/dryrun"):
+    recs = []
+    for p in sorted(glob.glob(os.path.join(dirpath, "*.json"))):
+        recs.append(json.load(open(p)))
+    return recs
+
+
+def table(dirpath="experiments/dryrun", mesh="16x16"):
+    """Markdown §Roofline table for one mesh."""
+    lines = [
+        "| arch | shape | dominant | compute s | memory s | collective s | "
+        "peak GB/dev | useful FLOPs ratio |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in load_records(dirpath):
+        if r.get("mesh") != mesh or r.get("status") != "ok":
+            continue
+        ro = r["roofline"]
+        peak = r.get("memory", {}).get("peak_estimate_per_device", 0) / 1e9
+        ratio = r.get("useful_flops_ratio", 0)
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {ro['dominant'][:-2]} "
+            f"| {ro['compute_s']:.2e} | {ro['memory_s']:.2e} "
+            f"| {ro['collective_s']:.2e} | {peak:.1f} | {ratio:.2f} |")
+    return "\n".join(lines)
+
+
+def run(rows, dirpath="experiments/dryrun"):
+    for r in load_records(dirpath):
+        if r.get("status") != "ok":
+            continue
+        ro = r["roofline"]
+        step_s = max(ro["compute_s"], ro["memory_s"], ro["collective_s"])
+        rows.append((f"roofline[{r['arch']}|{r['shape']}|{r['mesh']}]",
+                     step_s * 1e6,
+                     f"dom={ro['dominant'][:-2]} "
+                     f"useful={r.get('useful_flops_ratio', 0):.2f}"))

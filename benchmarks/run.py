@@ -1,0 +1,29 @@
+"""Benchmark harness: one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. Sections:
+  * bench_hash    — Table I (PM writes), Figs 4–18 (YCSB throughput/latency,
+                    search micro, update micro, load factor), access-amp
+  * bench_serving — technique-on-the-hot-path serving numbers
+  * roofline      — per-(arch x shape x mesh) dry-run roofline rows
+                    (requires experiments/dryrun/*.json from
+                    ``python -m repro.launch.dryrun --all``)
+"""
+
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    rows = []
+    from benchmarks import bench_hash, bench_serving, roofline
+    bench_hash.run(rows)
+    bench_serving.run(rows)
+    roofline.run(rows)
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.3f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

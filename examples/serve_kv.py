@@ -1,0 +1,84 @@
+"""End-to-end serving driver (the paper-kind example): serve a small LM with
+batched requests on the continuity-hash paged KV cache.
+
+Flow: batch of prompts -> prefill (bulk page registration through the hash
+table) -> batched decode (every step translates (seq, page) keys through the
+table: the paper's one-contiguous-fetch client reads) -> a request finishes
+and its pages are released (atomic indicator-bit deletes) -> a new request
+takes the slot.
+
+Run: PYTHONPATH=src python examples/serve_kv.py
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import smoke_config
+from repro.models import transformer as T
+from repro.models.config import ShapeConfig
+from repro.serving import engine as E
+from repro.serving import kvcache as KC
+
+
+def main():
+    cfg = smoke_config("yi-6b")
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    B, PROMPT, GEN, PS = 4, 32, 48, 16
+    shape = ShapeConfig("serve", seq_len=256, global_batch=B, kind="decode")
+    geom = KC.make_geometry(cfg, shape, shards=2, page_size=PS)
+    cache = KC.create_cache(geom)
+    print(f"model: {cfg.name} smoke ({sum(x.size for x in jax.tree.leaves(params))/1e6:.1f}M params)")
+    print(f"paged cache: {geom.shards} shards x {geom.pool_pages} pages x "
+          f"{PS} tokens; page table = continuity hash "
+          f"({geom.table_cfg.num_buckets} buckets/shard)")
+
+    rng = np.random.RandomState(1)
+    prompts = rng.randint(0, cfg.vocab, size=(B, PROMPT)).astype(np.int32)
+
+    t0 = time.time()
+    logits, cache = E.prefill(cfg, geom, params, jnp.asarray(prompts), cache)
+    print(f"\nprefill {B}x{PROMPT} tokens: {time.time()-t0:.2f}s; "
+          f"{int(cache.table.count.sum())} page mappings registered")
+
+    step = jax.jit(lambda p, t, c: E.serve_step(cfg, geom, p, t, c))
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    t0 = time.time()
+    for i in range(GEN):
+        logits, cache = step(params, tok, cache)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    jax.block_until_ready(logits)
+    dt = time.time() - t0
+    print(f"decode {GEN} steps: {dt:.2f}s ({B*GEN/dt:.1f} tok/s); "
+          f"seq_lens={np.asarray(cache.seq_lens).ravel().tolist()}")
+
+    # request lifecycle: finish seq (0,0), release its pages, admit a new one
+    n_before = int(cache.table.count.sum())
+    cache = E.release_sequence(geom, cache, shard_idx=0, slot=0)
+    print(f"\nreleased one sequence: {n_before} -> "
+          f"{int(cache.table.count.sum())} page mappings "
+          f"(deletes = 1 atomic indicator-bit clear each)")
+
+    # the freed slot serves a new request immediately
+    new_prompt = rng.randint(0, cfg.vocab, size=(1, PS)).astype(np.int32)
+    for t in range(PS):
+        onetok = jnp.where(jnp.arange(B) == 0, new_prompt[0, t], tok)
+        logits, cache = step(params, onetok.astype(jnp.int32), cache)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    print(f"admitted a new request in the freed slot; seq_lens="
+          f"{np.asarray(cache.seq_lens).ravel().tolist()}")
+
+    # content-addressed prefix sharing stats
+    shared = prompts.copy()
+    shared[2:] = shared[:2]
+    keys = np.asarray(E.content_page_keys(jnp.asarray(shared), PS))
+    uniq = len({tuple(r) for r in keys.reshape(-1, 4)})
+    print(f"\nprefix sharing: {uniq}/{keys.shape[0]*keys.shape[1]} unique "
+          f"page keys when half the prompts repeat "
+          f"({1-uniq/(keys.shape[0]*keys.shape[1]):.0%} dedup)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""Checkpointing: two-phase atomic commit, async save, restart recovery."""
+
+from repro.checkpoint.manager import CheckpointManager  # noqa: F401

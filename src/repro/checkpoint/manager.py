@@ -1,0 +1,151 @@
+"""Checkpoint manager with the paper's indicator discipline lifted to storage.
+
+Continuity hashing's crash consistency rule — write the payload first, then
+flip the indicator with ONE atomic store — becomes, at checkpoint scale:
+
+  1. write every shard payload file under ``step_N.tmp/`` and fsync each;
+  2. write a manifest (the "indicator") listing payload digests;
+  3. atomically ``rename(step_N.tmp, step_N)`` — the single atomic commit.
+
+A crash before (3) leaves only a .tmp directory that restart ignores
+(= the partial write is invisible, paper §III-C); after (3) the checkpoint is
+complete by construction. Saves run on a background thread (async checkpoint:
+the train loop only blocks on device->host transfer, not on disk). Restore
+picks the newest COMMITTED step; ``keep`` bounds disk usage.
+
+Restart recovery of an interrupted hash-table resize is in
+``repro.core.continuity.recover`` — the manager just persists both tables
+plus the resize cursor so recovery can run.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _key_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    if hasattr(p, "name"):
+        return str(p.name)
+    return str(p)
+
+
+def _flatten(tree):
+    """Canonical (jax.tree-ordered) {dotted-path: leaf} mapping."""
+    leaves, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return {".".join(_key_str(p) for p in path) or "_root": leaf
+            for path, leaf in leaves}
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3, async_save: bool = True):
+        self.dir = directory
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(directory, exist_ok=True)
+
+    # -- save ---------------------------------------------------------------
+
+    def save(self, step: int, tree: Any, extra: Optional[dict] = None):
+        """Snapshot to host, then commit (optionally) in the background."""
+        flat = _flatten(tree)
+        host = {k: np.asarray(v) for k, v in flat.items()}   # D2H barrier
+        if self.async_save:
+            self.wait()
+            self._thread = threading.Thread(
+                target=self._commit, args=(step, host, extra or {}),
+                daemon=True)
+            self._thread.start()
+        else:
+            self._commit(step, host, extra or {})
+
+    def _commit(self, step: int, host: dict, extra: dict):
+        tmp = os.path.join(self.dir, f"step_{step:09d}.tmp")
+        final = os.path.join(self.dir, f"step_{step:09d}")
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        manifest = {"step": step, "extra": extra, "arrays": {}}
+        for k, v in host.items():
+            path = os.path.join(tmp, k.replace("/", "_") + ".npy")
+            with open(path, "wb") as f:                 # phase 1: payloads
+                np.save(f, v)
+                f.flush()
+                os.fsync(f.fileno())
+            manifest["arrays"][k] = {
+                "file": os.path.basename(path), "shape": list(v.shape),
+                "dtype": str(v.dtype),
+                "digest": hashlib.sha256(v.tobytes()).hexdigest()[:16]}
+        mpath = os.path.join(tmp, "MANIFEST.json")
+        with open(mpath, "w") as f:                     # phase 2: indicator
+            json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)                           # atomic commit
+        self._gc()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self):
+        steps = self.committed_steps()
+        for s in steps[:-self.keep] if self.keep else []:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:09d}"),
+                          ignore_errors=True)
+
+    # -- restore ------------------------------------------------------------
+
+    def committed_steps(self):
+        out = []
+        for name in os.listdir(self.dir):
+            if name.endswith(".tmp"):                   # uncommitted: invisible
+                continue
+            if name.startswith("step_") and os.path.exists(
+                    os.path.join(self.dir, name, "MANIFEST.json")):
+                out.append(int(name[5:]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.committed_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, template: Any, step: Optional[int] = None):
+        """Restore into the structure of ``template``; verifies digests.
+        Returns (tree, step, extra) or (None, None, None) if no checkpoint."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            return None, None, None
+        d = os.path.join(self.dir, f"step_{step:09d}")
+        manifest = json.load(open(os.path.join(d, "MANIFEST.json")))
+        arrays = {}
+        for k, meta in manifest["arrays"].items():
+            v = np.load(os.path.join(d, meta["file"]))
+            dig = hashlib.sha256(v.tobytes()).hexdigest()[:16]
+            if dig != meta["digest"]:
+                raise IOError(f"digest mismatch for {k} in step {step}")
+            arrays[k] = v
+        flat_t = _flatten(template)
+        missing = set(flat_t) - set(arrays)
+        if missing:
+            raise KeyError(f"checkpoint step {step} missing {sorted(missing)[:5]}")
+        rebuilt = jax.tree.unflatten(
+            jax.tree.structure(template),
+            [arrays[k] for k in _flatten(template)])
+        return rebuilt, step, manifest["extra"]

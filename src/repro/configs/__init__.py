@@ -1,0 +1,3 @@
+"""Architecture registry: one module per assigned arch + reduced smoke twins."""
+
+from repro.configs.registry import ARCHS, get_arch, smoke_config  # noqa: F401

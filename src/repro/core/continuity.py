@@ -1,0 +1,508 @@
+"""Continuity hashing (Liu, Hua, Bai — CS.DC 2021) as a functional JAX data structure.
+
+Structure (paper §III-A), defaults ``bucket_slots=4, sbuckets=3``::
+
+      slot ids within one segment-pair row (SLOTS = 20):
+      [ B_even: 0..3 | shared SBuckets: 4..15 | B_odd: 16..19 ]   + ext: 20..31
+
+  * segment(even) = slots [0, 16)   — home bucket + shared region
+  * segment(odd)  = slots [4, 20)   — shared region + home bucket
+  * the two segments of a pair overlap on the SBuckets — exactly the paper's
+    layout, flattened so that one row = one contiguous memory region and a
+    segment fetch is ONE contiguous read (the RDMA-friendliness property).
+  * a 32-bit ``indicator`` word per pair holds one valid-bit per slot
+    (20 main + 12 extension bits — the paper's Fig. 3), committed with a
+    single atomic store AFTER the slot payload: log-free failure atomicity.
+
+Probe order (paper §III-C): even homes scan left->right (bucket, then
+SBuckets); odd homes scan right->left (bucket, then SBuckets in reverse);
+extension slots come last for both parities.
+
+All operations are pure functions ``(table, ...) -> (table, result, counters)``
+and jit-compile with the config static. Server-side mutation batches are
+applied with ``lax.scan`` in batch order — the deterministic TPU analogue of
+the paper's per-slot spin-locks (lock-acquisition order == batch order).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import pmem
+from repro.core.hashfn import hash128
+
+U32 = jnp.uint32
+I32 = jnp.int32
+
+KEY_LANES = 4   # 16-byte keys (paper: 16 B)
+VAL_LANES = 4   # 16-byte value slots (paper: values <= 15 B + metadata byte)
+SLOT_BYTES = (KEY_LANES + VAL_LANES) * 4
+INDICATOR_BYTES = 8  # stored/committed as one 8-byte atomic unit
+
+
+@dataclasses.dataclass(frozen=True)
+class ContinuityConfig:
+    """Static geometry of a continuity hash table."""
+
+    num_buckets: int                 # N numbered buckets (must be even)
+    bucket_slots: int = 4            # slots per bucket (paper: 4)
+    sbuckets: int = 3                # shared SBuckets per pair (paper: 3)
+    ext_frac: float = 1.0 / 10.0     # max fraction of pairs with added SBuckets
+    ext_groups: int = 1              # added SBucket groups per extended pair
+
+    def __post_init__(self):
+        assert self.num_buckets >= 2 and self.num_buckets % 2 == 0
+        assert self.total_bits <= 32, (
+            f"indicator must fit one atomic word: {self.total_bits} bits")
+
+    # -- derived geometry ---------------------------------------------------
+    @property
+    def num_pairs(self) -> int:
+        return self.num_buckets // 2
+
+    @property
+    def slots_per_pair(self) -> int:          # main row width
+        return (2 + self.sbuckets) * self.bucket_slots
+
+    @property
+    def seg_slots(self) -> int:               # slots per segment
+        return (1 + self.sbuckets) * self.bucket_slots
+
+    @property
+    def ext_slots(self) -> int:               # slots per extension group
+        return self.sbuckets * self.bucket_slots * self.ext_groups
+
+    @property
+    def total_bits(self) -> int:
+        return self.slots_per_pair + self.ext_slots
+
+    @property
+    def ext_pool_pairs(self) -> int:
+        return max(1, int(np.ceil(self.num_pairs * self.ext_frac)))
+
+    @property
+    def n_cand(self) -> int:
+        return self.seg_slots + self.ext_slots
+
+    @property
+    def segment_bytes(self) -> int:
+        """Payload of one one-sided segment fetch (indicator + segment slots)."""
+        return INDICATOR_BYTES + self.seg_slots * SLOT_BYTES
+
+    @property
+    def ext_bytes(self) -> int:
+        return self.ext_slots * SLOT_BYTES
+
+    def grow(self, factor: int = 2) -> "ContinuityConfig":
+        return dataclasses.replace(self, num_buckets=self.num_buckets * factor)
+
+
+@functools.lru_cache(maxsize=None)
+def _probe_order(cfg: ContinuityConfig) -> np.ndarray:
+    """(2, n_cand) int32: slot ids in probe-priority order per home parity."""
+    bs, sp, seg = cfg.bucket_slots, cfg.slots_per_pair, cfg.seg_slots
+    even = list(range(0, seg))                       # B_even then SBuckets, L->R
+    odd = list(range(sp - 1, bs - 1, -1))            # B_odd then SBuckets, R->L
+    ext = list(range(sp, sp + cfg.ext_slots))        # extension last, both
+    return np.asarray([even + ext, odd + ext], dtype=np.int32)
+
+
+class ContinuityTable(NamedTuple):
+    """Functional table state. All arrays; geometry travels separately."""
+
+    keys: jnp.ndarray        # (P, SLOTS, KEY_LANES) uint32
+    vals: jnp.ndarray        # (P, SLOTS, VAL_LANES) uint32
+    indicator: jnp.ndarray   # (P,) uint32 — one valid bit per slot (+ext bits)
+    ext_keys: jnp.ndarray    # (PE, EXT_SLOTS, KEY_LANES) uint32
+    ext_vals: jnp.ndarray    # (PE, EXT_SLOTS, VAL_LANES) uint32
+    ext_map: jnp.ndarray     # (P,) int32 — pair -> ext group index, -1 = none
+    ext_count: jnp.ndarray   # () int32 — allocated extension groups
+    count: jnp.ndarray       # () int32 — live items
+
+
+def create(cfg: ContinuityConfig) -> ContinuityTable:
+    P, S, E, PE = cfg.num_pairs, cfg.slots_per_pair, cfg.ext_slots, cfg.ext_pool_pairs
+    return ContinuityTable(
+        keys=jnp.zeros((P, S, KEY_LANES), U32),
+        vals=jnp.zeros((P, S, VAL_LANES), U32),
+        indicator=jnp.zeros((P,), U32),
+        ext_keys=jnp.zeros((PE, E, KEY_LANES), U32),
+        ext_vals=jnp.zeros((PE, E, VAL_LANES), U32),
+        ext_map=jnp.full((P,), -1, I32),
+        ext_count=jnp.zeros((), I32),
+        count=jnp.zeros((), I32),
+    )
+
+
+def capacity(cfg: ContinuityConfig, table: ContinuityTable) -> jnp.ndarray:
+    """Total allocated storage units (paper's load-factor denominator)."""
+    return (cfg.num_pairs * cfg.slots_per_pair
+            + table.ext_count * cfg.ext_slots).astype(jnp.float32)
+
+
+def load_factor(cfg: ContinuityConfig, table: ContinuityTable) -> jnp.ndarray:
+    return table.count.astype(jnp.float32) / capacity(cfg, table)
+
+
+def locate(cfg: ContinuityConfig, keys: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Eq. (1): home bucket number -> (pair index, parity)."""
+    h = hash128(keys)
+    bno = h % U32(cfg.num_buckets)
+    return (bno >> U32(1)).astype(I32), (bno & U32(1)).astype(I32)
+
+
+# ---------------------------------------------------------------------------
+# candidate gathering — the "one contiguous segment fetch" primitive
+# ---------------------------------------------------------------------------
+
+def _gather_candidates(cfg: ContinuityConfig, table: ContinuityTable,
+                       pair: jnp.ndarray, parity: jnp.ndarray,
+                       ext_allowed: jnp.ndarray):
+    """Fetch each key's candidate slots in probe order.
+
+    Returns (cand_ids, cand_keys, cand_vals, valid, empty_ok, is_ext, has_ext):
+      cand_ids  (B, C) int32   slot ids (>= SLOTS means extension slot)
+      cand_keys (B, C, KL)     key lanes per candidate
+      cand_vals (B, C, VL)
+      valid     (B, C) bool    indicator bit set AND slot addressable
+      slot_ok   (B, C) bool    slot addressable (main always; ext iff allowed)
+    """
+    probe = jnp.asarray(_probe_order(cfg))           # (2, C)
+    cand = probe[parity]                             # (B, C)
+    S = cfg.slots_per_pair
+    is_ext = cand >= S
+
+    ind = table.indicator[pair]                      # (B,)
+    bits = (ind[:, None] >> cand.astype(U32)) & U32(1)
+
+    main_ids = jnp.minimum(cand, S - 1)
+    mkeys = table.keys[pair[:, None], main_ids]      # (B, C, KL)
+    mvals = table.vals[pair[:, None], main_ids]
+
+    eidx = table.ext_map[pair]                       # (B,)
+    has_ext = eidx >= 0
+    safe_e = jnp.maximum(eidx, 0)
+    ext_ids = jnp.maximum(cand - S, 0)
+    ekeys = table.ext_keys[safe_e[:, None], ext_ids]
+    evals = table.ext_vals[safe_e[:, None], ext_ids]
+
+    cand_keys = jnp.where(is_ext[..., None], ekeys, mkeys)
+    cand_vals = jnp.where(is_ext[..., None], evals, mvals)
+
+    slot_ok = jnp.where(is_ext, (has_ext | ext_allowed)[:, None], True)
+    valid = (bits == 1) & slot_ok & jnp.where(is_ext, has_ext[:, None], True)
+    return cand, cand_keys, cand_vals, valid, slot_ok, is_ext, has_ext
+
+
+# ---------------------------------------------------------------------------
+# client read path — single one-sided fetch (paper §III-B)
+# ---------------------------------------------------------------------------
+
+class LookupResult(NamedTuple):
+    found: jnp.ndarray   # (B,) bool
+    values: jnp.ndarray  # (B, VAL_LANES) uint32
+    slot: jnp.ndarray    # (B,) int32 — matched slot id (or -1)
+    pair: jnp.ndarray    # (B,) int32
+    reads: jnp.ndarray   # (B,) int32 — contiguous fetches this lookup needed
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def lookup(cfg: ContinuityConfig, table: ContinuityTable,
+           keys: jnp.ndarray) -> LookupResult:
+    """Batched client read: ONE contiguous segment fetch per key (+1 iff the
+    pair has added SBuckets and the main segment missed)."""
+    keys = jnp.asarray(keys, U32).reshape(-1, KEY_LANES)
+    pair, parity = locate(cfg, keys)
+    f = jnp.zeros((keys.shape[0],), jnp.bool_)
+    cand, ckeys, cvals, valid, _, is_ext, has_ext = _gather_candidates(
+        cfg, table, pair, parity, ext_allowed=f)
+    match = valid & jnp.all(ckeys == keys[:, None, :], axis=-1)
+    found = jnp.any(match, axis=-1)
+    first = jnp.argmax(match, axis=-1)                       # probe-priority
+    slot = jnp.where(found, jnp.take_along_axis(cand, first[:, None], 1)[:, 0], -1)
+    values = jnp.take_along_axis(cvals, first[:, None, None], 1)[:, 0]
+    values = jnp.where(found[:, None], values, 0)
+    found_main = jnp.any(match & ~is_ext, axis=-1)
+    reads = 1 + (has_ext & ~found_main).astype(I32)
+    return LookupResult(found, values, slot, pair, reads)
+
+
+def read_counters(cfg: ContinuityConfig, res: LookupResult) -> pmem.PMCounters:
+    """Client-side RDMA accounting for a lookup batch."""
+    extra = jnp.sum(res.reads - 1)
+    n = res.reads.shape[0]
+    return pmem.PMCounters.zero().add(
+        rdma_reads=jnp.sum(res.reads),
+        bytes_fetched=n * cfg.segment_bytes + extra * cfg.ext_bytes,
+        ops=n)
+
+
+# ---------------------------------------------------------------------------
+# server write path — log-free failure atomicity (paper §III-C)
+# ---------------------------------------------------------------------------
+# Each op is split into explicit phases so tests can crash between them:
+#   phase 1: write slot payload (key+value)        — PM write #1
+#   phase 2: commit indicator with ONE atomic store — PM write #2
+# A crash after phase 1 leaves the bit clear -> the partial write is invisible.
+
+def _scatter_payload(table: ContinuityTable, ok, pair, slot_id, ext_idx,
+                     key, val, slots_per_pair) -> ContinuityTable:
+    """Phase 1: payload store (dropped when not ok via OOB index)."""
+    S = slots_per_pair
+    is_ext = slot_id >= S
+    m_pair = jnp.where(ok & ~is_ext, pair, jnp.iinfo(I32).max)
+    m_slot = jnp.minimum(slot_id, S - 1)
+    keys = table.keys.at[m_pair, m_slot].set(key, mode="drop")
+    vals = table.vals.at[m_pair, m_slot].set(val, mode="drop")
+    e_idx = jnp.where(ok & is_ext, ext_idx, jnp.iinfo(I32).max)
+    e_slot = jnp.maximum(slot_id - S, 0)
+    ekeys = table.ext_keys.at[e_idx, e_slot].set(key, mode="drop")
+    evals = table.ext_vals.at[e_idx, e_slot].set(val, mode="drop")
+    return table._replace(keys=keys, vals=vals, ext_keys=ekeys, ext_vals=evals)
+
+
+def _commit_indicator(table: ContinuityTable, ok, pair, new_word) -> ContinuityTable:
+    """Phase 2: ONE atomic word store commits the operation."""
+    m_pair = jnp.where(ok, pair, jnp.iinfo(I32).max)
+    return table._replace(indicator=table.indicator.at[m_pair].set(new_word, mode="drop"))
+
+
+def _find_insert_slot(cfg, table, key):
+    """Probe for the first empty candidate slot of ``key`` (paper's directional
+    scan), allowing extension slots if allocated or allocatable."""
+    key = key[None]
+    pair, parity = locate(cfg, key)
+    if cfg.ext_frac > 0:
+        can_alloc = (table.ext_count < cfg.ext_pool_pairs)[None]
+    else:
+        can_alloc = jnp.zeros((1,), jnp.bool_)
+    cand, _, _, valid, slot_ok, is_ext, has_ext = _gather_candidates(
+        cfg, table, pair, parity, ext_allowed=can_alloc)
+    empty = (~valid) & slot_ok
+    ok = jnp.any(empty, axis=-1)[0]
+    first = jnp.argmax(empty, axis=-1)
+    slot = jnp.take_along_axis(cand, first[:, None], 1)[0, 0]
+    need_alloc = ok & (slot >= cfg.slots_per_pair) & ~has_ext[0]
+    ext_idx = jnp.where(need_alloc, table.ext_count, jnp.maximum(table.ext_map[pair[0]], 0))
+    return pair[0], slot, ok, need_alloc, ext_idx
+
+
+def _insert_one(cfg, table: ContinuityTable, key, val):
+    pair, slot, ok, need_alloc, ext_idx = _find_insert_slot(cfg, table, key)
+    # extension allocation is metadata (rebuilt on recovery from ext_map scan)
+    ext_map = table.ext_map.at[jnp.where(need_alloc, pair, jnp.iinfo(I32).max)].set(
+        ext_idx, mode="drop")
+    table = table._replace(ext_map=ext_map,
+                           ext_count=table.ext_count + need_alloc.astype(I32))
+    table = _scatter_payload(table, ok, pair, slot, ext_idx, key, val,
+                             cfg.slots_per_pair)
+    new_word = table.indicator[pair] | jnp.where(ok, U32(1) << slot.astype(U32), U32(0))
+    table = _commit_indicator(table, ok, pair, new_word)
+    return table._replace(count=table.count + ok.astype(I32)), ok
+
+
+def _delete_one(cfg, table: ContinuityTable, key):
+    res = lookup(cfg, table, key[None])
+    ok, pair, slot = res.found[0], res.pair[0], res.slot[0]
+    safe = jnp.maximum(slot, 0).astype(U32)
+    new_word = table.indicator[pair] & ~jnp.where(ok, U32(1) << safe, U32(0))
+    table = _commit_indicator(table, ok, pair, new_word)
+    return table._replace(count=table.count - ok.astype(I32)), ok
+
+
+def _update_one(cfg, table: ContinuityTable, key, val):
+    """Out-of-place update: both bit-flips land in ONE atomic indicator store."""
+    res = lookup(cfg, table, key[None])
+    found, pair, old_slot = res.found[0], res.pair[0], res.slot[0]
+    _, parity = locate(cfg, key[None])
+    no = jnp.zeros((1,), jnp.bool_)
+    cand, _, _, valid, slot_ok, _, _ = _gather_candidates(
+        cfg, table, pair[None], parity, ext_allowed=no)
+    empty = (~valid) & slot_ok
+    has_empty = jnp.any(empty, axis=-1)[0]
+    first = jnp.argmax(empty, axis=-1)
+    new_slot = jnp.take_along_axis(cand, first[:, None], 1)[0, 0]
+    ok = found & has_empty
+    ext_idx = jnp.maximum(table.ext_map[pair], 0)
+    table = _scatter_payload(table, ok, pair, new_slot, ext_idx, key, val,
+                             cfg.slots_per_pair)
+    flip = (U32(1) << jnp.maximum(old_slot, 0).astype(U32)) | (U32(1) << new_slot.astype(U32))
+    new_word = table.indicator[pair] ^ jnp.where(ok, flip, U32(0))
+    table = _commit_indicator(table, ok, pair, new_word)
+    return table, ok
+
+
+def _scan_op(cfg, one_fn, pm_per_op):
+    def step(carry, kv):
+        table, ctr = carry
+        table, ok = one_fn(cfg, table, *kv)
+        ctr = ctr.add(pm_writes=jnp.where(ok, pm_per_op, 0), ops=1)
+        return (table, ctr), ok
+    return step
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def insert(cfg: ContinuityConfig, table: ContinuityTable, keys, vals):
+    """Server-side batched insert (batch-order deterministic). 2 PM writes/op."""
+    keys = jnp.asarray(keys, U32).reshape(-1, KEY_LANES)
+    vals = jnp.asarray(vals, U32).reshape(-1, VAL_LANES)
+    (table, ctr), ok = jax.lax.scan(
+        _scan_op(cfg, _insert_one, 2), (table, pmem.PMCounters.zero()), (keys, vals))
+    return table, ok, ctr
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def delete(cfg: ContinuityConfig, table: ContinuityTable, keys):
+    """Server-side batched delete. 1 PM write/op (indicator bit clear)."""
+    keys = jnp.asarray(keys, U32).reshape(-1, KEY_LANES)
+    (table, ctr), ok = jax.lax.scan(
+        _scan_op(cfg, _delete_one, 1), (table, pmem.PMCounters.zero()), (keys,))
+    return table, ok, ctr
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def update(cfg: ContinuityConfig, table: ContinuityTable, keys, vals):
+    """Server-side batched out-of-place update. 2 PM writes/op."""
+    keys = jnp.asarray(keys, U32).reshape(-1, KEY_LANES)
+    vals = jnp.asarray(vals, U32).reshape(-1, VAL_LANES)
+    (table, ctr), ok = jax.lax.scan(
+        _scan_op(cfg, _update_one, 2), (table, pmem.PMCounters.zero()), (keys, vals))
+    return table, ok, ctr
+
+
+# ---------------------------------------------------------------------------
+# parallel (conflict-resolved) insert — used by the serving page table, where
+# a batch touches mostly-distinct pairs; duplicates past the first per pair
+# are reported for retry (batch-order priority == lock order).
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnums=0)
+def insert_parallel(cfg: ContinuityConfig, table: ContinuityTable, keys, vals,
+                    mask=None):
+    keys = jnp.asarray(keys, U32).reshape(-1, KEY_LANES)
+    vals = jnp.asarray(vals, U32).reshape(-1, VAL_LANES)
+    B = keys.shape[0]
+    active = jnp.ones((B,), jnp.bool_) if mask is None else jnp.asarray(mask)
+    pair, parity = locate(cfg, keys)
+    # first active occurrence per pair wins; later ones retry next batch
+    same = (pair[:, None] == pair[None, :]) & active[None, :]
+    earlier = jnp.tril(jnp.ones((B, B), jnp.bool_), k=-1)
+    dup = jnp.any(same & earlier, axis=-1)
+    go = active & ~dup
+
+    no = jnp.zeros((B,), jnp.bool_)
+    cand, _, _, valid, slot_ok, _, _ = _gather_candidates(
+        cfg, table, pair, parity, ext_allowed=no)
+    empty = (~valid) & slot_ok
+    ok = go & jnp.any(empty, axis=-1)
+    first = jnp.argmax(empty, axis=-1)
+    slot = jnp.take_along_axis(cand, first[:, None], 1)[:, 0]
+    ext_idx = jnp.maximum(table.ext_map[pair], 0)
+    table = _scatter_payload(table, ok, pair, slot, ext_idx, keys, vals,
+                             cfg.slots_per_pair)
+    okbit = jnp.where(ok, U32(1) << slot.astype(U32), U32(0))
+    word = table.indicator.at[jnp.where(ok, pair, jnp.iinfo(I32).max)].set(
+        table.indicator[pair] | okbit, mode="drop")
+    table = table._replace(indicator=word,
+                           count=table.count + jnp.sum(ok).astype(I32))
+    retry = active & ~ok
+    return table, ok, retry
+
+
+# ---------------------------------------------------------------------------
+# resizing (paper §III-C "Log-free Resizing") + recovery
+# ---------------------------------------------------------------------------
+
+def extract_items(cfg: ContinuityConfig, table: ContinuityTable):
+    """All live (key, value) slots as flat arrays + validity mask (jittable)."""
+    P, S, E = cfg.num_pairs, cfg.slots_per_pair, cfg.ext_slots
+    bits = (table.indicator[:, None] >> jnp.arange(S, dtype=U32)[None]) & U32(1)
+    mkeys = table.keys.reshape(P * S, KEY_LANES)
+    mvals = table.vals.reshape(P * S, VAL_LANES)
+    mmask = (bits == 1).reshape(P * S)
+    ebits = (table.indicator[:, None] >> (S + jnp.arange(E, dtype=U32))[None]) & U32(1)
+    has = table.ext_map >= 0
+    PE = cfg.ext_pool_pairs
+    # scatter pair-order ext validity into pool order
+    pool_mask = jnp.zeros((PE, E), jnp.bool_).at[
+        jnp.where(has, table.ext_map, PE), :].set(
+        (ebits == 1) & has[:, None], mode="drop")
+    ekeys = table.ext_keys.reshape(PE * E, KEY_LANES)
+    evals = table.ext_vals.reshape(PE * E, VAL_LANES)
+    keys = jnp.concatenate([mkeys, ekeys], 0)
+    vals = jnp.concatenate([mvals, evals], 0)
+    mask = jnp.concatenate([mmask, pool_mask.reshape(PE * E)], 0)
+    return keys, vals, mask
+
+
+def resize(cfg: ContinuityConfig, table: ContinuityTable, factor: int = 2):
+    """Rehash into a table with ``factor``x buckets (fast batched path).
+
+    The crash-faithful per-item path (insert-to-new THEN delete-from-old, two
+    indicator commits in that order) is ``resize_stepwise``; this batched path
+    produces the same final state and is what production resizing uses.
+    """
+    new_cfg = cfg.grow(factor)
+    new = create(new_cfg)
+    keys, vals, mask = extract_items(cfg, table)
+
+    def step(carry, kv):
+        t, = carry
+        k, v, m = kv
+        def do(t):
+            t2, _ = _insert_one(new_cfg, t, k, v)
+            return t2
+        t = jax.lax.cond(m, do, lambda t: t, t)
+        return (t,), None
+
+    (new,), _ = jax.lax.scan(step, (new,), (keys, vals, mask))
+    return new_cfg, new
+
+
+def resize_stepwise(cfg, table, new_cfg, new_table, max_items: int):
+    """Move up to ``max_items`` live items old->new, one at a time, with the
+    paper's ordering: insert into new, commit, then delete from old. Returns
+    (old, new, moved). Used by crash-recovery tests (host loop)."""
+    moved = 0
+    for _ in range(max_items):
+        keys, vals, mask = extract_items(cfg, table)
+        idx = int(jnp.argmax(mask))
+        if not bool(mask[idx]):
+            break
+        k, v = keys[idx], vals[idx]
+        new_table, ok = _insert_one(new_cfg, new_table, k, v)
+        table, _ = _delete_one(cfg, table, k)
+        moved += int(ok)
+    return table, new_table, moved
+
+
+def recover(cfg, old_table, new_cfg, new_table):
+    """Paper §III-C recovery: after restart mid-resize, for each item still in
+    the old table, delete it if it already reached the new table, otherwise
+    move it (insert-to-new then delete-from-old); finishes the resize."""
+    keys, vals, mask = extract_items(cfg, old_table)
+    kn, vn, mn = np.asarray(keys), np.asarray(vals), np.asarray(mask)
+    for i in np.nonzero(mn)[0]:
+        k = jnp.asarray(kn[i])
+        v = jnp.asarray(vn[i])
+        res = lookup(new_cfg, new_table, k[None])
+        if not bool(res.found[0]):
+            new_table, _ = _insert_one(new_cfg, new_table, k, v)
+        old_table, _ = _delete_one(cfg, old_table, k)
+    return old_table, new_table
+
+
+def items_host(cfg, table):
+    """Live items as a python dict {key_bytes: value_bytes} (tests only)."""
+    keys, vals, mask = extract_items(cfg, table)
+    kn, vn, mn = np.asarray(keys), np.asarray(vals), np.asarray(mask)
+    out = {}
+    for i in np.nonzero(mn)[0]:
+        out[kn[i].tobytes()] = vn[i].tobytes()
+    return out

@@ -1,0 +1,74 @@
+"""Vectorized hash functions over 128-bit keys represented as (..., 4) uint32 lanes.
+
+JAX's default (no-x64) mode has no uint64, so all mixing is done in uint32
+arithmetic (murmur3-style fmix32 + boost-style lane combining). These are the
+hash functions used by every scheme in ``repro.core`` so that bucket placement
+is identical across continuity / level / P-FaRM-KV comparisons.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+U32 = jnp.uint32
+
+_C1 = U32(0xCC9E2D51)
+_C2 = U32(0x1B873593)
+_FMIX1 = U32(0x85EBCA6B)
+_FMIX2 = U32(0xC2B2AE35)
+_GOLDEN = U32(0x9E3779B9)
+
+
+def _rotl32(x: jnp.ndarray, r: int) -> jnp.ndarray:
+    return (x << U32(r)) | (x >> U32(32 - r))
+
+
+def fmix32(h: jnp.ndarray) -> jnp.ndarray:
+    """murmur3 finalizer: full-avalanche 32-bit mixer."""
+    h = h.astype(U32)
+    h ^= h >> U32(16)
+    h *= _FMIX1
+    h ^= h >> U32(13)
+    h *= _FMIX2
+    h ^= h >> U32(16)
+    return h
+
+
+def hash128(key: jnp.ndarray, seed: int = 0) -> jnp.ndarray:
+    """Hash (..., 4) uint32 key lanes -> (...,) uint32, murmur3-32 style.
+
+    Used for home-bucket placement (Eq. (1) of the paper: ``hash(k) % N``).
+    """
+    assert key.shape[-1] == 4, key.shape
+    k = key.astype(U32)
+    h = U32(seed) ^ U32(16)  # len = 16 bytes
+    for i in range(4):
+        lane = k[..., i]
+        lane = lane * _C1
+        lane = _rotl32(lane, 15)
+        lane = lane * _C2
+        h = h ^ lane
+        h = _rotl32(h, 13)
+        h = h * U32(5) + U32(0xE6546B64)
+    return fmix32(h)
+
+
+def hash128_2(key: jnp.ndarray) -> jnp.ndarray:
+    """Independent second hash (for two-hash-function schemes, e.g. level hashing)."""
+    return hash128(key, seed=0x5BD1E995)
+
+
+def mix_pair(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Combine two uint32 words into one well-mixed uint32 (content hashing)."""
+    a = a.astype(U32)
+    b = b.astype(U32)
+    return fmix32(a ^ (b + _GOLDEN + (a << U32(6)) + (a >> U32(2))))
+
+
+def fold_u32(words: jnp.ndarray) -> jnp.ndarray:
+    """Fold (..., L) uint32 words into (...,) uint32 (e.g. token-prefix hashing
+    for content-addressed KV-cache pages)."""
+    h = jnp.full(words.shape[:-1], U32(0x811C9DC5), dtype=U32)
+    for i in range(words.shape[-1]):
+        h = mix_pair(h, words[..., i])
+    return h

@@ -1,0 +1,299 @@
+"""Level hashing baseline (Zuo, Hua, Wu — OSDI'18), as used by the paper's
+evaluation (its PM-friendly competitor), with RDMA read accounting.
+
+Structure: a top level of N buckets and a bottom level of N/2 buckets; two
+hash functions; a key's four candidate buckets are top[h1], top[h2],
+bottom[h1/2], bottom[h2/2]. Each bucket has ``bucket_slots`` slots and a
+per-bucket token byte (one valid bit per slot, 8-byte-atomic commit).
+
+RDMA behaviour (paper §II-C2): the four candidate buckets are NON-contiguous,
+so a remote search costs up to four one-sided reads (negative searches always
+scan all distinct candidates) — this is the access amplification the paper's
+continuity layout removes.
+
+PM-write behaviour (paper Table I): insert 2 (+2 on the rare one-movement
+path => 2–2.01 avg), delete 1, update 2 when an empty slot exists in the same
+bucket (log-free out-of-place) else 4 with logging (paper reports 2–5).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import pmem
+from repro.core.continuity import KEY_LANES, VAL_LANES, SLOT_BYTES
+from repro.core.hashfn import hash128, hash128_2
+
+U32 = jnp.uint32
+I32 = jnp.int32
+U8 = jnp.uint8
+
+
+@dataclasses.dataclass(frozen=True)
+class LevelConfig:
+    num_top: int                 # top-level buckets (bottom = num_top // 2)
+    bucket_slots: int = 4
+
+    def __post_init__(self):
+        assert self.num_top % 2 == 0 and self.bucket_slots <= 8
+
+    @property
+    def num_bottom(self) -> int:
+        return self.num_top // 2
+
+    @property
+    def total_slots(self) -> int:
+        return (self.num_top + self.num_bottom) * self.bucket_slots
+
+    @property
+    def bucket_bytes(self) -> int:
+        return self.bucket_slots * SLOT_BYTES + 8  # slots + token word
+
+    def grow(self, factor: int = 2) -> "LevelConfig":
+        return dataclasses.replace(self, num_top=self.num_top * factor)
+
+
+class LevelTable(NamedTuple):
+    tkeys: jnp.ndarray  # (NT, bs, KL) uint32
+    tvals: jnp.ndarray  # (NT, bs, VL)
+    ttok: jnp.ndarray   # (NT,) uint8 — valid bits
+    bkeys: jnp.ndarray  # (NB, bs, KL)
+    bvals: jnp.ndarray  # (NB, bs, VL)
+    btok: jnp.ndarray   # (NB,) uint8
+    count: jnp.ndarray  # () int32
+
+
+def create(cfg: LevelConfig) -> LevelTable:
+    NT, NB, bs = cfg.num_top, cfg.num_bottom, cfg.bucket_slots
+    return LevelTable(
+        tkeys=jnp.zeros((NT, bs, KEY_LANES), U32),
+        tvals=jnp.zeros((NT, bs, VAL_LANES), U32),
+        ttok=jnp.zeros((NT,), U8),
+        bkeys=jnp.zeros((NB, bs, KEY_LANES), U32),
+        bvals=jnp.zeros((NB, bs, VAL_LANES), U32),
+        btok=jnp.zeros((NB,), U8),
+        count=jnp.zeros((), I32),
+    )
+
+
+def load_factor(cfg: LevelConfig, t: LevelTable) -> jnp.ndarray:
+    return t.count.astype(jnp.float32) / cfg.total_slots
+
+
+def _cand_buckets(cfg: LevelConfig, keys: jnp.ndarray):
+    """(B, 4) candidate bucket ids: [top h1, top h2, bottom h1/2, bottom h2/2]
+    plus which level each lives in (True = top)."""
+    h1 = hash128(keys) % U32(cfg.num_top)
+    h2 = hash128_2(keys) % U32(cfg.num_top)
+    t1, t2 = h1.astype(I32), h2.astype(I32)
+    b1, b2 = t1 // 2, t2 // 2
+    return jnp.stack([t1, t2, b1, b2], -1)
+
+
+def _gather4(cfg, t: LevelTable, cand):
+    """Fetch the four candidate buckets: (B,4,bs,·) keys/vals + (B,4,bs) valid."""
+    tk = t.tkeys[cand[:, :2]]            # (B,2,bs,KL)
+    tv = t.tvals[cand[:, :2]]
+    tt = t.ttok[cand[:, :2]]             # (B,2)
+    bk = t.bkeys[cand[:, 2:]]
+    bv = t.bvals[cand[:, 2:]]
+    bt = t.btok[cand[:, 2:]]
+    keys4 = jnp.concatenate([tk, bk], 1)
+    vals4 = jnp.concatenate([tv, bv], 1)
+    tok4 = jnp.concatenate([tt, bt], 1)  # (B,4)
+    bits = (tok4[..., None] >> jnp.arange(cfg.bucket_slots, dtype=U8)) & U8(1)
+    return keys4, vals4, bits == 1
+
+
+class LookupResult(NamedTuple):
+    found: jnp.ndarray
+    values: jnp.ndarray
+    where: jnp.ndarray   # (B, 2) int32 (bucket#0-3, slot) or -1
+    reads: jnp.ndarray   # contiguous fetches needed (distinct buckets probed)
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def lookup(cfg: LevelConfig, t: LevelTable, keys) -> LookupResult:
+    keys = jnp.asarray(keys, U32).reshape(-1, KEY_LANES)
+    cand = _cand_buckets(cfg, keys)
+    k4, v4, valid = _gather4(cfg, t, cand)
+    match = valid & jnp.all(k4 == keys[:, None, None, :], -1)    # (B,4,bs)
+    mflat = match.reshape(match.shape[0], -1)
+    found = jnp.any(mflat, -1)
+    first = jnp.argmax(mflat, -1)
+    bs = cfg.bucket_slots
+    bidx, slot = first // bs, first % bs
+    values = jnp.take_along_axis(
+        v4.reshape(v4.shape[0], -1, VAL_LANES), first[:, None, None], 1)[:, 0]
+    values = jnp.where(found[:, None], values, 0)
+    # distinct-bucket fetch count: probes proceed t1, t2, b1, b2 skipping dups
+    distinct = jnp.stack([
+        jnp.ones_like(found),
+        cand[:, 1] != cand[:, 0],
+        jnp.ones_like(found),
+        cand[:, 3] != cand[:, 2]], -1).astype(I32)               # (B,4)
+    upto = jnp.where(found, bidx, 3)
+    mask = jnp.arange(4)[None, :] <= upto[:, None]
+    reads = jnp.sum(distinct * mask, -1)
+    where = jnp.where(found[:, None], jnp.stack([bidx, slot], -1), -1)
+    return LookupResult(found, values, where, reads)
+
+
+def read_counters(cfg: LevelConfig, res: LookupResult) -> pmem.PMCounters:
+    return pmem.PMCounters.zero().add(
+        rdma_reads=jnp.sum(res.reads),
+        bytes_fetched=jnp.sum(res.reads) * cfg.bucket_bytes,
+        ops=res.reads.shape[0])
+
+
+# -- server-side ops (scan-serialized like the other schemes) ----------------
+
+def _bucket_arrays(t, level_top):
+    return jax.lax.cond(
+        level_top,
+        lambda: (t.tkeys, t.tvals),
+        lambda: (t.bkeys, t.bvals))
+
+
+def _write_slot(t: LevelTable, is_top, bucket, slot, key, val, ok):
+    drop = jnp.iinfo(I32).max
+    tb = jnp.where(ok & is_top, bucket, drop)
+    bb = jnp.where(ok & ~is_top, bucket, drop)
+    return t._replace(
+        tkeys=t.tkeys.at[tb, slot].set(key, mode="drop"),
+        tvals=t.tvals.at[tb, slot].set(val, mode="drop"),
+        bkeys=t.bkeys.at[bb, slot].set(key, mode="drop"),
+        bvals=t.bvals.at[bb, slot].set(val, mode="drop"))
+
+
+def _commit_tok(t: LevelTable, is_top, bucket, new_tok, ok):
+    drop = jnp.iinfo(I32).max
+    tb = jnp.where(ok & is_top, bucket, drop)
+    bb = jnp.where(ok & ~is_top, bucket, drop)
+    return t._replace(ttok=t.ttok.at[tb].set(new_tok, mode="drop"),
+                      btok=t.btok.at[bb].set(new_tok, mode="drop"))
+
+
+def _insert_one(cfg, t: LevelTable, key, val):
+    bs = cfg.bucket_slots
+    cand = _cand_buckets(cfg, key[None])[0]              # (4,)
+    toks = jnp.stack([t.ttok[cand[0]], t.ttok[cand[1]],
+                      t.btok[cand[2]], t.btok[cand[3]]])
+    bits = (toks[:, None] >> jnp.arange(bs, dtype=U8)) & U8(1)
+    empty = bits == 0                                     # (4,bs)
+    has = jnp.any(empty, -1)
+    bsel = jnp.argmax(has)                                # first bucket w/ empty
+    ok_plain = jnp.any(has)
+    slot = jnp.argmax(empty[bsel])
+    is_top = bsel < 2
+    bucket = cand[bsel]
+
+    # one-movement path: top[h1]'s slot-0 item moves to ITS alternate top
+    # bucket if that one has space (counts +2 PM writes; rare in practice)
+    def try_move(t):
+        mkey = t.tkeys[cand[0], 0]
+        mval = t.tvals[cand[0], 0]
+        a1 = (hash128(mkey) % U32(cfg.num_top)).astype(I32)
+        a2 = (hash128_2(mkey) % U32(cfg.num_top)).astype(I32)
+        alt = jnp.where(a1 == cand[0], a2, a1)
+        atok = t.ttok[alt]
+        abits = (atok >> jnp.arange(bs, dtype=U8)) & U8(1)   # (bs,)
+        can = jnp.any(abits == 0) & (alt != cand[0])
+        aslot = jnp.argmax(abits == 0)
+        tt = jnp.ones((), jnp.bool_)
+        t2 = _write_slot(t, tt, alt, aslot, mkey, mval, can)
+        t2 = _commit_tok(t2, tt, alt, atok | (U8(1) << aslot.astype(U8)), can)
+        # free the source slot, then place the new item there
+        src_tok = t2.ttok[cand[0]] & ~U8(1)
+        t2 = _write_slot(t2, tt, cand[0], jnp.zeros((), I32), key, val, can)
+        t2 = _commit_tok(t2, tt, cand[0], src_tok | U8(1), can)
+        return t2, can
+
+    def plain(t):
+        tok = jnp.where(is_top, t.ttok[bucket], t.btok[bucket]).astype(U8)
+        t2 = _write_slot(t, is_top, bucket, slot, key, val, ok_plain)
+        t2 = _commit_tok(t2, is_top, bucket,
+                         tok | (U8(1) << slot.astype(U8)), ok_plain)
+        return t2, ok_plain
+
+    t2, ok = jax.lax.cond(ok_plain, plain, try_move, t)
+    moved = ~ok_plain & ok
+    pm = jnp.where(ok, jnp.where(moved, 4, 2), 0).astype(I32)
+    return t2._replace(count=t2.count + ok.astype(I32)), ok, pm
+
+
+def _delete_one(cfg, t: LevelTable, key):
+    res = lookup(cfg, t, key[None])
+    ok = res.found[0]
+    bidx, slot = res.where[0, 0], res.where[0, 1]
+    cand = _cand_buckets(cfg, key[None])[0]
+    bucket = cand[jnp.maximum(bidx, 0)]
+    is_top = bidx < 2
+    tok = jnp.where(is_top, t.ttok[bucket], t.btok[bucket]).astype(U8)
+    new_tok = tok & ~(U8(1) << jnp.maximum(slot, 0).astype(U8))
+    t2 = _commit_tok(t, is_top, bucket, new_tok, ok)
+    return t2._replace(count=t2.count - ok.astype(I32)), ok, jnp.where(ok, 1, 0).astype(I32)
+
+
+def _update_one(cfg, t: LevelTable, key, val):
+    bs = cfg.bucket_slots
+    res = lookup(cfg, t, key[None])
+    found = res.found[0]
+    bidx, slot = res.where[0, 0], res.where[0, 1]
+    cand = _cand_buckets(cfg, key[None])[0]
+    bucket = cand[jnp.maximum(bidx, 0)]
+    is_top = bidx < 2
+    tok = jnp.where(is_top, t.ttok[bucket], t.btok[bucket]).astype(U8)
+    bits = (tok >> jnp.arange(bs, dtype=U8)) & U8(1)         # (bs,)
+    has_empty = jnp.any(bits == 0)
+    eslot = jnp.argmax(bits == 0)
+    # log-free out-of-place within the same bucket (2 PM writes)
+    ok_free = found & has_empty
+    t2 = _write_slot(t, is_top, bucket, eslot, key, val, ok_free)
+    flip = (U8(1) << eslot.astype(U8)) | (U8(1) << jnp.maximum(slot, 0).astype(U8))
+    t2 = _commit_tok(t2, is_top, bucket, tok ^ jnp.where(ok_free, flip, U8(0)), ok_free)
+    # logged in-place fallback (4 PM writes: log entry, item, commit, invalidate)
+    ok_log = found & ~has_empty
+    t2 = _write_slot(t2, is_top, bucket, slot, key, val, ok_log)
+    ok = ok_free | ok_log
+    pm = jnp.where(ok_free, 2, jnp.where(ok_log, 4, 0)).astype(I32)
+    return t2, ok, pm
+
+
+def _scan(cfg, fn):
+    def step(carry, kv):
+        t, ctr = carry
+        t, ok, pm = fn(cfg, t, *kv)
+        return (t, ctr.add(pm_writes=pm, ops=1)), ok
+    return step
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def insert(cfg, t, keys, vals):
+    keys = jnp.asarray(keys, U32).reshape(-1, KEY_LANES)
+    vals = jnp.asarray(vals, U32).reshape(-1, VAL_LANES)
+    (t, ctr), ok = jax.lax.scan(_scan(cfg, _insert_one),
+                                (t, pmem.PMCounters.zero()), (keys, vals))
+    return t, ok, ctr
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def delete(cfg, t, keys):
+    keys = jnp.asarray(keys, U32).reshape(-1, KEY_LANES)
+    (t, ctr), ok = jax.lax.scan(_scan(cfg, _delete_one),
+                                (t, pmem.PMCounters.zero()), (keys,))
+    return t, ok, ctr
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def update(cfg, t, keys, vals):
+    keys = jnp.asarray(keys, U32).reshape(-1, KEY_LANES)
+    vals = jnp.asarray(vals, U32).reshape(-1, VAL_LANES)
+    (t, ctr), ok = jax.lax.scan(_scan(cfg, _update_one),
+                                (t, pmem.PMCounters.zero()), (keys, vals))
+    return t, ok, ctr

@@ -1,0 +1,315 @@
+"""P-FaRM-KV baseline: FaRM-KV's chained associative hopscotch hashing
+(Dragojević et al., NSDI'14) converted to persistent memory via RECIPE
+(Lee et al., SOSP'19), as constructed by the paper's evaluation (§V-A).
+
+Structure: N buckets of ``bucket_slots`` slots; a key with home bucket ``h``
+may live in the CONTIGUOUS neighbourhood ``h .. h+H-1`` (hopscotch window) —
+one one-sided read fetches the whole window. When the window is full, an
+overflow block is chained to the home bucket (each chain hop = one extra
+one-sided read). Insertion uses at most ONE displacement (the paper's own
+optimization of P-FaRM-KV: "replacing the iteratively displacing key-value
+pairs in the original scheme with at most one movement").
+
+RECIPE conversion: clflush + mfence after each store, undo-logging around
+every multi-store write => every write op costs 5 PM writes (log entry,
+log header/commit, item store, token store, log invalidate) — paper Table I
+reports 5 / 5 / 5 for insert / update / delete.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import pmem
+from repro.core.continuity import KEY_LANES, VAL_LANES, SLOT_BYTES
+from repro.core.hashfn import hash128
+
+U32 = jnp.uint32
+I32 = jnp.int32
+U8 = jnp.uint8
+
+PM_WRITES_PER_OP = 5  # RECIPE logging discipline (paper Table I)
+
+
+@dataclasses.dataclass(frozen=True)
+class PFarmConfig:
+    num_buckets: int
+    bucket_slots: int = 4
+    window: int = 6                   # hopscotch neighbourhood H
+    overflow_frac: float = 0.25       # overflow pool size as frac of buckets
+    max_chain: int = 4                # chain hops followed per lookup
+
+    @property
+    def pool_blocks(self) -> int:
+        return max(2, int(self.num_buckets * self.overflow_frac))
+
+    @property
+    def total_slots(self) -> int:
+        return (self.num_buckets + self.pool_blocks) * self.bucket_slots
+
+    @property
+    def window_bytes(self) -> int:
+        return self.window * (self.bucket_slots * SLOT_BYTES + 8)
+
+    @property
+    def block_bytes(self) -> int:
+        return self.bucket_slots * SLOT_BYTES + 16  # slots + tok + next ptr
+
+
+class PFarmTable(NamedTuple):
+    keys: jnp.ndarray    # (N, bs, KL)
+    vals: jnp.ndarray    # (N, bs, VL)
+    tok: jnp.ndarray     # (N,) uint8
+    head: jnp.ndarray    # (N,) int32 — overflow chain head block (-1 none)
+    okeys: jnp.ndarray   # (PO, bs, KL) overflow pool
+    ovals: jnp.ndarray   # (PO, bs, VL)
+    otok: jnp.ndarray    # (PO,) uint8
+    onext: jnp.ndarray   # (PO,) int32
+    ocount: jnp.ndarray  # () int32 — allocated blocks
+    count: jnp.ndarray   # () int32
+
+
+def create(cfg: PFarmConfig) -> PFarmTable:
+    N, bs, PO = cfg.num_buckets, cfg.bucket_slots, cfg.pool_blocks
+    return PFarmTable(
+        keys=jnp.zeros((N, bs, KEY_LANES), U32),
+        vals=jnp.zeros((N, bs, VAL_LANES), U32),
+        tok=jnp.zeros((N,), U8),
+        head=jnp.full((N,), -1, I32),
+        okeys=jnp.zeros((PO, bs, KEY_LANES), U32),
+        ovals=jnp.zeros((PO, bs, VAL_LANES), U32),
+        otok=jnp.zeros((PO,), U8),
+        onext=jnp.full((PO,), -1, I32),
+        ocount=jnp.zeros((), I32),
+        count=jnp.zeros((), I32),
+    )
+
+
+def load_factor(cfg: PFarmConfig, t: PFarmTable) -> jnp.ndarray:
+    return t.count.astype(jnp.float32) / cfg.total_slots
+
+
+def _home(cfg, keys):
+    return (hash128(keys) % U32(cfg.num_buckets)).astype(I32)
+
+
+def _window_ids(cfg, home):
+    return (home[:, None] + jnp.arange(cfg.window, dtype=I32)[None]) % cfg.num_buckets
+
+
+class LookupResult(NamedTuple):
+    found: jnp.ndarray
+    values: jnp.ndarray
+    where: jnp.ndarray   # (B,3): [in_chain, bucket_or_block, slot]
+    reads: jnp.ndarray   # one-sided fetches (1 window + chain hops followed)
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def lookup(cfg: PFarmConfig, t: PFarmTable, keys) -> LookupResult:
+    keys = jnp.asarray(keys, U32).reshape(-1, KEY_LANES)
+    B = keys.shape[0]
+    home = _home(cfg, keys)
+    win = _window_ids(cfg, home)                       # (B,H)
+    k = t.keys[win]                                    # (B,H,bs,KL)
+    v = t.vals[win]
+    bits = (t.tok[win][..., None] >> jnp.arange(cfg.bucket_slots, dtype=U8)) & U8(1)
+    match = (bits == 1) & jnp.all(k == keys[:, None, None, :], -1)
+    mflat = match.reshape(B, -1)
+    found_w = jnp.any(mflat, -1)
+    first = jnp.argmax(mflat, -1)
+    bs = cfg.bucket_slots
+    values = jnp.take_along_axis(v.reshape(B, -1, VAL_LANES),
+                                 first[:, None, None], 1)[:, 0]
+    wbucket = jnp.take_along_axis(win, (first // bs)[:, None], 1)[:, 0]
+    wslot = first % bs
+
+    # chain walk (unrolled to max_chain): each hop is one more one-sided read
+    cur = t.head[home]
+    found = found_w
+    vals_out = jnp.where(found_w[:, None], values, 0)
+    where = jnp.where(found_w[:, None],
+                      jnp.stack([jnp.zeros_like(wbucket), wbucket, wslot], -1), -1)
+    hops = jnp.zeros((B,), I32)
+    for _ in range(cfg.max_chain):
+        live = (cur >= 0) & ~found
+        blk = jnp.maximum(cur, 0)
+        hops = hops + live.astype(I32)
+        bk = t.okeys[blk]                               # (B,bs,KL)
+        bv = t.ovals[blk]
+        bbits = (t.otok[blk][:, None] >> jnp.arange(bs, dtype=U8)) & U8(1)
+        bmatch = (bbits == 1) & jnp.all(bk == keys[:, None, :], -1) & live[:, None]
+        bfound = jnp.any(bmatch, -1)
+        bslot = jnp.argmax(bmatch, -1)
+        bvals = jnp.take_along_axis(bv, bslot[:, None, None], 1)[:, 0]
+        vals_out = jnp.where(bfound[:, None], bvals, vals_out)
+        where = jnp.where(bfound[:, None],
+                          jnp.stack([jnp.ones_like(blk), blk, bslot], -1), where)
+        found = found | bfound
+        cur = jnp.where(live & ~bfound, t.onext[blk], -1)
+    return LookupResult(found, vals_out, where, 1 + hops)
+
+
+def read_counters(cfg: PFarmConfig, res: LookupResult) -> pmem.PMCounters:
+    n = res.reads.shape[0]
+    return pmem.PMCounters.zero().add(
+        rdma_reads=jnp.sum(res.reads),
+        bytes_fetched=n * cfg.window_bytes
+        + jnp.sum(res.reads - 1) * cfg.block_bytes,
+        ops=n)
+
+
+# -- server-side ops ---------------------------------------------------------
+
+def _insert_one(cfg, t: PFarmTable, key, val):
+    bs, H = cfg.bucket_slots, cfg.window
+    home = _home(cfg, key[None])[0]
+    win = _window_ids(cfg, home[None])[0]              # (H,)
+    toks = t.tok[win]
+    bits = (toks[:, None] >> jnp.arange(bs, dtype=U8)) & U8(1)
+    empty = bits == 0                                  # (H,bs)
+    has = jnp.any(empty, -1)
+    bsel = jnp.argmax(has)
+    ok_plain = jnp.any(has)
+    bucket = win[bsel]
+    slot = jnp.argmax(empty[bsel])
+
+    def plain(t):
+        tok = t.tok[bucket]
+        t2 = t._replace(
+            keys=t.keys.at[bucket, slot].set(key),
+            vals=t.vals.at[bucket, slot].set(val),
+            tok=t.tok.at[bucket].set(tok | (U8(1) << slot.astype(U8))))
+        return t2, jnp.ones((), jnp.bool_)
+
+    def displace_or_chain(t):
+        # ONE displacement attempt: window slot whose item can legally move
+        # to a free slot in ITS OWN window frees space for the new key.
+        wkeys = t.keys[win].reshape(H * bs, KEY_LANES)
+        whome = _home(cfg, wkeys)                      # (H*bs,)
+        wwin = _window_ids(cfg, whome)                 # (H*bs, H)
+        wbits = (t.tok[wwin][..., None] >> jnp.arange(bs, dtype=U8)) & U8(1)
+        wempty = (wbits == 0).reshape(H * bs, H * bs)
+        can_move = jnp.any(wempty, -1)
+        msel = jnp.argmax(can_move)
+        movable = jnp.any(can_move)
+        src_b, src_s = win[msel // bs], msel % bs
+        dflat = jnp.argmax(wempty[msel])
+        dst_b = wwin[msel, dflat // bs]
+        dst_s = dflat % bs
+
+        def do_move(t):
+            mk, mv = t.keys[src_b, src_s], t.vals[src_b, src_s]
+            t2 = t._replace(
+                keys=t.keys.at[dst_b, dst_s].set(mk),
+                vals=t.vals.at[dst_b, dst_s].set(mv))
+            t2 = t2._replace(tok=t2.tok.at[dst_b].set(
+                t2.tok[dst_b] | (U8(1) << dst_s.astype(U8))))
+            t2 = t2._replace(tok=t2.tok.at[src_b].set(
+                t2.tok[src_b] & ~(U8(1) << src_s.astype(U8))))
+            t2 = t2._replace(
+                keys=t2.keys.at[src_b, src_s].set(key),
+                vals=t2.vals.at[src_b, src_s].set(val))
+            t2 = t2._replace(tok=t2.tok.at[src_b].set(
+                t2.tok[src_b] | (U8(1) << src_s.astype(U8))))
+            return t2, jnp.ones((), jnp.bool_)
+
+        def do_chain(t):
+            # append to head block if it has space, else allocate a new block
+            head = t.head[home]
+            hblk = jnp.maximum(head, 0)
+            hbits = (t.otok[hblk] >> jnp.arange(bs, dtype=U8)) & U8(1)  # (bs,)
+            head_has = (head >= 0) & jnp.any(hbits == 0)
+            hslot = jnp.argmax(hbits == 0)
+            can_alloc = t.ocount < cfg.pool_blocks
+            blk = jnp.where(head_has, hblk, t.ocount)
+            slot2 = jnp.where(head_has, hslot, 0)
+            ok = head_has | can_alloc
+            drop = jnp.iinfo(I32).max
+            wblk = jnp.where(ok, blk, drop)
+            t2 = t._replace(
+                okeys=t.okeys.at[wblk, slot2].set(key, mode="drop"),
+                ovals=t.ovals.at[wblk, slot2].set(val, mode="drop"),
+                otok=t.otok.at[wblk].set(
+                    t.otok[blk] | (U8(1) << slot2.astype(U8)), mode="drop"))
+            fresh = ok & ~head_has
+            t2 = t2._replace(
+                onext=t2.onext.at[jnp.where(fresh, blk, drop)].set(head, mode="drop"),
+                head=t2.head.at[jnp.where(fresh, home, drop)].set(blk, mode="drop"),
+                ocount=t2.ocount + fresh.astype(I32))
+            return t2, ok
+
+        return jax.lax.cond(movable, do_move, do_chain, t)
+
+    t2, ok = jax.lax.cond(ok_plain, plain, displace_or_chain, t)
+    pm = jnp.where(ok, PM_WRITES_PER_OP, 0).astype(I32)
+    return t2._replace(count=t2.count + ok.astype(I32)), ok, pm
+
+
+def _delete_one(cfg, t: PFarmTable, key):
+    res = lookup(cfg, t, key[None])
+    ok = res.found[0]
+    in_chain, where, slot = res.where[0, 0], res.where[0, 1], res.where[0, 2]
+    drop = jnp.iinfo(I32).max
+    mb = jnp.where(ok & (in_chain == 0), where, drop)
+    ob = jnp.where(ok & (in_chain == 1), where, drop)
+    bit = U8(1) << jnp.maximum(slot, 0).astype(U8)
+    t2 = t._replace(
+        tok=t.tok.at[mb].set(t.tok[jnp.maximum(where, 0)] & ~bit, mode="drop"),
+        otok=t.otok.at[ob].set(t.otok[jnp.maximum(where, 0)] & ~bit, mode="drop"))
+    pm = jnp.where(ok, PM_WRITES_PER_OP, 0).astype(I32)
+    return t2._replace(count=t2.count - ok.astype(I32)), ok, pm
+
+
+def _update_one(cfg, t: PFarmTable, key, val):
+    res = lookup(cfg, t, key[None])
+    ok = res.found[0]
+    in_chain, where, slot = res.where[0, 0], res.where[0, 1], res.where[0, 2]
+    drop = jnp.iinfo(I32).max
+    mb = jnp.where(ok & (in_chain == 0), where, drop)
+    ob = jnp.where(ok & (in_chain == 1), where, drop)
+    slot0 = jnp.maximum(slot, 0)
+    # logged in-place update (undo log makes the multi-store atomic)
+    t2 = t._replace(
+        vals=t.vals.at[mb, slot0].set(val, mode="drop"),
+        ovals=t.ovals.at[ob, slot0].set(val, mode="drop"))
+    pm = jnp.where(ok, PM_WRITES_PER_OP, 0).astype(I32)
+    return t2, ok, pm
+
+
+def _scan(cfg, fn):
+    def step(carry, kv):
+        t, ctr = carry
+        t, ok, pm = fn(cfg, t, *kv)
+        return (t, ctr.add(pm_writes=pm, ops=1)), ok
+    return step
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def insert(cfg, t, keys, vals):
+    keys = jnp.asarray(keys, U32).reshape(-1, KEY_LANES)
+    vals = jnp.asarray(vals, U32).reshape(-1, VAL_LANES)
+    (t, ctr), ok = jax.lax.scan(_scan(cfg, _insert_one),
+                                (t, pmem.PMCounters.zero()), (keys, vals))
+    return t, ok, ctr
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def delete(cfg, t, keys):
+    keys = jnp.asarray(keys, U32).reshape(-1, KEY_LANES)
+    (t, ctr), ok = jax.lax.scan(_scan(cfg, _delete_one),
+                                (t, pmem.PMCounters.zero()), (keys,))
+    return t, ok, ctr
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def update(cfg, t, keys, vals):
+    keys = jnp.asarray(keys, U32).reshape(-1, KEY_LANES)
+    vals = jnp.asarray(vals, U32).reshape(-1, VAL_LANES)
+    (t, ctr), ok = jax.lax.scan(_scan(cfg, _update_one),
+                                (t, pmem.PMCounters.zero()), (keys, vals))
+    return t, ok, ctr

@@ -1,0 +1,54 @@
+"""Persistent-memory cost accounting (the paper's evaluation metrics).
+
+The paper measures:
+  * "number of PM writes"  = number of cache-line flush instructions per op
+    (Table I) — here each 64-byte-granule store that a scheme would flush is
+    counted as one PM write;
+  * RDMA access amplification = number of one-sided contiguous-region fetches
+    a *client read* needs (continuity: 1 [+1 for extended pairs], level: <=4,
+    P-FaRM-KV: 1 + overflow-chain hops);
+  * bytes fetched per read (the RDMA payload) — on TPU this is exactly the
+    collective payload of the sharded lookup, so the same counter feeds the
+    roofline collective term.
+
+Counters are a small pytree so they can thread through jitted scans.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+
+class PMCounters(NamedTuple):
+    """Accumulated device-side counters (all int32 scalars)."""
+
+    pm_writes: jnp.ndarray      # cache-line flushes issued
+    rdma_reads: jnp.ndarray     # one-sided contiguous fetches issued
+    bytes_fetched: jnp.ndarray  # total fetched payload (bytes)
+    ops: jnp.ndarray            # operations accounted
+
+    @staticmethod
+    def zero() -> "PMCounters":
+        z = jnp.zeros((), jnp.int32)
+        return PMCounters(z, z, z, z)
+
+    def add(self, pm_writes=0, rdma_reads=0, bytes_fetched=0, ops=0) -> "PMCounters":
+        return PMCounters(
+            self.pm_writes + jnp.asarray(pm_writes, jnp.int32),
+            self.rdma_reads + jnp.asarray(rdma_reads, jnp.int32),
+            self.bytes_fetched + jnp.asarray(bytes_fetched, jnp.int32),
+            self.ops + jnp.asarray(ops, jnp.int32),
+        )
+
+    def merge(self, other: "PMCounters") -> "PMCounters":
+        return PMCounters(*(a + b for a, b in zip(self, other)))
+
+
+CACHE_LINE = 64
+
+
+def lines_touched(nbytes: int) -> int:
+    """Number of cache lines covered by an aligned store of ``nbytes``."""
+    return max(1, (nbytes + CACHE_LINE - 1) // CACHE_LINE)

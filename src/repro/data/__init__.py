@@ -1,0 +1,1 @@
+"""Data layer: YCSB op-stream generators + deterministic token pipeline."""

@@ -1,0 +1,114 @@
+"""Logical-axis sharding: MaxText-style rules mapping logical dims to mesh axes.
+
+Models annotate arrays with LOGICAL names ("batch", "heads", "mlp", ...).
+A rules table (per launch config) maps logical names to physical mesh axes.
+``shard()`` applies a with_sharding_constraint when a mesh is active, and is
+the identity on single-device runs (smoke tests see no mesh, per the
+dry-run isolation contract).
+
+Changing a rules entry re-lowers the whole model on a different sharding —
+this is also the elastic-rescale path: a new mesh + the same rules table
+re-compiles every step function without touching model code.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+# Default rules for the production meshes: DP over (pod, data); TP over model.
+# kv_heads / experts map to model only when divisible (checked at use site).
+DEFAULT_RULES: Dict[str, Optional[Tuple[str, ...]]] = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "embed": None,
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "mlp": ("model",),
+    "experts": ("model",),
+    "expert_mlp": None,
+    "vocab": ("model",),
+    "layers": None,
+    "ssm_inner": None,
+    "ssm_heads": ("model",),
+    "kv_pairs": ("data",),        # the continuity table's pair dim
+    "zero": ("data",),            # ZeRO-1 moment sharding
+    # decode-time KV layout: pools shard over (pod, data); page tokens split
+    # over model ("split-KV" — works for any kv-head count); kv heads at
+    # decode stay replicated (the split-KV axis carries the parallelism)
+    "kv_shard": ("pod", "data"),
+    "page_tokens": ("model",),
+    "kv_heads_dec": None,
+}
+
+
+def set_mesh_and_rules(mesh: Optional[Mesh], rules: Optional[dict] = None):
+    _state.mesh = mesh
+    _state.rules = dict(DEFAULT_RULES, **(rules or {}))
+
+
+def get_mesh() -> Optional[Mesh]:
+    return getattr(_state, "mesh", None)
+
+
+def get_rules() -> dict:
+    return getattr(_state, "rules", DEFAULT_RULES)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh, rules: Optional[dict] = None):
+    old = get_mesh(), getattr(_state, "rules", None)
+    set_mesh_and_rules(mesh, rules)
+    try:
+        with mesh:
+            yield
+    finally:
+        _state.mesh, _state.rules = old
+
+
+def logical_spec(*names: Optional[str], size_of=None) -> P:
+    """PartitionSpec from logical dim names under the active rules.
+
+    ``size_of``: optional tuple of dim sizes; a logical axis whose dim size is
+    not divisible by its mesh-axes extent degrades to replicated (the GQA
+    kv_heads < TP case, or 40-expert MoE on 16-way model axis).
+    """
+    mesh = get_mesh()
+    rules = get_rules()
+    out = []
+    for i, n in enumerate(names):
+        axes = rules.get(n) if n else None
+        if axes and mesh is not None:
+            extent = 1
+            for a in axes:
+                extent *= dict(zip(mesh.axis_names, mesh.devices.shape)).get(a, 1)
+            if size_of is not None and size_of[i] % max(extent, 1) != 0:
+                out.append(None)
+                continue
+            axes = tuple(a for a in axes if a in mesh.axis_names)
+            out.append(axes if len(axes) > 1 else (axes[0] if axes else None))
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def shard(x, *names: Optional[str]):
+    """Constrain ``x``'s sharding by logical dim names (identity w/o mesh)."""
+    mesh = get_mesh()
+    if mesh is None:
+        return x
+    spec = logical_spec(*names, size_of=x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def named_sharding(*names: Optional[str], size_of=None) -> Optional[NamedSharding]:
+    mesh = get_mesh()
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, logical_spec(*names, size_of=size_of))

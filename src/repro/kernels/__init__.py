@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for the continuity-hashing framework.
+
+Kernels (each: <name>.py kernel + <name>_ref.py pure-jnp oracle, wrapped in ops.py):
+  * probe      — batched continuity-segment probe (one contiguous DMA per query)
+  * paged_attn — paged GQA decode attention over the hash-indexed page pool
+"""
+
+from repro.kernels.ops import paged_attention, probe_table, priority_table  # noqa: F401

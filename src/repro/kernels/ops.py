@@ -1,0 +1,91 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+``probe_table`` adapts a ``ContinuityTable`` into the probe kernel's layout
+(flat contiguous rows + parity priority table) and returns results identical
+to ``repro.core.continuity.lookup``'s probe stage. ``paged_attention`` is
+re-exported with TPU-alignment padding for the q-head-group dimension.
+
+Set ``interpret=False`` on real TPU hardware; this container is CPU-only so
+every caller (tests, benches) uses the interpreter, which executes the same
+kernel body.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.continuity import ContinuityConfig, ContinuityTable, KEY_LANES
+from repro.kernels import paged_attn as _pa
+from repro.kernels import probe as _probe
+from repro.kernels import probe_ref as _probe_ref
+
+BIG = 0x7FFFFFFF
+
+
+@functools.lru_cache(maxsize=None)
+def priority_table(cfg: ContinuityConfig) -> np.ndarray:
+    """(2, SLOTS) probe rank per parity over MAIN slots (ext handled outside).
+
+    Even homes: bucket then SBuckets, left->right. Odd homes: bucket then
+    SBuckets, right->left (paper §III-C's directional scans).
+    """
+    S, bs, seg = cfg.slots_per_pair, cfg.bucket_slots, cfg.seg_slots
+    prio = np.full((2, S), BIG, np.int32)
+    prio[0, :seg] = np.arange(seg)
+    odd_order = list(range(S - 1, bs - 1, -1))
+    prio[1, odd_order] = np.arange(seg)
+    return prio
+
+
+def table_rows(table: ContinuityTable) -> jnp.ndarray:
+    """Flatten main key storage into contiguous per-pair rows (P, SLOTS*KL)."""
+    P, S, KL = table.keys.shape
+    return table.keys.reshape(P, S * KL)
+
+
+def probe_table(cfg: ContinuityConfig, table: ContinuityTable, keys,
+                *, interpret: bool = True, use_kernel: bool = True):
+    """Probe the main segments of ``table`` for a batch of keys.
+
+    Returns (match_slot, empty_slot, pair, parity); slots are -1 on miss/full.
+    """
+    from repro.core.continuity import locate  # local import to avoid cycle
+    keys = jnp.asarray(keys, jnp.uint32).reshape(-1, KEY_LANES)
+    pair, parity = locate(cfg, keys)
+    rows = table_rows(table)
+    ind = table.indicator[:, None]
+    prio = jnp.asarray(priority_table(cfg))
+    fn = _probe.probe_segments if use_kernel else (
+        lambda *a, interpret=True: _probe_ref.probe_ref(*a))
+    match, empty = fn(rows, ind, prio, pair, parity, keys, interpret=interpret) \
+        if use_kernel else _probe_ref.probe_ref(rows, ind, prio, pair, parity, keys)
+    return match, empty, pair, parity
+
+
+def paged_attention(q, kpool, vpool, page_table, seq_lens, *,
+                    scale: float | None = None, interpret: bool = True,
+                    use_kernel: bool = True):
+    """Paged GQA decode attention; pads the q-head group dim to >=8 sublanes
+    so the kernel block shapes are TPU-tileable, then unpads."""
+    if not use_kernel:
+        from repro.kernels.paged_attn_ref import paged_attention_ref
+        return paged_attention_ref(q, kpool, vpool, page_table, seq_lens,
+                                   scale=scale)
+    B, H, D = q.shape
+    KVH = kpool.shape[1]
+    G = H // KVH
+    pad = 0
+    if G < 8:
+        pad = 8 - G
+        qg = q.reshape(B, KVH, G, D)
+        qg = jnp.pad(qg, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        q = qg.reshape(B, KVH * (G + pad), D)
+    out = _pa.paged_attention(q, kpool, vpool, page_table, seq_lens,
+                              scale=scale, interpret=interpret)
+    if pad:
+        out = out.reshape(B, KVH, G + pad, D)[:, :, :G].reshape(B, H, D)
+    return out

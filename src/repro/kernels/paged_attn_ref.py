@@ -1,0 +1,40 @@
+"""Pure-jnp oracle for paged decode attention (GQA) over a physical page pool."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def paged_attention_ref(q, kpool, vpool, page_table, seq_lens, scale=None):
+    """Reference paged decode attention.
+
+    Args:
+      q:          (B, H, D) — one new query token per sequence
+      kpool:      (NP, KVH, PS, D) physical key pages (page-major contiguous)
+      vpool:      (NP, KVH, PS, D)
+      page_table: (B, MAXP) int32 — physical page per logical page (-1 = absent)
+      seq_lens:   (B,) int32 — tokens currently in each sequence's cache
+    Returns:
+      (B, H, D) attention output, same dtype as q.
+    """
+    B, H, D = q.shape
+    NP, KVH, PS, _ = kpool.shape
+    MAXP = page_table.shape[1]
+    G = H // KVH
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(jnp.float32(D))
+
+    pt = jnp.maximum(page_table, 0)
+    k = kpool[pt]                                  # (B, MAXP, KVH, PS, D)
+    v = vpool[pt]
+    k = jnp.moveaxis(k, 2, 1).reshape(B, KVH, MAXP * PS, D)
+    v = jnp.moveaxis(v, 2, 1).reshape(B, KVH, MAXP * PS, D)
+    qg = q.reshape(B, KVH, G, D).astype(jnp.float32)
+    s = jnp.einsum("bkgd,bktd->bkgt", qg, k.astype(jnp.float32)) * scale
+
+    pos = jnp.arange(MAXP * PS)[None]                        # (1, T)
+    live = (pos < seq_lens[:, None]) & jnp.repeat(page_table >= 0, PS, axis=1)
+    s = jnp.where(live[:, None, None, :], s, -jnp.inf)
+    p = jnp.exp(s - jnp.max(s, -1, keepdims=True))
+    p = p / jnp.sum(p, -1, keepdims=True)
+    out = jnp.einsum("bkgt,bktd->bkgd", p, v.astype(jnp.float32))
+    return out.reshape(B, H, D).astype(q.dtype)

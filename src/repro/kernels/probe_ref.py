@@ -1,0 +1,40 @@
+"""Pure-jnp oracle for the continuity segment-probe kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+U32 = jnp.uint32
+BIG = jnp.int32(0x7FFFFFFF)
+
+
+def probe_ref(rows: jnp.ndarray, indicators: jnp.ndarray, prio: jnp.ndarray,
+              pairs: jnp.ndarray, parity: jnp.ndarray, qkeys: jnp.ndarray):
+    """Reference segment probe.
+
+    Args:
+      rows:       (P, SLOTS*KL) uint32 — flattened contiguous segment-pair rows
+      indicators: (P, 1) uint32
+      prio:       (2, SLOTS) int32 probe rank per parity (BIG = not a candidate)
+      pairs:      (B,) int32 — home pair per query
+      parity:     (B,) int32
+      qkeys:      (B, KL) uint32
+    Returns:
+      match_slot (B,) int32 (-1 = miss), empty_slot (B,) int32 (-1 = full)
+    """
+    P, RL = rows.shape
+    B, KL = qkeys.shape
+    S = RL // KL
+    seg = rows[pairs].reshape(B, S, KL)
+    eq = jnp.all(seg == qkeys[:, None, :], axis=-1)
+    ind = indicators[pairs, 0]
+    bits = (ind[:, None] >> jnp.arange(S, dtype=U32)[None]) & U32(1)
+    pr = prio[parity]                                    # (B, S)
+    cand = pr < BIG
+    mrank = jnp.where(eq & (bits == 1) & cand, pr, BIG)
+    erank = jnp.where((bits == 0) & cand, pr, BIG)
+    mbest = jnp.min(mrank, -1)
+    ebest = jnp.min(erank, -1)
+    match_slot = jnp.where(mbest < BIG, jnp.argmin(mrank, -1), -1)
+    empty_slot = jnp.where(ebest < BIG, jnp.argmin(erank, -1), -1)
+    return match_slot.astype(jnp.int32), empty_slot.astype(jnp.int32)

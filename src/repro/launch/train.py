@@ -1,0 +1,116 @@
+"""Training launcher.
+
+At CPU scale (this container):
+  PYTHONPATH=src python -m repro.launch.train --arch yi-6b --smoke \
+      --steps 50 --batch 4 --seq 128 --ckpt /tmp/ckpt
+
+On a real cluster the same entry point runs the full config on the
+production mesh (``--mesh single|multi``); jax.distributed.initialize() is
+called when JAX_COORDINATOR is set (one process per host).
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced same-family config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--micro", type=int, default=1)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--mesh", choices=["none", "single", "multi"],
+                    default="none")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    if os.environ.get("JAX_COORDINATOR"):
+        jax.distributed.initialize()
+
+    from repro.configs import get_arch, smoke_config
+    from repro.checkpoint import CheckpointManager
+    from repro.distribution.sharding import use_mesh
+    from repro.models import transformer as T
+    from repro.runtime.fault import DeterministicSchedule
+    from repro.training import optimizer as O
+    from repro.training.train_step import make_train_step
+
+    cfg = smoke_config(args.arch) if args.smoke else get_arch(args.arch)
+    print(f"arch={cfg.name} family={cfg.family} "
+          f"params={cfg.param_count/1e6:.1f}M (smoke={args.smoke})")
+
+    params = T.init_params(cfg, jax.random.PRNGKey(args.seed))
+    opt_cfg = O.OptConfig(lr=args.lr, warmup=min(20, args.steps // 5 + 1),
+                          decay_steps=args.steps)
+    state = O.init(params)
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg, num_micro=args.micro))
+
+    mgr = CheckpointManager(args.ckpt) if args.ckpt else None
+    start = 0
+    if mgr is not None and mgr.latest_step() is not None:
+        restored, start, _ = mgr.restore({"p": params, "o": state})
+        params, state = restored["p"], restored["o"]
+        print(f"restored checkpoint at step {start}")
+
+    sched = DeterministicSchedule(args.seed, args.batch)
+    mesh_ctx = None
+    if args.mesh != "none":
+        from repro.launch.mesh import make_production_mesh
+        mesh_ctx = make_production_mesh(multi_pod=args.mesh == "multi")
+
+    def batch_for(step):
+        # deterministic synthetic LM data (replayable after restart)
+        ids = sched.batch_indices(step, 0, 1)
+        rng = np.random.Generator(np.random.Philox(key=args.seed,
+                                                   counter=[0, 0, step, 7]))
+        toks = rng.integers(0, cfg.vocab, size=(args.batch, args.seq),
+                            dtype=np.int32)
+        del ids
+        if cfg.frontend == "embed":
+            emb = rng.standard_normal(
+                (args.batch, args.seq, cfg.d_model)).astype(np.float32)
+            return {"inputs": jnp.asarray(emb),
+                    "labels": jnp.asarray(np.roll(toks, -1, 1))}
+        return {"inputs": jnp.asarray(toks),
+                "labels": jnp.asarray(np.roll(toks, -1, 1))}
+
+    def run():
+        nonlocal params, state
+        t0 = time.time()
+        for s in range(start, args.steps):
+            params, state, stats = step_fn(params, state, batch_for(s))
+            if s % 10 == 0 or s == args.steps - 1:
+                dt = time.time() - t0
+                tok_s = (s - start + 1) * args.batch * args.seq / max(dt, 1e-9)
+                print(f"step {s:5d} loss {float(stats['loss']):.4f} "
+                      f"gnorm {float(stats['grad_norm']):.3f} "
+                      f"lr {float(stats['lr']):.2e} tok/s {tok_s:.0f}",
+                      flush=True)
+            if mgr is not None and (s + 1) % args.ckpt_every == 0:
+                mgr.save(s + 1, {"p": params, "o": state})
+        if mgr is not None:
+            mgr.save(args.steps, {"p": params, "o": state})
+            mgr.wait()
+
+    if mesh_ctx is not None:
+        with use_mesh(mesh_ctx):
+            run()
+    else:
+        run()
+
+
+if __name__ == "__main__":
+    main()

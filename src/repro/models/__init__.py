@@ -1,0 +1,1 @@
+"""LM substrate: pure-JAX model zoo (params = pytrees, scan-over-layers)."""

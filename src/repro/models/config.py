@@ -1,0 +1,187 @@
+"""Model configuration for the assigned architecture pool.
+
+One ``ModelConfig`` describes the transformer backbone; modality frontends
+(EnCodec for musicgen, vision tower for llava) are STUBS per the assignment:
+``input_specs()`` provides precomputed frame/patch embeddings for those archs
+(``frontend="embed"``), token ids otherwise.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    expert_dff: int
+    capacity_factor: float = 1.25
+    # "sorted": capacity-bucket dispatch (standard, collective-heavy under
+    # GSPMD); "dense": compute ALL experts and mask by gates — identical
+    # outputs, zero dispatch communication, E/top_k x active FLOPs; wins for
+    # small experts (EXPERIMENTS.md §Perf granite hillclimb)
+    impl: str = "sorted"
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 128
+    head_dim: int = 64
+    expand: int = 2
+    conv_width: int = 4
+    chunk: int = 256          # SSD chunk length
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str               # dense | moe | audio | hybrid | vlm | ssm
+    n_layers: int
+    d_model: int
+    n_heads: int              # 0 for attention-free archs
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0         # 0 -> d_model // n_heads
+    norm: str = "rms"         # rms | ln
+    mlp: str = "swiglu"       # swiglu | gelu
+    qkv_bias: bool = False
+    rope: bool = True
+    rope_theta: float = 10000.0
+    tie_embeddings: bool = False
+    frontend: str = "tokens"  # tokens | embed (modality stub supplies embeds)
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    # hybrid (hymba-style) attention controls
+    window: int = 0           # sliding-window size; 0 = full attention
+    global_every: int = 0     # every k-th layer uses full attention (hybrid)
+    # pad the embedding/LM-head vocab rows up to a multiple (extra ids are
+    # masked in the loss and at decode): vocabs that don't divide the TP
+    # degree otherwise REPLICATE the logits across the model axis
+    vocab_pad_to: int = 1
+    # numerics / perf knobs (hillclimbed in EXPERIMENTS.md §Perf)
+    dtype: str = "bfloat16"
+    remat: str = "full"       # none | full | dots
+    attn_chunk: int = 512     # q-chunk for blockwise attention
+    attn_mode: str = "masked"  # masked (full SxT) | causal_skip (~half FLOPs)
+    # explicit q/k/v activation sharding constraints; False lets GSPMD
+    # propagate from the (sharded) weights — kills the resharding
+    # all-reduces that the kv_heads degrade-to-replicated constraint forces
+    constrain_qkv: bool = True
+    kv_quant: str = "none"    # none | int8 — serving KV-pool quantization
+
+    @property
+    def hd(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        return self.d_model // max(self.n_heads, 1)
+
+    @property
+    def padded_vocab(self) -> int:
+        p = max(self.vocab_pad_to, 1)
+        return (self.vocab + p - 1) // p * p
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """True if serve-time cost per token is o(seq_len) in memory (SSM /
+        hybrid sliding-window) — gate for the long_500k shape."""
+        return self.family in ("ssm", "hybrid")
+
+    @property
+    def has_attention(self) -> bool:
+        return self.n_heads > 0
+
+    @property
+    def param_count(self) -> int:
+        """Analytic parameter count (embedding + blocks + head)."""
+        E, L, V = self.d_model, self.n_layers, self.vocab
+        n = V * E                       # token embedding
+        if not self.tie_embeddings:
+            n += E * V                  # lm head
+        H, KVH, D = self.n_heads, self.n_kv_heads, self.hd
+        per_layer = 0
+        if self.has_attention:
+            per_layer += E * H * D + 2 * E * KVH * D + H * D * E
+            if self.qkv_bias:
+                per_layer += (H + 2 * KVH) * D
+        if self.moe is not None:
+            m = self.moe
+            per_layer += E * m.num_experts                     # router
+            per_layer += m.num_experts * (3 * E * m.expert_dff)
+        elif self.d_ff:
+            mults = 3 if self.mlp == "swiglu" else 2
+            per_layer += mults * E * self.d_ff
+        if self.ssm is not None:
+            s = self.ssm
+            d_in = s.expand * E
+            nh = d_in // s.head_dim
+            # in_proj (z, x, B, C, dt) + out_proj + conv + A,D
+            per_layer += E * (2 * d_in + 2 * s.d_state + nh) + d_in * E
+            per_layer += s.conv_width * (d_in + 2 * s.d_state)
+            per_layer += 2 * nh
+        per_layer += 2 * E              # two norms (scales)
+        return n + L * per_layer
+
+    @property
+    def active_param_count(self) -> int:
+        """MoE: params touched per token (6·N_active·D convention)."""
+        if self.moe is None:
+            return self.param_count
+        m = self.moe
+        L, E = self.n_layers, self.d_model
+        inactive = L * (m.num_experts - m.top_k) * 3 * E * m.expert_dff
+        return self.param_count - inactive
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                 # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+
+def shape_applicable(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+    """Whether (arch, shape) is a runnable cell, and why not if skipped."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, ("pure full-attention arch: 500k-token decode needs "
+                       "sub-quadratic attention (DESIGN.md §Arch-applicability)")
+    return True, ""
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig,
+                dtype=jnp.bfloat16) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of a step (no
+    allocation) — the dry-run contract. Modality frontends are stubs: for
+    ``frontend="embed"`` archs the spec carries precomputed embeddings."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind == "train":
+        if cfg.frontend == "embed":
+            x = jax.ShapeDtypeStruct((B, S, cfg.d_model), dtype)
+        else:
+            x = jax.ShapeDtypeStruct((B, S), i32)
+        return {"inputs": x, "labels": jax.ShapeDtypeStruct((B, S), i32)}
+    if shape.kind == "prefill":
+        if cfg.frontend == "embed":
+            x = jax.ShapeDtypeStruct((B, S, cfg.d_model), dtype)
+        else:
+            x = jax.ShapeDtypeStruct((B, S), i32)
+        return {"inputs": x}
+    # decode: one new token id per sequence against a cache of seq_len
+    # (modality frontends only affect prefill/train inputs; generated tokens
+    # are always ids embedded through the shared token embedding)
+    return {"inputs": jax.ShapeDtypeStruct((B,), i32)}

@@ -1,0 +1,337 @@
+"""Transformer building blocks: norms, RoPE, blockwise attention, MLP, MoE.
+
+All functions are pure; parameters are plain dicts of arrays. Attention is
+blockwise (scan over query chunks, online accumulation is unnecessary because
+each chunk sees the full key range with masking), which bounds activation
+memory at O(chunk * S) per layer instead of O(S^2) — required for the 32k
+prefill shapes. Sliding-window attention uses a *banded* static slice of
+width (window + chunk) so its FLOPs are O(S * window), not O(S^2).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+F32 = jnp.float32
+
+
+def _dense_moe_group(num_experts: int) -> int:
+    """Expert-group size for the dense MoE scan (bounds transients)."""
+    for g in (8, 5, 4, 2, 1):
+        if num_experts % g == 0:
+            return g
+    return 1
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, scale, eps=1e-6):
+    var = jnp.mean(jnp.square(x.astype(F32)), -1, keepdims=True)
+    y = x.astype(F32) * jax.lax.rsqrt(var + eps) * scale.astype(F32)
+    return y.astype(x.dtype)
+
+
+def layernorm(x, scale, bias, eps=1e-5):
+    xf = x.astype(F32)
+    mu = jnp.mean(xf, -1, keepdims=True)
+    var = jnp.var(xf, -1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps) * scale.astype(F32) \
+        + bias.astype(F32)
+    return y.astype(x.dtype)
+
+
+def apply_norm(cfg, p, prefix, x):
+    if cfg.norm == "rms":
+        return rmsnorm(x, p[f"{prefix}_scale"])
+    return layernorm(x, p[f"{prefix}_scale"], p[f"{prefix}_bias"])
+
+
+# ---------------------------------------------------------------------------
+# rotary position embedding (GPT-NeoX half-rotation convention)
+# ---------------------------------------------------------------------------
+
+def rope(x, positions, theta=10000.0):
+    """x: (..., S, H, D) or (..., H, D) with positions (..., S) / (...,)."""
+    D = x.shape[-1]
+    half = D // 2
+    freq = 1.0 / (theta ** (np.arange(0, half) / half))
+    ang = positions[..., None].astype(F32) * freq          # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]                       # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half].astype(F32), x[..., half:].astype(F32)
+    return jnp.concatenate([x1 * cos - x2 * sin,
+                            x2 * cos + x1 * sin], -1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# blockwise causal attention (GQA)
+# ---------------------------------------------------------------------------
+
+def _attn_scores(q, k, scale):
+    """q (B,C,KVH,G,D) x k (B,T,KVH,D) -> (B,KVH,G,C,T) f32."""
+    return jnp.einsum("bckgd,btkd->bkgct", q.astype(F32), k.astype(F32),
+                      preferred_element_type=F32) * scale
+
+
+def _attn_out(p, v):
+    """p (B,KVH,G,C,T) x v (B,T,KVH,D) -> (B,C,KVH,G,D)."""
+    return jnp.einsum("bkgct,btkd->bckgd", p, v.astype(F32),
+                      preferred_element_type=F32)
+
+
+def blockwise_attention(q, k, v, *, chunk: int, window: int = 0,
+                        q_offset=0, causal_skip: bool = False):
+    """Causal (optionally sliding-window) attention, scanned over q chunks.
+
+    q: (B, S, H, D); k, v: (B, T, KVH, D); returns (B, S, H, D).
+    ``q_offset``: absolute position of q[0] (for prefill continuation).
+    window > 0 restricts attention to the last ``window`` positions and uses a
+    banded static slice (FLOPs O(S·window)).
+    ``causal_skip``: inner-scan over KV chunks with a ``lax.cond`` skip of
+    strictly-above-diagonal chunk pairs + online softmax — runtime FLOPs drop
+    to the causal half (nC+1)/(2·nC) at the cost of a serialized inner loop
+    (hillclimb lever; see EXPERIMENTS.md §Perf).
+    """
+    B, S_in, H, D = q.shape
+    T, KVH = k.shape[1], k.shape[2]
+    G = H // KVH
+    scale = 1.0 / (D ** 0.5)
+    C = min(chunk, S_in)
+    if S_in % C:                       # pad q chunks; outputs sliced below
+        q = jnp.pad(q, ((0, 0), (0, C - S_in % C), (0, 0), (0, 0)))
+    S = q.shape[1]
+    nC = S // C
+    qg = q.reshape(B, nC, C, KVH, G, D)
+
+    if window > 0:
+        band = window + C                               # static banded width
+
+        def step(c):
+            qc = qg[:, c]
+            start = jnp.maximum(c * C + q_offset - window, 0)
+            start = jnp.minimum(start, jnp.maximum(T - band, 0))
+            kb = jax.lax.dynamic_slice_in_dim(k, start, min(band, T), 1)
+            vb = jax.lax.dynamic_slice_in_dim(v, start, min(band, T), 1)
+            s = _attn_scores(qc, kb, scale)             # (B,KVH,G,C,band)
+            qpos = c * C + q_offset + jnp.arange(C)
+            kpos = start + jnp.arange(min(band, T))
+            m = (kpos[None, :] <= qpos[:, None]) & \
+                (kpos[None, :] > qpos[:, None] - window)
+            s = jnp.where(m[None, None, None], s, -jnp.inf)
+            p = jax.nn.softmax(s, axis=-1)
+            return _attn_out(p, vb)
+    elif causal_skip:
+        if T % C:                      # pad kv to a chunk multiple (masked)
+            k = jnp.pad(k, ((0, 0), (0, C - T % C), (0, 0), (0, 0)))
+            v = jnp.pad(v, ((0, 0), (0, C - T % C), (0, 0), (0, 0)))
+            T = k.shape[1]
+        nK = T // C
+        KVH2, G2 = k.shape[2], H // k.shape[2]
+
+        def step(c):
+            qc = qg[:, c]
+            qpos = c * C + q_offset + jnp.arange(C)
+
+            def inner(carry, j):
+                m_r, l_r, acc = carry
+
+                def compute(carry):
+                    m_r, l_r, acc = carry
+                    kj = jax.lax.dynamic_slice_in_dim(k, j * C, C, 1)
+                    vj = jax.lax.dynamic_slice_in_dim(v, j * C, C, 1)
+                    s = _attn_scores(qc, kj, scale)     # (B,KVH,G,C,C)
+                    kpos = j * C + jnp.arange(C)
+                    mask = kpos[None, :] <= qpos[:, None]
+                    s = jnp.where(mask[None, None, None], s, -1e30)
+                    m_new = jnp.maximum(m_r, jnp.max(s, -1))
+                    p = jnp.exp(s - m_new[..., None])
+                    alpha = jnp.exp(m_r - m_new)
+                    l_new = l_r * alpha + jnp.sum(p, -1)
+                    acc = acc * alpha[..., None] + jnp.einsum(
+                        "bkgct,btkd->bkgcd", p, vj.astype(F32),
+                        preferred_element_type=F32)
+                    return m_new, l_new, acc
+
+                carry = jax.lax.cond(j <= c, compute, lambda x: x,
+                                     (m_r, l_r, acc))
+                return carry, None
+
+            B2 = qc.shape[0]
+            init = (jnp.full((B2, KVH2, G2, C), -1e30, F32),
+                    jnp.zeros((B2, KVH2, G2, C), F32),
+                    jnp.zeros((B2, KVH2, G2, C, D), F32))
+            (m_r, l_r, acc), _ = jax.lax.scan(inner, init, jnp.arange(nK))
+            out = acc / jnp.maximum(l_r, 1e-30)[..., None]
+            return jnp.moveaxis(out, 3, 1)              # (B,C,KVH,G,D)
+    else:
+        kpos = jnp.arange(T)
+
+        def step(c):
+            qc = qg[:, c]
+            s = _attn_scores(qc, k, scale)              # (B,KVH,G,C,T)
+            qpos = c * C + q_offset + jnp.arange(C)
+            m = kpos[None, :] <= qpos[:, None]
+            s = jnp.where(m[None, None, None], s, -jnp.inf)
+            p = jax.nn.softmax(s, axis=-1)
+            return _attn_out(p, v)
+
+    out = jax.lax.map(step, jnp.arange(nC))             # (nC,B,C,KVH,G,D)
+    out = jnp.moveaxis(out, 0, 1)                       # (B,nC,C,KVH,G,D)
+    return out.reshape(B, S, H, D)[:, :S_in].astype(q.dtype)
+
+
+def decode_attention(q, k, v, seq_len, *, window: int = 0):
+    """Single-token attention against a (B, T, KVH, D) cache (T = ring or
+    linear buffer). q: (B, H, D). ``seq_len`` (B,) live lengths. For ring
+    buffers (window>0) the cache is position-mod-window; masking is by
+    liveness only since all live entries are within the window."""
+    B, H, D = q.shape
+    T, KVH = k.shape[1], k.shape[2]
+    G = H // KVH
+    scale = 1.0 / (D ** 0.5)
+    qg = q.reshape(B, KVH, G, D)
+    s = jnp.einsum("bkgd,btkd->bkgt", qg.astype(F32), k.astype(F32),
+                   preferred_element_type=F32) * scale
+    idx = jnp.arange(T)[None]
+    live = idx < jnp.minimum(seq_len, T if window == 0 else window)[:, None]
+    s = jnp.where(live[:, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgt,btkd->bkgd", p, v.astype(F32),
+                     preferred_element_type=F32)
+    return out.reshape(B, H, D).astype(q.dtype)
+
+
+def paged_decode_attention(q, kg, vg, page_table, seq_lens, page_size: int):
+    """Decode attention over gathered pages with (MAXP, PS) kept separate.
+
+    q: (DS, Bl, H, D); kg/vg: (DS, Bl, MAXP, KVH, PS, D);
+    page_table: (DS, Bl, MAXP) (-1 = unmapped); seq_lens: (DS, Bl) live
+    lengths INCLUDING the just-written token. Returns (DS, Bl, H, D).
+
+    The PS axis can stay sharded over the model axis (split-KV): the softmax
+    reductions and the value contraction produce small cross-shard
+    all-reduces instead of a cache-sized reshard.
+    """
+    DS, Bl, H, D = q.shape
+    KVH, PS = kg.shape[3], kg.shape[4]
+    G = H // KVH
+    scale = 1.0 / (D ** 0.5)
+    qg = q.reshape(DS, Bl, KVH, G, D).astype(F32)
+    s = jnp.einsum("sbkgd,sbmkpd->sbkgmp", qg, kg.astype(F32),
+                   preferred_element_type=F32) * scale
+    tok = (jnp.arange(kg.shape[2])[:, None] * page_size
+           + jnp.arange(PS)[None, :])                   # (MAXP, PS)
+    live = (tok[None, None] < seq_lens[..., None, None]) \
+        & (page_table[..., None] >= 0)                  # (DS,Bl,MAXP,PS)
+    s = jnp.where(live[:, :, None, None], s, -1e30)
+    m = jnp.max(s, axis=(-2, -1), keepdims=True)
+    pr = jnp.exp(s - m)
+    denom = jnp.maximum(jnp.sum(pr, axis=(-2, -1), keepdims=True), 1e-30)
+    pr = pr / denom
+    out = jnp.einsum("sbkgmp,sbmkpd->sbkgd", pr, vg.astype(F32),
+                     preferred_element_type=F32)
+    return out.reshape(DS, Bl, H, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def mlp(cfg, p, x):
+    dt = x.dtype
+    if cfg.mlp == "swiglu":
+        g = jnp.einsum("...e,ef->...f", x, p["w_gate"].astype(dt))
+        u = jnp.einsum("...e,ef->...f", x, p["w_up"].astype(dt))
+        h = jax.nn.silu(g.astype(F32)).astype(dt) * u
+    else:
+        h = jnp.einsum("...e,ef->...f", x, p["w_up"].astype(dt))
+        h = jax.nn.gelu(h.astype(F32)).astype(dt)
+    return jnp.einsum("...f,fe->...e", h, p["w_down"].astype(dt))
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts (top-k, sort-based dispatch, capacity-bounded)
+# ---------------------------------------------------------------------------
+
+def moe(cfg, p, x):
+    """x: (B, S, E) -> (B, S, E). Two implementations with identical outputs:
+
+    "sorted": capacity-bucket dispatch (argsort + scatter). Standard for big
+    experts, but the data-dependent scatter/gather makes GSPMD reshard the
+    dispatch buffers across the mesh (collective-heavy; see §Perf).
+
+    "dense": compute EVERY expert for every token and weight by the (masked,
+    renormalized top-k) gates. E/top_k x the active FLOPs, zero dispatch
+    communication, no token dropping. For small experts (granite: dff=512)
+    this converts a collective-bound layer into a compute-bound one.
+    Expert groups are scanned to bound the (T, E_g, dff) transient.
+    """
+    m = cfg.moe
+    B, S, E = x.shape
+    T = B * S
+    xt = x.reshape(T, E)
+    logits = jnp.einsum("te,en->tn", xt.astype(F32), p["router"].astype(F32))
+    topv, topi = jax.lax.top_k(logits, m.top_k)          # (T, k)
+    gates = jax.nn.softmax(topv, axis=-1)                # renormalized top-k
+
+    if m.impl == "dense":
+        gate_full = jnp.zeros((T, m.num_experts), F32)
+        gate_full = gate_full.at[jnp.arange(T)[:, None], topi].set(gates)
+        GE = _dense_moe_group(m.num_experts)
+
+        def group(carry, idx):
+            acc = carry
+            wg = jax.lax.dynamic_slice_in_dim(p["we_gate"], idx * GE, GE, 0)
+            wu = jax.lax.dynamic_slice_in_dim(p["we_up"], idx * GE, GE, 0)
+            wd = jax.lax.dynamic_slice_in_dim(p["we_down"], idx * GE, GE, 0)
+            gf = jax.lax.dynamic_slice_in_dim(gate_full, idx * GE, GE, 1)
+            g = jnp.einsum("td,xdf->txf", xt, wg.astype(x.dtype))
+            u = jnp.einsum("td,xdf->txf", xt, wu.astype(x.dtype))
+            h = jax.nn.silu(g.astype(F32)).astype(x.dtype) * u
+            y = jnp.einsum("txf,xfd->txd", h, wd.astype(x.dtype))
+            acc = acc + jnp.einsum("txd,tx->td", y.astype(F32), gf)
+            return acc, None
+
+        n_groups = m.num_experts // GE
+        out, _ = jax.lax.scan(group, jnp.zeros((T, E), F32),
+                              jnp.arange(n_groups))
+        me = jnp.mean(jax.nn.softmax(logits, -1), axis=0)
+        ce = jnp.bincount(topi.reshape(-1), length=m.num_experts) \
+            / (T * m.top_k)
+        aux = m.num_experts * jnp.sum(me * ce)
+        return out.reshape(B, S, E).astype(x.dtype), aux
+
+    K = m.top_k
+    eid = topi.reshape(T * K)
+    tid = jnp.repeat(jnp.arange(T), K)
+    gk = gates.reshape(T * K)
+    order = jnp.argsort(eid)
+    se, st, sg = eid[order], tid[order], gk[order]
+    first = jnp.searchsorted(se, se, side="left")
+    pos = jnp.arange(T * K) - first                      # rank within expert
+    cap = int(np.ceil(T * K / m.num_experts * m.capacity_factor))
+    keep = pos < cap
+
+    drop = m.num_experts                                  # OOB bucket
+    be = jnp.where(keep, se, drop)
+    buf = jnp.zeros((m.num_experts, cap, E), x.dtype)
+    buf = buf.at[be, jnp.minimum(pos, cap - 1)].set(xt[st], mode="drop")
+
+    g = jnp.einsum("xcd,xdf->xcf", buf, p["we_gate"].astype(x.dtype))
+    u = jnp.einsum("xcd,xdf->xcf", buf, p["we_up"].astype(x.dtype))
+    h = jax.nn.silu(g.astype(F32)).astype(x.dtype) * u
+    y = jnp.einsum("xcf,xfd->xcd", h, p["we_down"].astype(x.dtype))
+
+    out = jnp.zeros((T, E), F32)
+    contrib = y[jnp.minimum(se, m.num_experts - 1), jnp.minimum(pos, cap - 1)]
+    contrib = contrib.astype(F32) * (sg * keep)[:, None]
+    out = out.at[st].add(contrib)
+    # auxiliary load-balance loss (Switch-style), returned for training
+    me = jnp.mean(jax.nn.softmax(logits, -1), axis=0)
+    ce = jnp.bincount(eid, length=m.num_experts) / (T * K)
+    aux = m.num_experts * jnp.sum(me * ce)
+    return out.reshape(B, S, E).astype(x.dtype), aux

@@ -1,0 +1,184 @@
+"""Mamba-2 (SSD — state-space duality, arXiv:2405.21060) in pure JAX.
+
+Forward pass uses the chunked SSD algorithm: within a chunk the recurrence is
+materialized as a masked (attention-like) matrix — the "duality" — and chunks
+are linked by a ``lax.scan`` over the running state, so cost is
+O(S·chunk·(d_state + head_dim)) — sub-quadratic in S, which is what makes the
+``long_500k`` shape runnable for the SSM/hybrid archs.
+
+Decode is the O(1)-per-token recurrence with a rolling conv window.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def ssm_dims(cfg):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    nheads = d_inner // s.head_dim
+    conv_ch = d_inner + 2 * s.d_state
+    return d_inner, nheads, conv_ch
+
+
+def init_ssm_params(key, cfg, scale=0.02):
+    s = cfg.ssm
+    d_inner, nheads, conv_ch = ssm_dims(cfg)
+    E = cfg.d_model
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    proj_out = 2 * d_inner + 2 * s.d_state + nheads
+    # Mamba-2 dt init: dt ~ LogUniform(1e-3, 1e-1) via softplus^-1 bias —
+    # slow decay gives the state usefully long memory from step 0
+    dt0 = jnp.exp(jax.random.uniform(k4, (nheads,), F32,
+                                     jnp.log(1e-3), jnp.log(1e-1)))
+    return {
+        "in_proj": jax.random.normal(k1, (E, proj_out), F32) * scale,
+        "conv_w": jax.random.normal(k2, (s.conv_width, conv_ch), F32) * scale,
+        "conv_b": jnp.zeros((conv_ch,), F32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nheads)),
+        "D": jnp.ones((nheads,), F32),
+        "dt_bias": jnp.log(jnp.expm1(dt0)),
+        "ssm_norm": jnp.ones((d_inner,), F32),
+        "out_proj": jax.random.normal(k3, (d_inner, E), F32) * scale,
+    }
+
+
+def _split_proj(cfg, proj):
+    s = cfg.ssm
+    d_inner, nheads, _ = ssm_dims(cfg)
+    z, xc, Bm, Cm, dt = jnp.split(
+        proj, [d_inner, 2 * d_inner, 2 * d_inner + s.d_state,
+               2 * d_inner + 2 * s.d_state], axis=-1)
+    return z, xc, Bm, Cm, dt
+
+
+def _causal_conv(xcbc, w, b):
+    """Depthwise causal conv over (B, S, CH) with kernel (W, CH)."""
+    W = w.shape[0]
+    pad = jnp.pad(xcbc, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xcbc.shape[1]] * w[i][None, None] for i in range(W))
+    return out + b
+
+
+def ssd_forward(cfg, p, x, apply_out: bool = True):
+    """x: (B, S, E) -> (B, S, E) (or (B, S, d_inner) when ``apply_out`` is
+    False — hybrid archs fuse heads before a shared projection). Chunked SSD
+    with a state scan across chunks."""
+    s = cfg.ssm
+    d_inner, nheads, conv_ch = ssm_dims(cfg)
+    B_, S_in, E = x.shape
+    P, N, Q = s.head_dim, s.d_state, min(s.chunk, S_in)
+    if S_in % Q:                       # zero-pad tail to a chunk multiple
+        x = jnp.pad(x, ((0, 0), (0, Q - S_in % Q), (0, 0)))
+    S = x.shape[1]
+    nQ = S // Q
+
+    proj = jnp.einsum("bse,ef->bsf", x, p["in_proj"].astype(x.dtype))
+    z, xc, Bm, Cm, dtr = _split_proj(cfg, proj)
+    conv_in = jnp.concatenate([xc, Bm, Cm], -1)
+    conv = jax.nn.silu(_causal_conv(conv_in, p["conv_w"].astype(x.dtype),
+                                    p["conv_b"].astype(x.dtype)).astype(F32))
+    xc, Bm, Cm = (conv[..., :d_inner],
+                  conv[..., d_inner:d_inner + N],
+                  conv[..., d_inner + N:])
+    xh = xc.reshape(B_, S, nheads, P)                       # (B,S,H,P)
+    dt = jax.nn.softplus(dtr.astype(F32) + p["dt_bias"])    # (B,S,H)
+    A = -jnp.exp(p["A_log"])                                # (H,) negative
+    la = dt * A[None, None]                                 # log decay (B,S,H)
+
+    # chunked views
+    lac = la.reshape(B_, nQ, Q, nheads)
+    cum = jnp.cumsum(lac, axis=2)                           # (B,nQ,Q,H)
+    xq = xh.reshape(B_, nQ, Q, nheads, P)
+    dtq = dt.reshape(B_, nQ, Q, nheads)
+    Bq = Bm.reshape(B_, nQ, Q, N).astype(F32)
+    Cq = Cm.reshape(B_, nQ, Q, N).astype(F32)
+
+    # intra-chunk (duality: masked attention-like term). Mask BEFORE exp:
+    # masked (t < s) entries have POSITIVE log-decay whose exp overflows, and
+    # where(mask, exp(seg), 0)'s VJP would produce 0 * inf = NaN.
+    CB = jnp.einsum("bqtn,bqsn->bqts", Cq, Bq)              # (B,nQ,Q,Q)
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]     # l_t - l_s (B,nQ,Q,Q,H)
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    seg = jnp.where(tri[None, None, :, :, None], seg, -1e30)
+    G = jnp.exp(seg) * CB[..., None] * dtq[:, :, None, :, :]  # weight by dt_s
+    y_intra = jnp.einsum("bqtsh,bqshp->bqthp", G, xq.astype(F32))
+
+    # inter-chunk state scan
+    decay_out = jnp.exp(cum)                                 # exp(l_t)
+    decay_in = jnp.exp(cum[:, :, -1:, :] - cum)              # exp(l_Q - l_s)
+    dBx = jnp.einsum("bqsh,bqsn,bqshp->bqhnp",
+                     dtq * decay_in, Bq, xq.astype(F32))     # chunk state delta
+    chunk_decay = jnp.exp(cum[:, :, -1])                     # (B,nQ,H)
+
+    def scan_fn(state, inp):
+        dS, cd = inp                                         # (B,H,N,P),(B,H)
+        new = state * cd[..., None, None] + dS
+        return new, state                                    # emit PRE-state
+
+    init = jnp.zeros((B_, nheads, N, P), F32)
+    _, pre_states = jax.lax.scan(
+        scan_fn, init,
+        (jnp.moveaxis(dBx, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    pre = jnp.moveaxis(pre_states, 0, 1)                     # (B,nQ,H,N,P)
+    y_inter = jnp.einsum("bqtn,bqth,bqhnp->bqthp",
+                         Cq, decay_out, pre)
+
+    y = (y_intra + y_inter).reshape(B_, S, nheads, P)
+    y = y + xh.astype(F32) * p["D"][None, None, :, None]
+    y = y.reshape(B_, S, d_inner)
+    y = y * jax.nn.silu(z.astype(F32))
+    # RMSNorm before out-projection (Mamba-2 block layout)
+    var = jnp.mean(jnp.square(y), -1, keepdims=True)
+    y = y * jax.lax.rsqrt(var + 1e-6) * p["ssm_norm"]
+    y = y[:, :S_in]                    # drop chunk padding
+    if not apply_out:
+        return y.astype(x.dtype)
+    return jnp.einsum("bsf,fe->bse", y.astype(x.dtype),
+                      p["out_proj"].astype(x.dtype))
+
+
+def init_ssm_state(cfg, batch, dtype=F32):
+    s = cfg.ssm
+    d_inner, nheads, conv_ch = ssm_dims(cfg)
+    return {
+        "S": jnp.zeros((batch, nheads, s.d_state, s.head_dim), F32),
+        "conv": jnp.zeros((batch, s.conv_width - 1, conv_ch), dtype),
+    }
+
+
+def ssd_decode(cfg, p, x, state, apply_out: bool = True):
+    """One-token recurrent step. x: (B, E); returns (y (B, E), new_state)."""
+    s = cfg.ssm
+    d_inner, nheads, conv_ch = ssm_dims(cfg)
+    B_ = x.shape[0]
+    N, P = s.d_state, s.head_dim
+
+    proj = jnp.einsum("be,ef->bf", x, p["in_proj"].astype(x.dtype))
+    z, xc, Bm, Cm, dtr = _split_proj(cfg, proj)
+    conv_in = jnp.concatenate([xc, Bm, Cm], -1)              # (B, CH)
+    hist = jnp.concatenate([state["conv"], conv_in[:, None]], 1)  # (B, W, CH)
+    w = p["conv_w"].astype(x.dtype)
+    conv = jax.nn.silu((jnp.einsum("bwc,wc->bc", hist, w)
+                        + p["conv_b"].astype(x.dtype)).astype(F32))
+    xc, Bv, Cv = (conv[:, :d_inner], conv[:, d_inner:d_inner + N],
+                  conv[:, d_inner + N:])
+    xhp = xc.reshape(B_, nheads, P)
+    dt = jax.nn.softplus(dtr.astype(F32) + p["dt_bias"])     # (B,H)
+    a = jnp.exp(dt * -jnp.exp(p["A_log"]))                   # (B,H)
+    S_new = state["S"] * a[..., None, None] + jnp.einsum(
+        "bh,bn,bhp->bhnp", dt, Bv.astype(F32), xhp.astype(F32))
+    y = jnp.einsum("bn,bhnp->bhp", Cv.astype(F32), S_new)
+    y = y + xhp.astype(F32) * p["D"][None, :, None]
+    y = y.reshape(B_, d_inner) * jax.nn.silu(z.astype(F32))
+    var = jnp.mean(jnp.square(y), -1, keepdims=True)
+    y = y * jax.lax.rsqrt(var + 1e-6) * p["ssm_norm"]
+    new_state = {"S": S_new, "conv": hist[:, 1:]}
+    if not apply_out:
+        return y.astype(x.dtype), new_state
+    out = jnp.einsum("bf,fe->be", y.astype(x.dtype), p["out_proj"].astype(x.dtype))
+    return out, new_state

@@ -1,0 +1,538 @@
+"""Decoder-LM assembly for every assigned architecture family.
+
+Design notes:
+  * params are plain dicts; per-layer params are STACKED along a leading L
+    dim and the layer stack runs under ``lax.scan`` — HLO size (and so CPU
+    dry-run compile time) is depth-independent;
+  * every family shares this file: dense / moe / audio / vlm are one block
+    shape; hybrid adds parallel SSM heads; ssm drops attention entirely;
+  * hybrid global-attention layers (hymba places them at first/middle/last)
+    are lifted OUT of the scan as static segments, so each layer's attention
+    window is compile-time static — no dual-branch waste, exact FLOP
+    accounting in ``cost_analysis`` for the roofline;
+  * activation shardings are expressed in LOGICAL axes (distribution/sharding)
+    so the same model code lowers on 1 CPU device, a 16x16 pod, or 2x16x16;
+  * decode for full-attention archs runs against the hash-indexed paged KV
+    pool (the paper's technique on the serving hot path); window/SSM archs
+    carry ring buffers / recurrent state.
+"""
+
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distribution.sharding import shard
+from repro.models import layers as L
+from repro.models import ssm as S
+from repro.models.config import ModelConfig
+
+F32 = jnp.float32
+
+
+def _dtype(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    E, Lh, V = cfg.d_model, cfg.n_layers, cfg.padded_vocab
+    H, KVH, D = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    keys = jax.random.split(key, 16)
+    sc = 0.02
+
+    def norm_params(prefix):
+        p = {f"{prefix}_scale": jnp.ones((Lh, E), F32)}
+        if cfg.norm == "ln":
+            p[f"{prefix}_bias"] = jnp.zeros((Lh, E), F32)
+        return p
+
+    blocks = {}
+    blocks.update(norm_params("ln1"))
+    blocks.update(norm_params("ln2"))
+
+    if cfg.has_attention:
+        blocks["wq"] = jax.random.normal(keys[0], (Lh, E, H * D), F32) * sc
+        blocks["wk"] = jax.random.normal(keys[1], (Lh, E, KVH * D), F32) * sc
+        blocks["wv"] = jax.random.normal(keys[2], (Lh, E, KVH * D), F32) * sc
+        if cfg.family != "hybrid":
+            blocks["wo"] = jax.random.normal(keys[3], (Lh, H * D, E), F32) * sc
+        if cfg.qkv_bias:
+            blocks["bq"] = jnp.zeros((Lh, H * D), F32)
+            blocks["bk"] = jnp.zeros((Lh, KVH * D), F32)
+            blocks["bv"] = jnp.zeros((Lh, KVH * D), F32)
+
+    if cfg.moe is not None:
+        m = cfg.moe
+        blocks["router"] = jax.random.normal(keys[4], (Lh, E, m.num_experts), F32) * sc
+        blocks["we_gate"] = jax.random.normal(
+            keys[5], (Lh, m.num_experts, E, m.expert_dff), F32) * sc
+        blocks["we_up"] = jax.random.normal(
+            keys[6], (Lh, m.num_experts, E, m.expert_dff), F32) * sc
+        blocks["we_down"] = jax.random.normal(
+            keys[7], (Lh, m.num_experts, m.expert_dff, E), F32) * sc
+    elif cfg.d_ff:
+        if cfg.mlp == "swiglu":
+            blocks["w_gate"] = jax.random.normal(keys[4], (Lh, E, cfg.d_ff), F32) * sc
+        blocks["w_up"] = jax.random.normal(keys[5], (Lh, E, cfg.d_ff), F32) * sc
+        blocks["w_down"] = jax.random.normal(keys[6], (Lh, cfg.d_ff, E), F32) * sc
+
+    if cfg.ssm is not None:
+        sp = jax.vmap(lambda k: S.init_ssm_params(k, cfg))(
+            jax.random.split(keys[8], Lh))
+        if cfg.family == "hybrid":
+            sp.pop("out_proj")         # fused projection replaces it
+        blocks.update({f"ssm_{k}": v for k, v in sp.items()})
+        if cfg.family == "hybrid":
+            d_inner = S.ssm_dims(cfg)[0]
+            assert d_inner == H * D, (d_inner, H * D)
+            blocks["fuse_attn_scale"] = jnp.ones((Lh, H * D), F32)
+            blocks["fuse_ssm_scale"] = jnp.ones((Lh, d_inner), F32)
+            blocks["w_fuse"] = jax.random.normal(keys[9], (Lh, H * D, E), F32) * sc
+
+    # tied embeddings double as the LM head: init small to keep initial
+    # logits O(1) (the first block norm makes the input side scale-free)
+    emb_scale = sc if cfg.tie_embeddings else 1.0
+    params = {
+        "embed": jax.random.normal(keys[10], (V, E), F32) * emb_scale,
+        "blocks": blocks,
+        "final_scale": jnp.ones((E,), F32),
+    }
+    if cfg.norm == "ln":
+        params["final_bias"] = jnp.zeros((E,), F32)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = jax.random.normal(keys[11], (E, V), F32) * sc
+    return params
+
+
+def param_logical_axes(cfg: ModelConfig, params: dict) -> dict:
+    """Mirror of ``params`` with logical-axis tuples per leaf."""
+    ax = {
+        "embed": ("vocab", "embed"),
+        "final_scale": ("embed",),
+        "final_bias": ("embed",),
+        "lm_head": ("embed", "vocab"),
+    }
+    bl = {
+        "ln1_scale": ("layers", "embed"), "ln1_bias": ("layers", "embed"),
+        "ln2_scale": ("layers", "embed"), "ln2_bias": ("layers", "embed"),
+        "wq": ("layers", "embed", "heads"),
+        "wk": ("layers", "embed", "kv_heads"),
+        "wv": ("layers", "embed", "kv_heads"),
+        "wo": ("layers", "heads", "embed"),
+        "bq": ("layers", "heads"), "bk": ("layers", "kv_heads"),
+        "bv": ("layers", "kv_heads"),
+        "router": ("layers", "embed", None),
+        "we_gate": ("layers", "experts", "embed", "expert_mlp"),
+        "we_up": ("layers", "experts", "embed", "expert_mlp"),
+        "we_down": ("layers", "experts", "expert_mlp", "embed"),
+        "w_gate": ("layers", "embed", "mlp"),
+        "w_up": ("layers", "embed", "mlp"),
+        "w_down": ("layers", "mlp", "embed"),
+        "ssm_in_proj": ("layers", "embed", "ssm_inner"),
+        "ssm_conv_w": ("layers", None, None),
+        "ssm_conv_b": ("layers", None),
+        "ssm_A_log": ("layers", None), "ssm_D": ("layers", None),
+        "ssm_dt_bias": ("layers", None),
+        "ssm_ssm_norm": ("layers", "ssm_inner"),
+        "ssm_out_proj": ("layers", "ssm_inner", "embed"),
+        "fuse_attn_scale": ("layers", "heads"),
+        "fuse_ssm_scale": ("layers", "ssm_inner"),
+        "w_fuse": ("layers", "heads", "embed"),
+    }
+    out = {k: ax[k] for k in params if k != "blocks"}
+    out["blocks"] = {k: bl[k] for k in params["blocks"]}
+    return out
+
+
+# ---------------------------------------------------------------------------
+# layer segmentation (static per-layer attention windows for hybrids)
+# ---------------------------------------------------------------------------
+
+def layer_segments(cfg: ModelConfig) -> List[Tuple[int, int, int]]:
+    """[(start, stop, window)] covering 0..L; window=0 means full attention.
+
+    Hybrids (hymba) use full attention at layers {0, L//2, L-1} and a sliding
+    window elsewhere; all other families are one segment.
+    """
+    Lh = cfg.n_layers
+    if cfg.family != "hybrid":
+        return [(0, Lh, cfg.window)]
+    glob = sorted({0, Lh // 2, Lh - 1})
+    segs, prev = [], 0
+    for g in glob:
+        if g > prev:
+            segs.append((prev, g, cfg.window))
+        segs.append((g, g + 1, 0))
+        prev = g + 1
+    if prev < Lh:
+        segs.append((prev, Lh, cfg.window))
+    return segs
+
+
+def tree_slice(tree, a, b):
+    return jax.tree.map(lambda x: x[a:b], tree)
+
+
+# ---------------------------------------------------------------------------
+# block forward (training / prefill)
+# ---------------------------------------------------------------------------
+
+def _attn_heads(cfg, p, x, positions, window):
+    """Projection + rope + blockwise attention; returns concat head outputs
+    (B, S, H*D) WITHOUT the output projection, plus (k, v) for cache fills."""
+    B, Sq, E = x.shape
+    H, KVH, D = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = jnp.einsum("bse,eh->bsh", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bse,eh->bsh", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bse,eh->bsh", x, p["wv"].astype(x.dtype))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    q = q.reshape(B, Sq, H, D)
+    k = k.reshape(B, Sq, KVH, D)
+    v = v.reshape(B, Sq, KVH, D)
+    if cfg.constrain_qkv:
+        # seq is NOT bound here: under sequence parallelism the residual
+        # stream is seq-sharded but attention runs on the gathered sequence
+        q = shard(q, "batch", None, "heads", None)
+        k = shard(k, "batch", None, "kv_heads", None)
+        v = shard(v, "batch", None, "kv_heads", None)
+    if cfg.rope:
+        q = L.rope(q, positions, cfg.rope_theta)
+        k = L.rope(k, positions, cfg.rope_theta)
+    out = L.blockwise_attention(q, k, v, chunk=cfg.attn_chunk, window=window,
+                                causal_skip=cfg.attn_mode == "causal_skip")
+    return out.reshape(B, Sq, H * D), (k, v)
+
+
+def _ssm_part(cfg, p, h, apply_out: bool):
+    sp = {k[4:]: v for k, v in p.items() if k.startswith("ssm_")}
+    return S.ssd_forward(cfg, sp, h, apply_out=apply_out)
+
+
+def _block_fwd(cfg: ModelConfig, x, p, window: int):
+    """One decoder block with a STATIC attention window (0 = full)."""
+    B, Sq, E = x.shape
+    positions = jnp.arange(Sq)[None]
+    aux = jnp.zeros((), F32)
+
+    if cfg.family == "hybrid":
+        h = L.apply_norm(cfg, p, "ln1", x)
+        attn, _ = _attn_heads(cfg, p, h, positions, window)
+        y_ssm = _ssm_part(cfg, p, h, apply_out=False)
+        a = L.rmsnorm(attn, p["fuse_attn_scale"])
+        s_ = L.rmsnorm(y_ssm, p["fuse_ssm_scale"])
+        fused = jnp.einsum("bsh,he->bse", ((a + s_) * 0.5).astype(x.dtype),
+                           p["w_fuse"].astype(x.dtype))
+        x = x + shard(fused, "batch", "seq", "embed")
+        x = x + L.mlp(cfg, p, L.apply_norm(cfg, p, "ln2", x))
+        return x, aux
+
+    if cfg.family == "ssm":
+        h = L.apply_norm(cfg, p, "ln1", x)
+        x = x + _ssm_part(cfg, p, h, apply_out=True)
+        if cfg.d_ff:
+            x = x + L.mlp(cfg, p, L.apply_norm(cfg, p, "ln2", x))
+        return x, aux
+
+    # dense / moe / audio / vlm
+    h = L.apply_norm(cfg, p, "ln1", x)
+    attn, _ = _attn_heads(cfg, p, h, positions, window)
+    x = x + shard(jnp.einsum("bsh,he->bse", attn, p["wo"].astype(x.dtype)),
+                  "batch", "seq", "embed")
+    h2 = L.apply_norm(cfg, p, "ln2", x)
+    if cfg.moe is not None:
+        mo, aux = L.moe(cfg, p, h2)
+        x = x + mo
+    else:
+        x = x + L.mlp(cfg, p, h2)
+    return x, aux
+
+
+def _remat(cfg, fn):
+    if cfg.remat == "none":
+        return fn
+    policy = (jax.checkpoint_policies.nothing_saveable if cfg.remat == "full"
+              else jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn, policy=policy, prevent_cse=False)
+
+
+def forward(cfg: ModelConfig, params: dict, inputs):
+    """Token/embedding inputs -> (hidden (B,S,E), moe-aux scalar)."""
+    dt = _dtype(cfg)
+    if inputs.ndim == 2:                                   # token ids
+        x = params["embed"].astype(dt)[inputs]
+    else:                                                  # precomputed embeds
+        x = inputs.astype(dt)
+    x = shard(x, "batch", "seq", "embed")
+    aux = jnp.zeros((), F32)
+
+    for (a, b, window) in layer_segments(cfg):
+        blk = tree_slice(params["blocks"], a, b)
+
+        def body(carry, p, _w=window):
+            x, aux = carry
+            x, da = _block_fwd(cfg, x, p, _w)
+            return (x, aux + da), None
+
+        (x, aux), _ = jax.lax.scan(_remat(cfg, body), (x, aux), blk)
+
+    if cfg.norm == "rms":
+        x = L.rmsnorm(x, params["final_scale"])
+    else:
+        x = L.layernorm(x, params["final_scale"], params["final_bias"])
+    return x, aux
+
+
+def logits_fn(cfg: ModelConfig, params: dict, x) -> jnp.ndarray:
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("...e,ev->...v", x.astype(F32), head.astype(F32))
+    if cfg.padded_vocab != cfg.vocab:    # mask padding ids everywhere
+        live = jnp.arange(cfg.padded_vocab) < cfg.vocab
+        logits = jnp.where(live, logits, -1e30)
+    if logits.ndim == 3:
+        return shard(logits, "batch", None, "vocab")
+    return shard(logits, "batch", "vocab")
+
+
+def loss_fn(cfg: ModelConfig, params: dict, batch: dict) -> jnp.ndarray:
+    """Causal-LM cross entropy (labels pre-shifted by the data pipeline)."""
+    x, aux = forward(cfg, params, batch["inputs"])
+    logits = logits_fn(cfg, params, x)
+    labels = batch["labels"]
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], -1)[..., 0]
+    ce = jnp.mean(logz - gold)
+    zloss = 1e-4 * jnp.mean(jnp.square(logz))
+    moe_w = 1e-2 if cfg.moe is not None else 0.0
+    return ce + zloss + moe_w * aux
+
+
+# ---------------------------------------------------------------------------
+# decode (serving hot path)
+# ---------------------------------------------------------------------------
+# Full-attention families decode against the hash-indexed paged KV pool
+# (serving/kvcache.py): every step translates (seq, logical_page) through the
+# continuity hash table — the paper's one-contiguous-fetch lookups — then
+# attends over gathered pages. Hybrid uses a sliding ring buffer (+ linear
+# caches for its three global layers); SSM is the O(1) recurrence.
+
+def _rope_step(cfg, q, k, positions):
+    if not cfg.rope:
+        return q, k
+    q = L.rope(q[:, None], positions[:, None], cfg.rope_theta)[:, 0]
+    k = L.rope(k[:, None], positions[:, None], cfg.rope_theta)[:, 0]
+    return q, k
+
+
+def _qkv_step(cfg, p, h, positions):
+    """h (B, E) -> q (B,H,D), k,v (B,KVH,D) with rope applied."""
+    B = h.shape[0]
+    H, KVH, D = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = jnp.einsum("be,eh->bh", h, p["wq"].astype(h.dtype))
+    k = jnp.einsum("be,eh->bh", h, p["wk"].astype(h.dtype))
+    v = jnp.einsum("be,eh->bh", h, p["wv"].astype(h.dtype))
+    if cfg.qkv_bias:
+        q, k, v = (q + p["bq"].astype(h.dtype), k + p["bk"].astype(h.dtype),
+                   v + p["bv"].astype(h.dtype))
+    q = q.reshape(B, H, D)
+    k = k.reshape(B, KVH, D)
+    v = v.reshape(B, KVH, D)
+    return (*_rope_step(cfg, q, k, positions), v)
+
+
+def _ffn_step(cfg, p, x):
+    h2 = L.apply_norm(cfg, p, "ln2", x[:, None])[:, 0]
+    if cfg.moe is not None:
+        mo, _ = L.moe(cfg, p, h2[:, None])
+        return x + mo[:, 0]
+    return x + L.mlp(cfg, p, h2)
+
+
+def _paged_layer_step(cfg, geom, p, x, lcache, page_table, cache):
+    """One decoder layer of paged decode. lcache: this layer's pool slices
+    (DS, NPl, KVH, PS, D) [+ scales]."""
+    from repro.serving import kvcache as KC
+    DS, Bl = geom.shards, geom.batch_per_shard
+    B = DS * Bl
+    positions = cache.seq_lens.reshape(B)
+    h = L.apply_norm(cfg, p, "ln1", x[:, None])[:, 0]
+    q, k, v = _qkv_step(cfg, p, h, positions)
+
+    kw, vw, ks, vs = k, v, None, None
+    if geom.kv_dtype == "int8":
+        kw, ks = KC.quant_store(k)
+        vw, vs = KC.quant_store(v)
+
+    def write(pool, val):
+        def per_shard(pool_s, page_s, off_s, val_s):
+            return pool_s.at[page_s, :, off_s].set(val_s)
+        return jax.vmap(per_shard)(pool, cache.cur_page, cache.cur_off,
+                                   val.reshape(DS, Bl, *val.shape[1:]))
+
+    lcache = dict(lcache)
+    lcache["k"] = write(lcache["k"], kw.astype(lcache["k"].dtype))
+    lcache["v"] = write(lcache["v"], vw.astype(lcache["v"].dtype))
+    if geom.kv_dtype == "int8":
+        lcache["ks"] = write(lcache["ks"], ks)
+        lcache["vs"] = write(lcache["vs"], vs)
+
+    def gather(pool):
+        return jax.vmap(lambda pool_s, pt_s: pool_s[jnp.maximum(pt_s, 0)])(
+            pool, page_table)                    # (DS,Bl,MAXP,KVH,PS,D)
+
+    kg, vg = gather(lcache["k"]), gather(lcache["v"])
+    if geom.kv_dtype == "int8":
+        kg = KC.dequant(kg, gather(lcache["ks"]), x.dtype)
+        vg = KC.dequant(vg, gather(lcache["vs"]), x.dtype)
+    if geom.merged_attn:
+        # legacy path (§Perf before/after): merging (MAXP, PS) -> T forces
+        # GSPMD to fully rematerialize the gathered cache across the mesh
+        T_ = geom.max_pages * geom.page_size
+        kf = shard(jnp.moveaxis(kg, 4, 3), "kv_shard", None, None,
+                   "page_tokens", None, None).reshape(
+                       B, T_, geom.kv_heads, geom.head_dim)
+        vf = shard(jnp.moveaxis(vg, 4, 3), "kv_shard", None, None,
+                   "page_tokens", None, None).reshape(
+                       B, T_, geom.kv_heads, geom.head_dim)
+        attn = L.decode_attention(q, kf, vf, positions + 1)
+    else:
+        # keep (MAXP, PS) UNMERGED: the page-token dim stays sharded over
+        # the model axis (split-KV decode) — softmax/value reductions turn
+        # into small all-reduces instead of a cache-sized reshard
+        kg = shard(kg, "kv_shard", None, None, "kv_heads_dec",
+                   "page_tokens", None)
+        vg = shard(vg, "kv_shard", None, None, "kv_heads_dec",
+                   "page_tokens", None)
+        attn = L.paged_decode_attention(
+            q.reshape(geom.shards, geom.batch_per_shard, *q.shape[1:]),
+            kg, vg, page_table, cache.seq_lens + 1, geom.page_size)
+    attn = attn.reshape(B, cfg.n_heads * cfg.hd)
+    x = x + jnp.einsum("bh,he->be", attn, p["wo"].astype(x.dtype))
+    return _ffn_step(cfg, p, x), lcache
+
+
+def paged_decode_step(cfg: ModelConfig, params: dict, tokens, cache, geom):
+    """tokens (B,) int32 -> (logits (B, V), updated cache). The page table is
+    re-translated through the continuity hash table every step (client
+    reads); page opening/commit bookkeeping is in serving/engine.py."""
+    from repro.serving import kvcache as KC
+    dt = _dtype(cfg)
+    B = geom.batch
+    x = shard(params["embed"].astype(dt)[tokens], "batch", "embed")
+    page_table = KC.lookup_pages(geom, cache.table, cache.seq_ids)
+
+    lpools = {"k": cache.kpool, "v": cache.vpool}
+    if geom.kv_dtype == "int8":
+        lpools.update(ks=cache.kscale, vs=cache.vscale)
+
+    def body(x, xs):
+        p, lcache = xs
+        x, lcache = _paged_layer_step(cfg, geom, p, x, lcache, page_table,
+                                      cache)
+        return x, lcache
+
+    x, pools = jax.lax.scan(body, x, (params["blocks"], lpools))
+    if cfg.norm == "rms":
+        x = L.rmsnorm(x[:, None], params["final_scale"])[:, 0]
+    else:
+        x = L.layernorm(x[:, None], params["final_scale"],
+                        params["final_bias"])[:, 0]
+    logits = logits_fn(cfg, params, x)
+    cache = cache._replace(kpool=pools["k"], vpool=pools["v"],
+                           kscale=pools.get("ks"), vscale=pools.get("vs"))
+    return logits, cache
+
+
+def ssm_decode_step(cfg: ModelConfig, params: dict, tokens, cache):
+    """SSM decode: O(1) recurrent state per layer. cache: {"S", "conv",
+    "seq_lens"} with leading layer dims on S/conv."""
+    dt = _dtype(cfg)
+    x = shard(params["embed"].astype(dt)[tokens], "batch", "embed")
+
+    def body(x, xs):
+        p, st = xs
+        sp = {k[4:]: v for k, v in p.items() if k.startswith("ssm_")}
+        h = L.apply_norm(cfg, p, "ln1", x[:, None])[:, 0]
+        y, st = S.ssd_decode(cfg, sp, h, st, apply_out=True)
+        x = x + y
+        if cfg.d_ff:
+            x = _ffn_step(cfg, p, x)
+        return x, st
+
+    x, state = jax.lax.scan(
+        body, x, (params["blocks"], {"S": cache["S"], "conv": cache["conv"]}))
+    x = L.rmsnorm(x[:, None], params["final_scale"])[:, 0]
+    logits = logits_fn(cfg, params, x)
+    new_cache = dict(cache, S=state["S"], conv=state["conv"],
+                     seq_lens=cache["seq_lens"] + 1)
+    return logits, new_cache
+
+
+def hybrid_decode_step(cfg: ModelConfig, params: dict, tokens, cache):
+    """Hybrid decode: ring-buffer window attention + linear caches for the
+    global layers + SSM state, all in parallel heads. Layers are unrolled
+    (static windows per layer)."""
+    dt = _dtype(cfg)
+    x = shard(params["embed"].astype(dt)[tokens], "batch", "embed")
+    seq_lens = cache["seq_lens"]                            # (B,)
+    B = x.shape[0]
+    W = cfg.window
+    ring_k, ring_v = cache["ring_k"], cache["ring_v"]       # (Lw,B,W,KVH,D)
+    glob_k, glob_v = cache["glob_k"], cache["glob_v"]       # (Lg,B,Smax,KVH,D)
+    ssm_S, ssm_conv = cache["S"], cache["conv"]
+
+    wi = gi = 0
+    new_rk, new_rv, new_gk, new_gv = list(ring_k), list(ring_v), \
+        list(glob_k), list(glob_v)
+    new_S, new_conv = list(ssm_S), list(ssm_conv)
+    segs = layer_segments(cfg)
+    li = 0
+    for (a, b, window) in segs:
+        for layer in range(a, b):
+            p = jax.tree.map(lambda t: t[layer], params["blocks"])
+            h = L.apply_norm(cfg, p, "ln1", x[:, None])[:, 0]
+            q, k, v = _qkv_step(cfg, p, h, seq_lens)
+            if window:                                       # ring buffer
+                slot = seq_lens % W
+                kc = ring_k[wi].at[jnp.arange(B), slot].set(k)
+                vc = ring_v[wi].at[jnp.arange(B), slot].set(v)
+                new_rk[wi], new_rv[wi] = kc, vc
+                attn = L.decode_attention(q, kc, vc, seq_lens + 1, window=W)
+                wi += 1
+            else:                                            # global linear
+                kc = glob_k[gi].at[jnp.arange(B), seq_lens].set(k)
+                vc = glob_v[gi].at[jnp.arange(B), seq_lens].set(v)
+                new_gk[gi], new_gv[gi] = kc, vc
+                attn = L.decode_attention(q, kc, vc, seq_lens + 1)
+                gi += 1
+            sp = {k2[4:]: v2 for k2, v2 in p.items() if k2.startswith("ssm_")}
+            st = {"S": ssm_S[li], "conv": ssm_conv[li]}
+            y_ssm, st = S.ssd_decode(cfg, sp, h, st, apply_out=False)
+            new_S[li], new_conv[li] = st["S"], st["conv"]
+            a_n = L.rmsnorm(attn.reshape(B, -1), p["fuse_attn_scale"])
+            s_n = L.rmsnorm(y_ssm, p["fuse_ssm_scale"])
+            fused = jnp.einsum("bh,he->be", ((a_n + s_n) * 0.5).astype(x.dtype),
+                               p["w_fuse"].astype(x.dtype))
+            x = x + fused
+            x = _ffn_step(cfg, p, x)
+            li += 1
+
+    x = L.rmsnorm(x[:, None], params["final_scale"])[:, 0]
+    logits = logits_fn(cfg, params, x)
+    new_cache = dict(cache,
+                     ring_k=jnp.stack(new_rk) if new_rk else cache["ring_k"],
+                     ring_v=jnp.stack(new_rv) if new_rv else cache["ring_v"],
+                     glob_k=jnp.stack(new_gk) if new_gk else cache["glob_k"],
+                     glob_v=jnp.stack(new_gv) if new_gv else cache["glob_v"],
+                     S=jnp.stack(new_S), conv=jnp.stack(new_conv),
+                     seq_lens=seq_lens + 1)
+    return logits, new_cache

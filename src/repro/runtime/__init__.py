@@ -1,0 +1,1 @@
+"""Cluster runtime: failure handling, elastic rescale, straggler mitigation."""

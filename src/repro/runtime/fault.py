@@ -1,0 +1,143 @@
+"""Fault tolerance and elasticity for 1000+-node deployments.
+
+TPU pods run SPMD: a single chip failure kills the step on every peer, so
+fault tolerance is structured as detect -> replace/shrink -> restore ->
+replay, not per-node recovery. This module provides the control-plane logic;
+it is exercised in simulation (tests/test_fault.py) since the container has
+one real device, and every piece composes from primitives that are real here:
+deterministic data order, two-phase checkpoints, mesh-shape-agnostic
+sharding rules.
+
+Components:
+  * HeartbeatMonitor — failure detection with configurable timeout;
+  * plan_remesh — elastic rescale: given the surviving chip count, pick the
+    largest valid mesh (data axis shrinks first — TP degree is fixed by
+    memory, DP is the elastic axis) and return the new mesh shape + the
+    steps/batches to replay;
+  * DeterministicSchedule — data order is a pure function of (step, shard),
+    so replay after restore is exact (no persisted dataloader state needed);
+  * StragglerPolicy — synchronous-collective straggler mitigation: track
+    per-host step latencies (TPU steps are globally synchronized, so the
+    slowest host IS the step time), flag persistent outliers for replacement
+    with hot spares; optional microbatch rebalancing hook.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Tuple
+
+
+@dataclasses.dataclass
+class HostState:
+    last_seen: float
+    step: int = 0
+    latencies_ms: Optional[List[float]] = None
+
+
+class HeartbeatMonitor:
+    """Failure detection. Hosts report (host_id, step) heartbeats; a host
+    silent for ``timeout_s`` is declared failed."""
+
+    def __init__(self, timeout_s: float = 30.0, clock=time.monotonic):
+        self.timeout = timeout_s
+        self.clock = clock
+        self.hosts: Dict[str, HostState] = {}
+
+    def register(self, host_id: str):
+        self.hosts[host_id] = HostState(last_seen=self.clock(),
+                                        latencies_ms=[])
+
+    def heartbeat(self, host_id: str, step: int,
+                  step_latency_ms: Optional[float] = None):
+        st = self.hosts[host_id]
+        st.last_seen = self.clock()
+        st.step = step
+        if step_latency_ms is not None:
+            st.latencies_ms.append(step_latency_ms)
+            del st.latencies_ms[:-100]
+
+    def failed_hosts(self) -> List[str]:
+        now = self.clock()
+        return [h for h, st in self.hosts.items()
+                if now - st.last_seen > self.timeout]
+
+
+@dataclasses.dataclass(frozen=True)
+class RemeshPlan:
+    mesh_shape: Tuple[int, ...]
+    mesh_axes: Tuple[str, ...]
+    restore_step: int
+    replay_steps: int
+    dropped_chips: int
+
+
+def plan_remesh(total_chips: int, failed_chips: int, model_axis: int,
+                checkpoint_step: int, current_step: int,
+                pod_axis: int = 1) -> RemeshPlan:
+    """Elastic rescale after losing ``failed_chips``.
+
+    TP (model axis) is fixed — it is set by per-chip memory. The DATA axis is
+    elastic: shrink it to the largest value that fits the survivors. Global
+    batch stays constant (microbatch count rises), so training dynamics are
+    unchanged; throughput degrades proportionally instead of stopping.
+    """
+    survivors = total_chips - failed_chips
+    per_replica = model_axis * pod_axis
+    new_data = survivors // per_replica
+    if new_data < 1:
+        raise RuntimeError("not enough survivors for one model replica")
+    shape = ((pod_axis, new_data, model_axis) if pod_axis > 1
+             else (new_data, model_axis))
+    axes = (("pod", "data", "model") if pod_axis > 1 else ("data", "model"))
+    return RemeshPlan(
+        mesh_shape=shape, mesh_axes=axes,
+        restore_step=checkpoint_step,
+        replay_steps=current_step - checkpoint_step,
+        dropped_chips=survivors - new_data * per_replica)
+
+
+class DeterministicSchedule:
+    """Data order as a pure function of (step, shard): replay-exact."""
+
+    def __init__(self, seed: int, global_batch: int):
+        self.seed = seed
+        self.global_batch = global_batch
+
+    def batch_indices(self, step: int, shard: int, num_shards: int):
+        import numpy as np
+        per = self.global_batch // num_shards
+        rng = np.random.Generator(np.random.Philox(
+            key=self.seed, counter=[0, 0, step, shard]))
+        return rng.integers(0, 2 ** 31, size=(per,), dtype=np.int64)
+
+
+@dataclasses.dataclass
+class StragglerReport:
+    host: str
+    p50_ms: float
+    host_p50_ms: float
+    severity: float
+
+
+class StragglerPolicy:
+    """Synchronous-SPMD straggler detection: a host whose median step latency
+    exceeds the fleet median by ``threshold``x is flagged (for hot-spare
+    swap at the next checkpoint boundary)."""
+
+    def __init__(self, threshold: float = 1.15, min_samples: int = 20):
+        self.threshold = threshold
+        self.min_samples = min_samples
+
+    def analyze(self, monitor: HeartbeatMonitor) -> List[StragglerReport]:
+        import numpy as np
+        meds = {h: float(np.median(st.latencies_ms))
+                for h, st in monitor.hosts.items()
+                if st.latencies_ms and len(st.latencies_ms) >= self.min_samples}
+        if len(meds) < 2:
+            return []
+        fleet = float(np.median(list(meds.values())))
+        return [StragglerReport(h, fleet, m, m / fleet)
+                for h, m in sorted(meds.items())
+                if m > fleet * self.threshold]

@@ -1,0 +1,1 @@
+"""Serving runtime: hash-indexed paged KV cache + batched decode engine."""

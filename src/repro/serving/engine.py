@@ -1,0 +1,193 @@
+"""Batched decode engine: the paper's read/write protocol on the serving path.
+
+``serve_step`` is the unit the dry-run lowers for decode shapes:
+  1. advance(): sequences crossing a page boundary get a physical page
+     allocated and the (seq, page)->phys mapping INSERTED into the continuity
+     hash table (server-side write: payload, then one atomic indicator
+     commit);
+  2. lookup_pages(): every (seq, logical page) is translated through the hash
+     table (client read: ONE contiguous segment fetch each);
+  3. the model decodes one token against the gathered pages;
+  4. commit_token().
+
+``release_sequence`` returns a finished sequence's pages (hash-table deletes:
+one indicator-bit clear each — the paper's 1-PM-write deletion) so the pool
+can be oversubscribed relative to worst-case logical space.
+
+Prefix sharing (beyond-paper feature made natural by the hash index): page
+keys may be CONTENT hashes of the token prefix, letting identical prompt
+prefixes across requests map to the same physical page (refcounted).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import continuity as ch
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.serving import kvcache as KC
+
+I32 = jnp.int32
+U32 = jnp.uint32
+
+
+def serve_step(cfg: ModelConfig, geom: Optional[KC.PageGeometry],
+               params: dict, tokens: jnp.ndarray, cache):
+    """One decode step for any family. tokens (B,) int32."""
+    if cfg.family in ("ssm",):
+        return T.ssm_decode_step(cfg, params, tokens, cache)
+    if cfg.family == "hybrid":
+        return T.hybrid_decode_step(cfg, params, tokens, cache)
+    cache = KC.advance(geom, cache)
+    logits, cache = T.paged_decode_step(cfg, params, tokens, cache, geom)
+    return logits, KC.commit_token(cache)
+
+
+def make_serve_step(cfg: ModelConfig, geom):
+    return functools.partial(serve_step, cfg, geom)
+
+
+# ---------------------------------------------------------------------------
+# prefill — fills pools page-contiguously and registers mappings
+# ---------------------------------------------------------------------------
+
+def prefill(cfg: ModelConfig, geom: KC.PageGeometry, params: dict,
+            inputs: jnp.ndarray, cache: KC.PagedCache,
+            prompt_len: Optional[int] = None):
+    """Run the full-attention forward over prompts and populate the paged
+    cache. ``inputs``: (B, S) tokens or (B, S, E) embeds; S must be a
+    multiple of page_size for the bulk page fill (pad upstream).
+
+    Returns (last-position logits (B, V), cache)."""
+    from repro.distribution.sharding import shard
+    DS, Bl, PS = geom.shards, geom.batch_per_shard, geom.page_size
+    B = DS * Bl
+    S = inputs.shape[1]
+    npages = S // PS
+    dt = T._dtype(cfg)
+
+    x = params["embed"].astype(dt)[inputs] if inputs.ndim == 2 \
+        else inputs.astype(dt)
+    x = shard(x, "batch", "seq", "embed")
+    positions = jnp.arange(S)[None]
+
+    # deterministic physical layout for prompt pages: seq-major
+    phys = (jnp.arange(Bl * npages, dtype=I32).reshape(Bl, npages)
+            [None].repeat(DS, 0)) % geom.pool_pages          # (DS,Bl,NP)
+
+    kpool, vpool = cache.kpool, cache.vpool
+
+    def body(carry, xs):
+        x, = carry
+        p, kp, vp = xs                                       # layer slice
+        h = T.L.apply_norm(cfg, p, "ln1", x)
+        attn, (k, v) = T._attn_heads(cfg, p, h, positions, cfg.window)
+        x = x + shard(jnp.einsum("bsh,he->bse", attn, p["wo"].astype(x.dtype)),
+                      "batch", "seq", "embed")
+        h2 = T.L.apply_norm(cfg, p, "ln2", x)
+        if cfg.moe is not None:
+            mo, _ = T.L.moe(cfg, p, h2)
+            x = x + mo
+        else:
+            x = x + T.L.mlp(cfg, p, h2)
+        # bulk page fill: (B,S,KVH,D) -> (DS,Bl,NP,PS,KVH,D) -> pool scatter
+        KVH, D = geom.kv_heads, geom.head_dim
+        kw = k.reshape(DS, Bl, npages, PS, KVH, D)
+        vw = v.reshape(DS, Bl, npages, PS, KVH, D)
+        kw = jnp.moveaxis(kw, 3, 4).reshape(DS, Bl * npages, KVH, PS, D)
+        vw = jnp.moveaxis(vw, 3, 4).reshape(DS, Bl * npages, KVH, PS, D)
+        pf = phys.reshape(DS, Bl * npages)
+        kp = jax.vmap(lambda pool, idx, val: pool.at[idx].set(
+            val.astype(pool.dtype)))(kp, pf, kw)
+        vp = jax.vmap(lambda pool, idx, val: pool.at[idx].set(
+            val.astype(pool.dtype)))(vp, pf, vw)
+        return (x,), (kp, vp)
+
+    (x,), (kpool, vpool) = jax.lax.scan(body, (x,),
+                                        (params["blocks"], kpool, vpool))
+    if cfg.norm == "rms":
+        x = T.L.rmsnorm(x, params["final_scale"])
+    else:
+        x = T.L.layernorm(x, params["final_scale"], params["final_bias"])
+    logits = T.logits_fn(cfg, params, x[:, -1])
+
+    # register page mappings (server-side batched inserts, scan-serialized)
+    pages = jnp.broadcast_to(jnp.arange(npages, dtype=U32), (Bl, npages))
+    keys = jax.vmap(lambda s: KC.page_keys(
+        jnp.repeat(s, npages).reshape(Bl, npages), pages))(cache.seq_ids)
+    vals = KC.page_values(phys)
+    table, ok, _ = jax.vmap(
+        lambda t, k, v: ch.insert(geom.table_cfg, t, k.reshape(-1, 4),
+                                  v.reshape(-1, 4)))(cache.table, keys, vals)
+    table = ch.ContinuityTable(*table)
+
+    plen = prompt_len if prompt_len is not None else S
+    cache = cache._replace(
+        kpool=kpool, vpool=vpool, table=table,
+        next_free=jnp.full((DS,), Bl * npages % geom.pool_pages, I32),
+        seq_lens=jnp.full((DS, Bl), plen, I32),
+        cur_page=phys[:, :, -1],
+        cur_off=jnp.full((DS, Bl), plen % PS, I32))
+    return logits, cache
+
+
+# ---------------------------------------------------------------------------
+# sequence lifecycle (host-orchestrated, device-executed)
+# ---------------------------------------------------------------------------
+
+def release_sequence(geom: KC.PageGeometry, cache: KC.PagedCache,
+                     shard_idx: int, slot: int) -> KC.PagedCache:
+    """Finish a sequence: delete its page mappings (1 PM write each — the
+    paper's atomic deletion) and recycle the slot for a new request."""
+    seq = cache.seq_ids[shard_idx, slot]
+    npages = (cache.seq_lens[shard_idx, slot] + geom.page_size - 1) \
+        // geom.page_size
+    pages = jnp.arange(geom.max_pages, dtype=U32)
+    keys = KC.page_keys(jnp.broadcast_to(seq, pages.shape), pages)
+    table_s = jax.tree.map(lambda x: x[shard_idx], cache.table)
+    table_s = ch.ContinuityTable(*table_s)
+    mask = pages < npages.astype(U32)
+    # delete only the mapped pages (scan preserves PM-write accounting)
+    table_s, ok, _ = ch.delete(geom.table_cfg, table_s,
+                               jnp.where(mask[:, None], keys, 0))
+    table = jax.tree.map(lambda full, s: full.at[shard_idx].set(s),
+                         cache.table, table_s)
+    new_id = jnp.max(cache.seq_ids) + 1
+    return cache._replace(
+        table=ch.ContinuityTable(*table),
+        seq_ids=cache.seq_ids.at[shard_idx, slot].set(new_id),
+        seq_lens=cache.seq_lens.at[shard_idx, slot].set(0),
+        cur_page=cache.cur_page.at[shard_idx, slot].set(0),
+        cur_off=cache.cur_off.at[shard_idx, slot].set(0))
+
+
+# ---------------------------------------------------------------------------
+# content-addressed prefix sharing (hash-index-native feature)
+# ---------------------------------------------------------------------------
+
+def content_page_keys(tokens: jnp.ndarray, page_size: int) -> jnp.ndarray:
+    """Rolling content hashes per page: key_p = H(key_{p-1}, tokens of page p)
+    — identical prompt prefixes yield identical page keys across requests,
+    so the hash table maps them to ONE shared physical page."""
+    from repro.core.hashfn import fold_u32, mix_pair
+    B, S = tokens.shape
+    npages = S // page_size
+    tp = tokens.reshape(B, npages, page_size).astype(U32)
+    ph = fold_u32(tp)                                        # (B, npages)
+
+    def roll(carry, h):
+        nh = mix_pair(carry, h)
+        return nh, nh
+
+    _, chained = jax.lax.scan(roll, jnp.zeros((B,), U32),
+                              jnp.moveaxis(ph, 1, 0))
+    chained = jnp.moveaxis(chained, 0, 1)                    # (B, npages)
+    pages = jnp.broadcast_to(jnp.arange(npages, dtype=U32), (B, npages))
+    return jnp.stack([chained, pages,
+                      chained ^ pages,
+                      jnp.full_like(chained, U32(0x9E3779B9))], -1)

@@ -1,0 +1,282 @@
+"""Paged KV cache whose page table IS a continuity hash table.
+
+The physical KV pool is a fixed set of pages per data shard (the "server's
+PM region"); the logical->physical mapping (sequence_id, logical_page) ->
+physical_page lives in a per-shard continuity hash table. Lookups on the
+decode hot path are the paper's client reads: ONE contiguous segment fetch
+per page translation; insertions (page allocation) are the server-side writes
+with indicator-commit atomicity.
+
+Why a hash table instead of a dense block table (the vLLM baseline, also
+provided): content-addressed keys enable cross-request prefix sharing, and
+the index survives pool oversubscription (physical pool smaller than
+worst-case logical space) — which is what makes the qwen1.5-32b decode_32k
+cell fit on a v5e pod at all (EXPERIMENTS.md §Perf).
+
+Sharding layout (see DESIGN.md §5):
+  * pools: (L, DS, NPl, KVH, PS, D) — DS = data shards (pod x data axes);
+    page-token dim PS is sharded over the MODEL axis ("split-KV" decoding:
+    works for any kv-head count, bounds per-device cache bytes at
+    total / (DS * model));
+  * page tables: one continuity table per data shard (leading DS dim,
+    vmapped ops) — the paper's one-server-per-node deployment.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import continuity as ch
+from repro.models.config import ModelConfig, ShapeConfig
+
+U32 = jnp.uint32
+I32 = jnp.int32
+
+PAGE_SALT = np.uint32(0xC0FFEE01)
+
+
+@dataclasses.dataclass(frozen=True)
+class PageGeometry:
+    layers: int
+    kv_heads: int
+    head_dim: int
+    page_size: int
+    max_pages: int            # logical pages per sequence
+    shards: int               # DS (pod x data)
+    batch_per_shard: int
+    pool_pages: int           # NPl physical pages per shard
+    kv_dtype: str             # bfloat16 | int8
+    table_cfg: ch.ContinuityConfig
+    # legacy decode path that merges (MAXP, PS) -> T before attention;
+    # forces a GSPMD involuntary remat — kept for the §Perf before/after
+    merged_attn: bool = False
+
+    @property
+    def batch(self) -> int:
+        return self.shards * self.batch_per_shard
+
+
+class PagedCache(NamedTuple):
+    kpool: jnp.ndarray          # (L, DS, NPl, KVH, PS, D) kv_dtype
+    vpool: jnp.ndarray
+    kscale: Optional[jnp.ndarray]  # (L, DS, NPl, KVH, PS, 1) f32 when int8
+    vscale: Optional[jnp.ndarray]
+    table: ch.ContinuityTable   # leading DS dim on every leaf
+    next_free: jnp.ndarray      # (DS,) int32 — physical page bump allocator
+    seq_ids: jnp.ndarray        # (DS, Bl) uint32 global sequence ids
+    seq_lens: jnp.ndarray       # (DS, Bl) int32 tokens already cached
+    cur_page: jnp.ndarray       # (DS, Bl) int32 physical id of open page
+    cur_off: jnp.ndarray        # (DS, Bl) int32 write offset in open page
+
+
+def page_table_config(geom_entries: int, load: float = 0.5) -> ch.ContinuityConfig:
+    """Size a continuity table for ``geom_entries`` page mappings/shard."""
+    cfg0 = ch.ContinuityConfig(num_buckets=2)
+    slots_per_pair = cfg0.slots_per_pair
+    pairs = max(2, int(np.ceil(geom_entries / load / slots_per_pair)))
+    return ch.ContinuityConfig(num_buckets=2 * pairs)
+
+
+def make_geometry(cfg: ModelConfig, shape: ShapeConfig, shards: int,
+                  page_size: int = 512, oversub: float = 1.0,
+                  kv_dtype: Optional[str] = None,
+                  merged_attn: bool = False) -> PageGeometry:
+    assert shape.global_batch % shards == 0, (shape.global_batch, shards)
+    bl = shape.global_batch // shards
+    maxp = (shape.seq_len + page_size - 1) // page_size
+    pool = max(1, int(np.ceil(bl * maxp * oversub)))
+    return PageGeometry(
+        layers=cfg.n_layers, kv_heads=cfg.n_kv_heads, head_dim=cfg.hd,
+        page_size=page_size, max_pages=maxp, shards=shards,
+        batch_per_shard=bl, pool_pages=pool,
+        kv_dtype=kv_dtype or cfg.kv_quant.replace("none", cfg.dtype),
+        table_cfg=page_table_config(bl * maxp),
+        merged_attn=merged_attn)
+
+
+def _pool_shape(g: PageGeometry):
+    return (g.layers, g.shards, g.pool_pages, g.kv_heads, g.page_size,
+            g.head_dim)
+
+
+def create_cache(g: PageGeometry) -> PagedCache:
+    dt = jnp.int8 if g.kv_dtype == "int8" else jnp.dtype(g.kv_dtype)
+    quant = g.kv_dtype == "int8"
+    t0 = ch.create(g.table_cfg)
+    table = jax.tree.map(lambda x: jnp.broadcast_to(x, (g.shards,) + x.shape),
+                         t0)
+    table = ch.ContinuityTable(*table)
+    DS, Bl = g.shards, g.batch_per_shard
+    return PagedCache(
+        kpool=jnp.zeros(_pool_shape(g), dt),
+        vpool=jnp.zeros(_pool_shape(g), dt),
+        kscale=jnp.zeros(_pool_shape(g)[:-1] + (1,), jnp.float32) if quant else None,
+        vscale=jnp.zeros(_pool_shape(g)[:-1] + (1,), jnp.float32) if quant else None,
+        table=table,
+        next_free=jnp.zeros((DS,), I32),
+        seq_ids=(jnp.arange(DS * Bl, dtype=U32)).reshape(DS, Bl),
+        seq_lens=jnp.zeros((DS, Bl), I32),
+        cur_page=jnp.zeros((DS, Bl), I32),
+        cur_off=jnp.zeros((DS, Bl), I32),
+    )
+
+
+def cache_logical_axes(g: PageGeometry, cache: PagedCache):
+    """Logical-axis tree matching ``cache`` (see distribution.sharding)."""
+    pool_ax = ("layers", "kv_shard", None, "kv_heads_dec", "page_tokens", None)
+    table_ax = ch.ContinuityTable(
+        keys=("kv_shard", None, None, None),
+        vals=("kv_shard", None, None, None),
+        indicator=("kv_shard", None),
+        ext_keys=("kv_shard", None, None, None),
+        ext_vals=("kv_shard", None, None, None),
+        ext_map=("kv_shard", None),
+        ext_count=("kv_shard",),
+        count=("kv_shard",),
+    )
+    return PagedCache(
+        kpool=pool_ax, vpool=pool_ax,
+        kscale=None if cache.kscale is None else pool_ax[:-1] + (None,),
+        vscale=None if cache.vscale is None else pool_ax[:-1] + (None,),
+        table=table_ax,
+        next_free=("kv_shard",),
+        seq_ids=("kv_shard", None), seq_lens=("kv_shard", None),
+        cur_page=("kv_shard", None), cur_off=("kv_shard", None),
+    )
+
+
+# -- page-key construction ---------------------------------------------------
+
+def page_keys(seq_ids: jnp.ndarray, logical_pages: jnp.ndarray) -> jnp.ndarray:
+    """(..., ) ids + pages -> (..., 4) uint32 hash keys."""
+    s = seq_ids.astype(U32)
+    p = logical_pages.astype(U32)
+    salt = jnp.broadcast_to(jnp.asarray(PAGE_SALT), s.shape)
+    return jnp.stack([s, p, s ^ p, salt], axis=-1)
+
+
+def page_values(phys: jnp.ndarray) -> jnp.ndarray:
+    z = jnp.zeros_like(phys, dtype=U32)
+    return jnp.stack([phys.astype(U32), z, z, z], axis=-1)
+
+
+# -- the paper's ops on the decode path --------------------------------------
+
+def lookup_pages(g: PageGeometry, table: ch.ContinuityTable,
+                 seq_ids: jnp.ndarray) -> jnp.ndarray:
+    """Translate every (sequence, logical page) via continuity lookup:
+    one contiguous segment fetch per translation. Returns (DS, Bl, MAXP)
+    physical ids, -1 where unmapped."""
+    DS, Bl = seq_ids.shape
+    pages = jnp.broadcast_to(jnp.arange(g.max_pages, dtype=U32),
+                             (Bl, g.max_pages))
+    keys = jax.vmap(lambda s: page_keys(
+        jnp.repeat(s, g.max_pages).reshape(Bl, g.max_pages), pages))(seq_ids)
+    flat = keys.reshape(DS, Bl * g.max_pages, 4)
+    res = jax.vmap(lambda t, k: ch.lookup(g.table_cfg, t, k))(table, flat)
+    phys = jnp.where(res.found, res.values[..., 0].astype(I32), -1)
+    return phys.reshape(DS, Bl, g.max_pages)
+
+
+def open_new_pages(g: PageGeometry, cache: PagedCache,
+                   need: jnp.ndarray) -> PagedCache:
+    """Allocate a physical page for each sequence with ``need`` set, insert
+    the (seq, page) -> phys mapping into the hash table (server-side write:
+    payload slots first, ONE atomic indicator commit), and open the page."""
+    DS, Bl = need.shape
+    rank = jnp.cumsum(need.astype(I32), axis=1) - 1          # alloc order
+    phys = (cache.next_free[:, None] + rank) % g.pool_pages  # bump (+wrap)
+    logical = cache.seq_lens // g.page_size                  # page being opened
+    keys = page_keys(cache.seq_ids, logical)                 # (DS, Bl, 4)
+    vals = page_values(phys)
+    # insert_parallel defers same-pair duplicates within a batch (batch-order
+    # priority == the paper's lock order); loop until the retry set drains.
+    table, pending = cache.table, need
+    for _ in range(min(Bl, 8)):
+        table, ok, pending = jax.vmap(
+            lambda t, k, v, m: ch.insert_parallel(g.table_cfg, t, k, v, m)
+        )(table, keys.reshape(DS, Bl, 4), vals.reshape(DS, Bl, 4), pending)
+        table = ch.ContinuityTable(*table)
+    nf = cache.next_free + jnp.sum(need, axis=1).astype(I32)
+    return cache._replace(
+        table=table,
+        next_free=nf,
+        cur_page=jnp.where(need, phys, cache.cur_page),
+        cur_off=jnp.where(need, 0, cache.cur_off),
+    )
+
+
+def advance(g: PageGeometry, cache: PagedCache) -> PagedCache:
+    """Pre-step bookkeeping: open a fresh page for sequences whose next token
+    starts a new logical page."""
+    need = (cache.seq_lens % g.page_size) == 0
+    cache = open_new_pages(g, cache, need)
+    return cache._replace(cur_off=cache.seq_lens % g.page_size)
+
+
+def commit_token(cache: PagedCache) -> PagedCache:
+    """Post-step: the new token is now cached."""
+    return cache._replace(seq_lens=cache.seq_lens + 1)
+
+
+# -- int8 quantization (beyond-paper serving optimization) -------------------
+
+def quant_store(x: jnp.ndarray):
+    """Symmetric per-(token, head) int8 quant. x: (..., D) -> (int8, scale)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def dequant(q: jnp.ndarray, scale: jnp.ndarray, dtype) -> jnp.ndarray:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+# -- recurrent/window caches (ssm & hybrid families) --------------------------
+
+def create_state_cache(cfg: ModelConfig, batch: int, max_seq: int,
+                       dtype=jnp.bfloat16) -> dict:
+    """Cache for SSM (recurrent state) and hybrid (ring window + linear
+    global caches + recurrent state) architectures."""
+    from repro.models import ssm as S
+    from repro.models import transformer as T
+    d_inner, nheads, conv_ch = S.ssm_dims(cfg)
+    s = cfg.ssm
+    cache = {
+        "S": jnp.zeros((cfg.n_layers, batch, nheads, s.d_state, s.head_dim),
+                       jnp.float32),
+        "conv": jnp.zeros((cfg.n_layers, batch, s.conv_width - 1, conv_ch),
+                          dtype),
+        "seq_lens": jnp.zeros((batch,), I32),
+    }
+    if cfg.family == "hybrid":
+        segs = T.layer_segments(cfg)
+        n_win = sum(b - a for a, b, w in segs if w)
+        n_glob = sum(b - a for a, b, w in segs if not w)
+        KVH, D = cfg.n_kv_heads, cfg.hd
+        cache.update(
+            ring_k=jnp.zeros((n_win, batch, cfg.window, KVH, D), dtype),
+            ring_v=jnp.zeros((n_win, batch, cfg.window, KVH, D), dtype),
+            glob_k=jnp.zeros((n_glob, batch, max_seq, KVH, D), dtype),
+            glob_v=jnp.zeros((n_glob, batch, max_seq, KVH, D), dtype),
+        )
+    return cache
+
+
+def state_cache_logical_axes(cfg: ModelConfig, cache: dict) -> dict:
+    ax = {
+        "S": ("layers", "batch", "ssm_heads", None, None),
+        "conv": ("layers", "batch", None, None),
+        "seq_lens": ("batch",),
+    }
+    if "ring_k" in cache:
+        win = ("layers", "batch", "page_tokens", "kv_heads_dec", None)
+        ax.update(ring_k=win, ring_v=win, glob_k=win, glob_v=win)
+    return ax

@@ -1,0 +1,109 @@
+"""AdamW with ZeRO-1-style optimizer-state sharding (no optax available).
+
+Master params are f32 (models cast to bf16 at use sites); m/v moments are f32.
+With ``zero1=True`` the moments are additionally sharded over the DATA axis on
+the largest divisible dim of each leaf — GSPMD inserts the reduce-scatter /
+all-gather pair around the elementwise update, which is exactly the ZeRO-1
+communication pattern.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup: int = 100
+    decay_steps: int = 10000
+    zero1: bool = True
+    grad_dtype: str = "float32"   # bfloat16 => compressed DP all-reduce
+
+
+class OptState(NamedTuple):
+    m: dict
+    v: dict
+    step: jnp.ndarray
+
+
+def init(params) -> OptState:
+    z = lambda p: jnp.zeros(p.shape, F32)
+    return OptState(m=jax.tree.map(z, params), v=jax.tree.map(z, params),
+                    step=jnp.zeros((), jnp.int32))
+
+
+def schedule(cfg: OptConfig, step):
+    warm = jnp.minimum(step / max(cfg.warmup, 1), 1.0)
+    t = jnp.clip((step - cfg.warmup) / max(cfg.decay_steps - cfg.warmup, 1),
+                 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return cfg.lr * warm * (0.1 + 0.9 * cos)
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(F32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def apply_updates(cfg: OptConfig, params, grads, state: OptState):
+    """One AdamW step; returns (params, state, stats)."""
+    step = state.step + 1
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gn + 1e-9))
+    lr = schedule(cfg, step)
+    c1 = 1 - cfg.b1 ** step.astype(F32)
+    c2 = 1 - cfg.b2 ** step.astype(F32)
+
+    def upd(p, g, m, v):
+        g = g.astype(F32) * scale
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        mh = m / c1
+        vh = v / c2
+        step_dir = mh / (jnp.sqrt(vh) + cfg.eps)
+        wd = cfg.weight_decay if p.ndim >= 2 else 0.0
+        newp = p.astype(F32) - lr * (step_dir + wd * p.astype(F32))
+        return newp.astype(p.dtype), m, v
+
+    out = jax.tree.map(upd, params, grads, state.m, state.v)
+    leaves, treedef = jax.tree.flatten(out, is_leaf=lambda x: isinstance(x, tuple))
+    newp = treedef.unflatten([l[0] for l in leaves])
+    newm = treedef.unflatten([l[1] for l in leaves])
+    newv = treedef.unflatten([l[2] for l in leaves])
+    return newp, OptState(newm, newv, step), {"grad_norm": gn, "lr": lr}
+
+
+def opt_logical_axes(param_axes: dict, params, data_extent: int,
+                     zero1: bool) -> dict:
+    """Logical axes for m/v: param axes + ZeRO-1 sharding over the data axis
+    on the largest divisible dim whose logical name maps to NO mesh axis
+    (i.e. a dim the TP rules leave replicated)."""
+    from repro.distribution.sharding import get_rules
+    rules = get_rules()
+
+    def leaf(ax, p):
+        ax = tuple(ax) if ax else (None,) * p.ndim
+        if not zero1:
+            return ax
+        best, best_dim = -1, -1
+        for i, (name, dim) in enumerate(zip(ax, p.shape)):
+            free = name is None or not rules.get(name)
+            if free and dim % data_extent == 0 and dim > best:
+                best, best_dim = dim, i
+        if best_dim < 0:
+            return ax
+        return tuple("zero" if i == best_dim else n for i, n in enumerate(ax))
+    return jax.tree.map(leaf, param_axes, params,
+                        is_leaf=lambda x: isinstance(x, tuple) or x is None)

@@ -1,0 +1,64 @@
+"""Train step: value_and_grad + microbatch accumulation + AdamW.
+
+Distributed behaviour falls out of GSPMD: the batch is sharded over
+(pod, data), parameters over model (+ZeRO'd moments over data), so autodiff's
+mean-loss gradient produces the DP all-reduce, and ``grad_dtype="bfloat16"``
+halves that all-reduce's payload (gradient compression; the moments stay f32
+so the update is exact up to the cast).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.training import optimizer as O
+
+F32 = jnp.float32
+
+
+def microbatch_grads(cfg: ModelConfig, params, batch, num_micro: int,
+                     grad_dtype):
+    """Gradient accumulation over ``num_micro`` microbatches via lax.scan."""
+    def lossf(p, mb):
+        return T.loss_fn(cfg, p, mb)
+
+    if num_micro <= 1:
+        loss, grads = jax.value_and_grad(lossf)(params, batch)
+        return loss, jax.tree.map(lambda g: g.astype(grad_dtype), grads)
+
+    def split(x):
+        return x.reshape(num_micro, x.shape[0] // num_micro, *x.shape[1:])
+
+    mbs = jax.tree.map(split, batch)
+
+    def step(carry, mb):
+        acc, ls = carry
+        loss, grads = jax.value_and_grad(lossf)(params, mb)
+        acc = jax.tree.map(lambda a, g: a + g.astype(grad_dtype), acc, grads)
+        return (acc, ls + loss), None
+
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, grad_dtype), params)
+    (acc, ls), _ = jax.lax.scan(step, (zeros, jnp.zeros((), F32)), mbs)
+    inv = 1.0 / num_micro
+    return ls * inv, jax.tree.map(lambda g: g * inv, acc)
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: O.OptConfig,
+                    num_micro: int = 1):
+    grad_dtype = jnp.dtype(opt_cfg.grad_dtype)
+
+    def train_step(params, opt_state, batch):
+        loss, grads = microbatch_grads(cfg, params, batch, num_micro,
+                                       grad_dtype)
+        params, opt_state, stats = O.apply_updates(opt_cfg, params, grads,
+                                                   opt_state)
+        stats["loss"] = loss
+        return params, opt_state, stats
+
+    return train_step

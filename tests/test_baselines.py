@@ -1,0 +1,104 @@
+"""Level hashing and P-FaRM-KV baselines: semantics + paper counters."""
+
+import numpy as np
+
+import repro.core.level as lv
+import repro.core.pfarm as pf
+from repro.data import ycsb
+
+
+def kv(n, seed=0):
+    return (ycsb.make_key(np.arange(n)),
+            ycsb.make_value(np.random.RandomState(seed), n))
+
+
+class TestLevel:
+    CFG = lv.LevelConfig(num_top=64)
+
+    def test_roundtrip(self):
+        t = lv.create(self.CFG)
+        K, V = kv(150)
+        t, ok, ctr = lv.insert(self.CFG, t, K, V)
+        okn = np.asarray(ok)
+        assert okn.sum() > 140
+        res = lv.lookup(self.CFG, t, K)
+        assert np.asarray(res.found)[okn].all()
+        np.testing.assert_array_equal(np.asarray(res.values)[okn], V[okn])
+
+    def test_pm_writes_band(self):
+        """Paper Table I: insert 2–2.01, update 2–5, delete 1."""
+        t = lv.create(self.CFG)
+        K, V = kv(180)
+        t, ok, ci = lv.insert(self.CFG, t, K, V)
+        per_ins = float(ci.pm_writes) / float(np.asarray(ok).sum())
+        assert 2.0 <= per_ins <= 2.2
+        t, uok, cu = lv.update(self.CFG, t, K, kv(180, 1)[1])
+        per_upd = float(cu.pm_writes) / max(float(np.asarray(uok).sum()), 1)
+        assert 2.0 <= per_upd <= 5.0
+        t, dok, cd = lv.delete(self.CFG, t, K[:50])
+        assert float(cd.pm_writes) == float(np.asarray(dok).sum())
+
+    def test_negative_search_reads_four_buckets(self):
+        t = lv.create(self.CFG)
+        K, V = kv(100)
+        t, _, _ = lv.insert(self.CFG, t, K, V)
+        neg = ycsb.negative_keys(np.random.RandomState(2), 100, 300)
+        res = lv.lookup(self.CFG, t, neg)
+        assert not np.asarray(res.found).any()
+        # paper: negative searches probe all (<=4) candidate buckets
+        assert 3.5 <= float(np.mean(np.asarray(res.reads))) <= 4.0
+
+    def test_update_moves_or_logs(self):
+        t = lv.create(self.CFG)
+        K, V = kv(100)
+        t, _, _ = lv.insert(self.CFG, t, K, V)
+        V2 = kv(100, 3)[1]
+        t, ok, _ = lv.update(self.CFG, t, K, V2)
+        res = lv.lookup(self.CFG, t, K)
+        u = np.asarray(ok)
+        np.testing.assert_array_equal(np.asarray(res.values)[u], V2[u])
+
+
+class TestPFarm:
+    CFG = pf.PFarmConfig(num_buckets=64)
+
+    def test_roundtrip_with_chains(self):
+        t = pf.create(self.CFG)
+        K, V = kv(250)
+        t, ok, ctr = pf.insert(self.CFG, t, K, V)
+        okn = np.asarray(ok)
+        assert okn.sum() > 230
+        res = pf.lookup(self.CFG, t, K)
+        assert np.asarray(res.found)[okn].all()
+        np.testing.assert_array_equal(np.asarray(res.values)[okn], V[okn])
+
+    def test_recipe_logging_cost(self):
+        """Paper Table I: 5 PM writes for every op type."""
+        t = pf.create(self.CFG)
+        K, V = kv(100)
+        t, ok, ci = pf.insert(self.CFG, t, K, V)
+        n = float(np.asarray(ok).sum())
+        assert float(ci.pm_writes) == 5 * n
+        t, uok, cu = pf.update(self.CFG, t, K, kv(100, 1)[1])
+        assert float(cu.pm_writes) == 5 * float(np.asarray(uok).sum())
+        t, dok, cd = pf.delete(self.CFG, t, K[:30])
+        assert float(cd.pm_writes) == 5 * float(np.asarray(dok).sum())
+
+    def test_window_is_single_read_until_chained(self):
+        t = pf.create(self.CFG)
+        K, V = kv(100)
+        t, ok, _ = pf.insert(self.CFG, t, K, V)
+        res = pf.lookup(self.CFG, t, K)
+        okn = np.asarray(ok)
+        if int(t.ocount) == 0:
+            assert int(np.asarray(res.reads)[okn].max()) == 1
+        else:
+            assert int(np.asarray(res.reads)[okn].max()) <= 1 + self.CFG.max_chain
+
+    def test_delete_then_lookup_missing(self):
+        t = pf.create(self.CFG)
+        K, V = kv(60)
+        t, _, _ = pf.insert(self.CFG, t, K, V)
+        t, dok, _ = pf.delete(self.CFG, t, K[:30])
+        res = pf.lookup(self.CFG, t, K[:30])
+        assert not np.asarray(res.found)[np.asarray(dok)].any()

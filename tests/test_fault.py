@@ -1,0 +1,73 @@
+"""Fault-tolerance runtime: detection, elastic remesh, stragglers, replay."""
+
+import numpy as np
+import pytest
+
+from repro.runtime.fault import (DeterministicSchedule, HeartbeatMonitor,
+                                 StragglerPolicy, plan_remesh)
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def test_heartbeat_detects_silence():
+    clk = FakeClock()
+    mon = HeartbeatMonitor(timeout_s=10, clock=clk)
+    for h in ("host0", "host1", "host2"):
+        mon.register(h)
+    clk.t = 5
+    mon.heartbeat("host0", 1)
+    mon.heartbeat("host1", 1)
+    clk.t = 12
+    assert mon.failed_hosts() == ["host2"]
+    clk.t = 25
+    assert set(mon.failed_hosts()) == {"host0", "host1", "host2"}
+
+
+def test_remesh_shrinks_data_axis():
+    plan = plan_remesh(total_chips=256, failed_chips=16, model_axis=16,
+                       checkpoint_step=900, current_step=942)
+    assert plan.mesh_shape == (15, 16)
+    assert plan.replay_steps == 42
+    assert plan.dropped_chips == 0
+
+
+def test_remesh_multi_pod_and_exhaustion():
+    plan = plan_remesh(total_chips=512, failed_chips=20, model_axis=16,
+                       checkpoint_step=0, current_step=5, pod_axis=2)
+    assert plan.mesh_shape == (2, 15, 16)
+    assert plan.dropped_chips == 492 - 480
+    with pytest.raises(RuntimeError):
+        plan_remesh(total_chips=16, failed_chips=15, model_axis=16,
+                    checkpoint_step=0, current_step=0)
+
+
+def test_deterministic_schedule_replay_exact():
+    sched = DeterministicSchedule(seed=42, global_batch=256)
+    a = sched.batch_indices(step=10, shard=3, num_shards=16)
+    b = sched.batch_indices(step=10, shard=3, num_shards=16)
+    np.testing.assert_array_equal(a, b)
+    c = sched.batch_indices(step=11, shard=3, num_shards=16)
+    assert (a != c).any()
+    d = sched.batch_indices(step=10, shard=4, num_shards=16)
+    assert (a != d).any()
+
+
+def test_straggler_detection():
+    clk = FakeClock()
+    mon = HeartbeatMonitor(timeout_s=1e9, clock=clk)
+    rng = np.random.RandomState(0)
+    for h in range(8):
+        mon.register(f"h{h}")
+    for step in range(30):
+        for h in range(8):
+            lat = 100 + rng.rand() * 2 + (40 if h == 5 else 0)
+            mon.heartbeat(f"h{h}", step, step_latency_ms=lat)
+    reports = StragglerPolicy(threshold=1.15).analyze(mon)
+    assert [r.host for r in reports] == ["h5"]
+    assert reports[0].severity > 1.3

@@ -1,0 +1,124 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.paged_attn import paged_attention
+from repro.kernels.paged_attn_ref import paged_attention_ref
+from repro.kernels.probe import probe_segments
+from repro.kernels.probe_ref import probe_ref
+
+BIG = 0x7FFFFFFF
+
+
+def make_probe_case(rng, P, S, KL, B, planted_frac=0.5):
+    rows = rng.randint(0, 2 ** 31, size=(P, S * KL)).astype(np.uint32)
+    ind = rng.randint(0, 2 ** S if S < 31 else 2 ** 31,
+                      size=(P, 1)).astype(np.uint32)
+    seg = (S * 4) // 5
+    prio = np.full((2, S), BIG, np.int32)
+    prio[0, :seg] = np.arange(seg)
+    odd = list(range(S - 1, S - 1 - seg, -1))
+    prio[1, odd] = np.arange(seg)
+    pairs = rng.randint(0, P, size=(B,)).astype(np.int32)
+    parity = rng.randint(0, 2, size=(B,)).astype(np.int32)
+    qkeys = rng.randint(0, 2 ** 31, size=(B, KL)).astype(np.uint32)
+    for i in range(0, B, max(int(1 / max(planted_frac, 1e-9)), 1)):
+        s = rng.randint(0, S)
+        qkeys[i] = rows[pairs[i], s * KL:(s + 1) * KL]
+    return rows, ind, prio, pairs, parity, qkeys
+
+
+@pytest.mark.parametrize("P,S,B", [(8, 20, 16), (32, 20, 64), (16, 10, 33),
+                                   (64, 30, 128), (4, 20, 7)])
+def test_probe_kernel_matches_oracle(P, S, B):
+    rng = np.random.RandomState(P * 1000 + B)
+    args = [jnp.asarray(a) for a in make_probe_case(rng, P, S, 4, B)]
+    m1, e1 = probe_segments(*args)
+    m2, e2 = probe_ref(*args)
+    np.testing.assert_array_equal(np.asarray(m1), np.asarray(m2))
+    np.testing.assert_array_equal(np.asarray(e1), np.asarray(e2))
+
+
+def test_probe_kernel_full_and_empty_tables():
+    rng = np.random.RandomState(0)
+    rows, ind, prio, pairs, parity, qkeys = make_probe_case(rng, 8, 20, 4, 32)
+    for fill in (0, 0xFFFFF):   # empty / all-20-main-bits-set
+        indc = np.full_like(ind, fill)
+        m1, e1 = probe_segments(*[jnp.asarray(a) for a in
+                                  (rows, indc, prio, pairs, parity, qkeys)])
+        m2, e2 = probe_ref(*[jnp.asarray(a) for a in
+                             (rows, indc, prio, pairs, parity, qkeys)])
+        np.testing.assert_array_equal(np.asarray(m1), np.asarray(m2))
+        np.testing.assert_array_equal(np.asarray(e1), np.asarray(e2))
+
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 2e-5),
+                                       (jnp.bfloat16, 6e-2)])
+@pytest.mark.parametrize("B,H,KVH,D,PS,MAXP", [
+    (2, 4, 1, 16, 8, 3),
+    (3, 8, 2, 32, 16, 4),
+    (1, 16, 4, 64, 32, 2),
+    (4, 4, 4, 16, 8, 5),       # MHA (G=1, padded to 8 by ops wrapper)
+])
+def test_paged_attention_matches_oracle(dtype, tol, B, H, KVH, D, PS, MAXP):
+    rng = np.random.RandomState(B * 100 + H)
+    NP = B * MAXP + 2
+    q = (rng.randn(B, H, D) * 0.5).astype(np.float32)
+    kp = (rng.randn(NP, KVH, PS, D) * 0.3).astype(np.float32)
+    vp = rng.randn(NP, KVH, PS, D).astype(np.float32)
+    pt = np.full((B, MAXP), -1, np.int32)
+    lens = rng.randint(1, MAXP * PS, size=(B,)).astype(np.int32)
+    perm = rng.permutation(NP)
+    c = 0
+    for b in range(B):
+        for p in range(int(np.ceil(lens[b] / PS))):
+            pt[b, p] = perm[c]
+            c += 1
+    args = (jnp.asarray(q, dtype), jnp.asarray(kp, dtype),
+            jnp.asarray(vp, dtype), jnp.asarray(pt), jnp.asarray(lens))
+    from repro.kernels.ops import paged_attention as pa_padded
+    o1 = pa_padded(*args)
+    o2 = paged_attention_ref(*args)
+    err = np.max(np.abs(np.asarray(o1, np.float32)
+                        - np.asarray(o2, np.float32)))
+    assert err < tol, err
+
+
+def test_paged_attention_ignores_dead_pages():
+    """Garbage in unmapped pool pages must not leak into the output."""
+    rng = np.random.RandomState(7)
+    B, H, KVH, D, PS, MAXP, NP = 2, 4, 2, 16, 8, 4, 16
+    q = rng.randn(B, H, D).astype(np.float32)
+    kp = rng.randn(NP, KVH, PS, D).astype(np.float32)
+    vp = rng.randn(NP, KVH, PS, D).astype(np.float32)
+    pt = np.full((B, MAXP), -1, np.int32)
+    pt[:, 0] = [0, 1]
+    lens = np.array([5, 3], np.int32)
+    from repro.kernels.ops import paged_attention as pa
+    base = np.asarray(pa(jnp.asarray(q), jnp.asarray(kp), jnp.asarray(vp),
+                         jnp.asarray(pt), jnp.asarray(lens)))
+    kp2, vp2 = kp.copy(), vp.copy()
+    kp2[2:] = 1e3
+    vp2[2:] = -1e3                      # poison every unmapped page
+    out = np.asarray(pa(jnp.asarray(q), jnp.asarray(kp2), jnp.asarray(vp2),
+                        jnp.asarray(pt), jnp.asarray(lens)))
+    np.testing.assert_allclose(out, base, rtol=1e-6)
+
+
+def test_probe_table_consistent_with_lookup():
+    import repro.core.continuity as ch
+    from repro.data import ycsb
+    from repro.kernels import probe_table
+    cfg = ch.ContinuityConfig(num_buckets=64)
+    t = ch.create(cfg)
+    K = ycsb.make_key(np.arange(120))
+    V = ycsb.make_value(np.random.RandomState(3), 120)
+    t, ok, _ = ch.insert(cfg, t, K, V)
+    match, empty, pair, parity = probe_table(cfg, t, K)
+    res = ch.lookup(cfg, t, K)
+    slot = np.asarray(res.slot)
+    main = (slot >= 0) & (slot < cfg.slots_per_pair)
+    np.testing.assert_array_equal(np.asarray(match)[main], slot[main])

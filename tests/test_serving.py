@@ -1,0 +1,148 @@
+"""Serving engine: paged/ssm/hybrid decode == training forward; page-table
+lifecycle; prefix sharing; int8 KV quantization."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.models import transformer as T
+from repro.models.config import ShapeConfig
+from repro.serving import engine as E
+from repro.serving import kvcache as KC
+
+KEY = jax.random.PRNGKey(0)
+
+
+def run_decode(cfg, geom, params, cache, toks):
+    step = jax.jit(lambda p, t, c: E.serve_step(cfg, geom, p, t, c))
+    lg = None
+    for t in range(toks.shape[1]):
+        lg, cache = step(params, toks[:, t], cache)
+    return lg, cache
+
+
+def forward_last_logits(cfg, params, toks):
+    x, _ = T.forward(cfg, params, toks)
+    return T.logits_fn(cfg, params, x)[:, -1]
+
+
+class TestPagedDecode:
+    def setup_method(self, _):
+        self.cfg = smoke_config("yi-6b")
+        self.params = T.init_params(self.cfg, KEY)
+        self.shape = ShapeConfig("t", seq_len=128, global_batch=4,
+                                 kind="decode")
+
+    def test_decode_matches_forward(self):
+        geom = KC.make_geometry(self.cfg, self.shape, shards=2, page_size=16)
+        cache = KC.create_cache(geom)
+        toks = jax.random.randint(jax.random.PRNGKey(1), (4, 40), 0,
+                                  self.cfg.vocab)
+        lg, cache = run_decode(self.cfg, geom, self.params, cache, toks)
+        ref = forward_last_logits(self.cfg, self.params, toks)
+        np.testing.assert_allclose(np.asarray(lg), np.asarray(ref),
+                                   atol=3e-3, rtol=1e-3)
+        # pages opened: ceil(40/16)=3 per sequence
+        assert int(cache.table.count.sum()) == 4 * 3
+
+    def test_prefill_then_decode(self):
+        geom = KC.make_geometry(self.cfg, self.shape, shards=2, page_size=16)
+        cache = KC.create_cache(geom)
+        toks = jax.random.randint(jax.random.PRNGKey(2), (4, 32), 0,
+                                  self.cfg.vocab)
+        lg, cache = E.prefill(self.cfg, geom, self.params, toks, cache)
+        np.testing.assert_allclose(
+            np.asarray(lg), np.asarray(forward_last_logits(
+                self.cfg, self.params, toks)), atol=3e-3, rtol=1e-3)
+        nxt = jnp.argmax(lg, -1).astype(jnp.int32)
+        lg2, cache = jax.jit(lambda p, t, c: E.serve_step(
+            self.cfg, geom, p, t, c))(self.params, nxt, cache)
+        full = jnp.concatenate([toks, nxt[:, None]], 1)
+        np.testing.assert_allclose(
+            np.asarray(lg2), np.asarray(forward_last_logits(
+                self.cfg, self.params, full)), atol=3e-3, rtol=1e-3)
+
+    def test_int8_kv_quantization_close(self):
+        geom = KC.make_geometry(self.cfg, self.shape, shards=2, page_size=16,
+                                kv_dtype="int8")
+        cache = KC.create_cache(geom)
+        assert cache.kscale is not None
+        toks = jax.random.randint(jax.random.PRNGKey(3), (4, 24), 0,
+                                  self.cfg.vocab)
+        lg, _ = run_decode(self.cfg, geom, self.params, cache, toks)
+        ref = forward_last_logits(self.cfg, self.params, toks)
+        # int8 KV: small degradation allowed, ranking should agree
+        match = (np.argmax(np.asarray(lg), -1)
+                 == np.argmax(np.asarray(ref), -1)).mean()
+        assert match >= 0.75, match
+
+    def test_release_sequence_recycles(self):
+        geom = KC.make_geometry(self.cfg, self.shape, shards=2, page_size=16)
+        cache = KC.create_cache(geom)
+        toks = jax.random.randint(jax.random.PRNGKey(4), (4, 20), 0,
+                                  self.cfg.vocab)
+        _, cache = run_decode(self.cfg, geom, self.params, cache, toks)
+        n0 = int(cache.table.count.sum())
+        cache = E.release_sequence(geom, cache, shard_idx=0, slot=0)
+        assert int(cache.table.count.sum()) < n0
+        assert int(cache.seq_lens[0, 0]) == 0
+        # released seq id replaced with a fresh (never-used) one
+        assert int(cache.seq_ids[0, 0]) >= 4
+
+
+class TestOversubscription:
+    def test_pool_smaller_than_logical(self):
+        """The hash index keeps working when the physical pool is half the
+        worst-case logical page space (sequences stay short)."""
+        cfg = smoke_config("yi-6b")
+        params = T.init_params(cfg, KEY)
+        shape = ShapeConfig("t", seq_len=128, global_batch=4, kind="decode")
+        geom = KC.make_geometry(cfg, shape, shards=2, page_size=16,
+                                oversub=0.5)
+        assert geom.pool_pages == 8          # vs 16 worst-case
+        cache = KC.create_cache(geom)
+        toks = jax.random.randint(jax.random.PRNGKey(5), (4, 40), 0,
+                                  cfg.vocab)
+        lg, cache = run_decode(cfg, geom, params, cache, toks)
+        ref = forward_last_logits(cfg, params, toks)
+        np.testing.assert_allclose(np.asarray(lg), np.asarray(ref),
+                                   atol=3e-3, rtol=1e-3)
+
+
+class TestRecurrentDecode:
+    @pytest.mark.parametrize("arch,steps", [("mamba2-370m", 40),
+                                            ("hymba-1.5b", 100)])
+    def test_decode_matches_forward(self, arch, steps):
+        cfg = smoke_config(arch)
+        params = T.init_params(cfg, KEY)
+        cache = KC.create_state_cache(cfg, 2, 256, dtype=jnp.float32)
+        step = jax.jit(lambda p, t, c: E.serve_step(cfg, None, p, t, c))
+        toks = jax.random.randint(jax.random.PRNGKey(6), (2, steps), 0,
+                                  cfg.vocab)
+        lg = None
+        for t in range(steps):
+            lg, cache = step(params, toks[:, t], cache)
+        ref = forward_last_logits(cfg, params, toks)
+        np.testing.assert_allclose(np.asarray(lg), np.asarray(ref),
+                                   atol=3e-3, rtol=1e-3)
+
+
+class TestPrefixSharing:
+    def test_content_keys_dedupe(self):
+        from repro.serving.engine import content_page_keys
+        toks = np.random.RandomState(0).randint(0, 99, size=(6, 64)
+                                                ).astype(np.int32)
+        toks[3:] = toks[:3]
+        keys = np.asarray(content_page_keys(jnp.asarray(toks), 16))
+        np.testing.assert_array_equal(keys[:3], keys[3:])
+        # rolling hash: diverge after the first differing page
+        toks2 = toks.copy()
+        toks2[0, 20] += 1                     # page 1 differs for seq 0
+        keys2 = np.asarray(content_page_keys(jnp.asarray(toks2), 16))
+        np.testing.assert_array_equal(keys2[0, 0], keys[0, 0])
+        assert (keys2[0, 1] != keys[0, 1]).any()
+        assert (keys2[0, 2] != keys[0, 2]).any()   # chained
