@@ -10,7 +10,10 @@ Artifacts reproduced (see EXPERIMENTS.md §Paper-validation):
   * Fig 18     — load factor at each resize for none / 1/20 / 1/10
                  added-SBucket policies;
   * access amplification — contiguous fetches per lookup (continuity 1 vs
-                 level <=4 vs pfarm 1+chain) and bytes fetched per lookup.
+                 level <=4 vs pfarm 1+chain) and bytes fetched per lookup;
+  * write-batch sweep — serial lax.scan vs wave-vectorized mutation engine
+                 at batch sizes {64, 512, 4096} (EXPERIMENTS.md §Perf;
+                 emitted as BENCH_hash.json by benchmarks.run).
 """
 
 from __future__ import annotations
@@ -174,6 +177,51 @@ def bench_load_factor(rows):
             cfg, table = ch.resize(cfg, table)
         rows.append((f"load_factor[{label}]", 0.0,
                      " ".join(f"{x:.2f}" for x in lfs)))
+
+
+def bench_write_batch_sweep(rows, batches=(64, 512, 4096), iters=3):
+    """Serial-scan vs wave-vectorized write paths across batch sizes.
+
+    Returns the BENCH_hash.json payload: per (op, path, batch) ops/s and the
+    exact PM-write counters. The counters MATCH between paths whenever the
+    extension pool is not exhausted mid-batch — true for every config in
+    this sweep (the engine is an execution-strategy change, not a protocol
+    change; see ``continuity.insert`` for the exhaustion caveat).
+    """
+    import repro.core.continuity as ch
+    from benchmarks.common import timeit
+    rng = np.random.RandomState(7)
+    sweep = {}
+    for B in batches:
+        pairs = max(4096, 4 * B) // 20
+        cfg = ch.ContinuityConfig(num_buckets=2 * pairs)
+        K = ycsb.make_key(np.arange(B))
+        V = ycsb.make_value(rng, B)
+        V2 = ycsb.make_value(rng, B)
+        base = ch.create(cfg)
+        loaded, _, _ = ch.insert(cfg, base, K, V)   # for update/delete timing
+        cases = {
+            "insert": {"serial": lambda: ch.insert_serial(cfg, base, K, V),
+                       "wave": lambda: ch.insert(cfg, base, K, V)},
+            "update": {"serial": lambda: ch.update_serial(cfg, loaded, K, V2),
+                       "wave": lambda: ch.update(cfg, loaded, K, V2)},
+            "delete": {"serial": lambda: ch.delete_serial(cfg, loaded, K),
+                       "wave": lambda: ch.delete(cfg, loaded, K)},
+        }
+        for op, paths in cases.items():
+            for path, fn in paths.items():
+                med, (_, ok, ctr) = timeit(fn, warmup=1, iters=iters)
+                cell = {"ops_per_s": B / med, "us_per_op": med / B * 1e6,
+                        "pm_writes": int(ctr.pm_writes),
+                        "succeeded": int(np.asarray(ok).sum())}
+                sweep.setdefault(op, {}).setdefault(path, {})[str(B)] = cell
+                rows.append((f"{op}_{path}_b{B}[continuity]", med / B * 1e6,
+                             f"{B/med:.0f} ops/s pm={int(ctr.pm_writes)}"))
+    speedups = {
+        f"{op}_b{B}": (sweep[op]["wave"][str(B)]["ops_per_s"]
+                       / sweep[op]["serial"][str(B)]["ops_per_s"])
+        for op in sweep for B in batches}
+    return {"write_batch_sweep": sweep, "wave_over_serial_speedup": speedups}
 
 
 def run(rows):

@@ -23,14 +23,20 @@ def timeit(fn, *args, warmup=1, iters=3):
 
 
 class SchemeDriver:
-    """Uniform (insert/delete/update/lookup) driver over the three schemes."""
+    """Uniform (insert/delete/update/lookup) driver over the three schemes.
+
+    ``continuity`` runs the wave-vectorized mutation engine;
+    ``continuity_serial`` pins the reference ``lax.scan`` write paths (the
+    before/after pair for the EXPERIMENTS.md §Perf write-batch sweep).
+    """
 
     def __init__(self, name: str, table_slots: int = 4096):
         import repro.core.continuity as ch
         import repro.core.level as lv
         import repro.core.pfarm as pf
         self.name = name
-        if name == "continuity":
+        self.serial = name.endswith("_serial")
+        if name in ("continuity", "continuity_serial"):
             # slots = pairs * 20
             pairs = table_slots // 20
             self.cfg = ch.ContinuityConfig(num_buckets=2 * pairs)
@@ -48,16 +54,21 @@ class SchemeDriver:
             raise ValueError(name)
         self.table = self.mod.create(self.cfg)
 
+    def _op(self, op: str):
+        if self.serial:
+            return getattr(self.mod, op + "_serial")
+        return getattr(self.mod, op)
+
     def insert(self, keys, vals):
-        self.table, ok, ctr = self.mod.insert(self.cfg, self.table, keys, vals)
+        self.table, ok, ctr = self._op("insert")(self.cfg, self.table, keys, vals)
         return ok, ctr
 
     def update(self, keys, vals):
-        self.table, ok, ctr = self.mod.update(self.cfg, self.table, keys, vals)
+        self.table, ok, ctr = self._op("update")(self.cfg, self.table, keys, vals)
         return ok, ctr
 
     def delete(self, keys):
-        self.table, ok, ctr = self.mod.delete(self.cfg, self.table, keys)
+        self.table, ok, ctr = self._op("delete")(self.cfg, self.table, keys)
         return ok, ctr
 
     def lookup(self, keys):

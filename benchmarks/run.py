@@ -7,19 +7,43 @@ Prints ``name,us_per_call,derived`` CSV. Sections:
   * roofline      — per-(arch x shape x mesh) dry-run roofline rows
                     (requires experiments/dryrun/*.json from
                     ``python -m repro.launch.dryrun --all``)
+
+The serial-vs-wave write-batch sweep always runs and is written to
+``BENCH_hash.json`` (ops/s + PM-write counters at batch {64, 512, 4096}) so
+successive PRs accumulate a perf trajectory — see EXPERIMENTS.md §Perf.
 """
 
 from __future__ import annotations
 
-import sys
+import argparse
+import json
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--sections", default="hash,serving,roofline",
+                   help="comma-separated subset of hash,serving,roofline "
+                        "(the write-batch sweep always runs)")
+    p.add_argument("--bench-json", default="BENCH_hash.json",
+                   help="where to write the write-batch sweep artifact")
+    args = p.parse_args(argv)
+    sections = {s for s in args.sections.split(",") if s}
+    unknown = sections - {"hash", "serving", "roofline"}
+    if unknown:
+        p.error(f"unknown sections {sorted(unknown)}; "
+                f"valid: hash, serving, roofline (or empty for sweep only)")
+
     rows = []
     from benchmarks import bench_hash, bench_serving, roofline
-    bench_hash.run(rows)
-    bench_serving.run(rows)
-    roofline.run(rows)
+    if "hash" in sections:
+        bench_hash.run(rows)
+    if "serving" in sections:
+        bench_serving.run(rows)
+    if "roofline" in sections:
+        roofline.run(rows)
+    payload = bench_hash.bench_write_batch_sweep(rows)
+    with open(args.bench_json, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.3f},{derived}")

@@ -19,9 +19,26 @@ SBuckets); odd homes scan right->left (bucket, then SBuckets in reverse);
 extension slots come last for both parities.
 
 All operations are pure functions ``(table, ...) -> (table, result, counters)``
-and jit-compile with the config static. Server-side mutation batches are
-applied with ``lax.scan`` in batch order — the deterministic TPU analogue of
-the paper's per-slot spin-locks (lock-acquisition order == batch order).
+and jit-compile with the config static.
+
+Server-side mutation batches run on the **wave-vectorized mutation engine**
+(``insert`` / ``update`` / ``delete``): one stable packed sort by pair index
+groups the batch into per-pair cohorts, a segment scan assigns each op its
+intra-cohort rank, and ops of equal rank ("waves") touch pairwise-distinct
+pairs — so a wave is one batched probe, one batched payload scatter
+(phase 1) and one batched round of independent one-word indicator commits
+(phase 2): the deterministic TPU analogue of the paper's per-slot
+spin-locks, preserving lock-acquisition order == batch order and the
+log-free crash-atomicity split.  Because insert-only occupancy grows
+monotonically, ``insert`` executes ALL of its waves in one fused
+rank-indexed bit-select pass over the indicator words (a residual wave
+``while_loop`` exactly resolves the rare parity-contended cohorts);
+``update``/``delete`` run their waves in a ``while_loop`` whose trip count
+is max_collisions_per_pair.  Extension groups are granted by prefix sum in
+batch order and the pool relabelled to serial allocation order, so the
+engine produces tables byte-identical to the ``lax.scan`` reference paths
+(``insert_serial`` / ``update_serial`` / ``delete_serial``, kept for
+crash-recovery tests and as the equivalence oracle).
 """
 
 from __future__ import annotations
@@ -348,8 +365,10 @@ def _scan_op(cfg, one_fn, pm_per_op):
 
 
 @functools.partial(jax.jit, static_argnums=0)
-def insert(cfg: ContinuityConfig, table: ContinuityTable, keys, vals):
-    """Server-side batched insert (batch-order deterministic). 2 PM writes/op."""
+def insert_serial(cfg: ContinuityConfig, table: ContinuityTable, keys, vals):
+    """Reference ``lax.scan`` insert (batch-order deterministic). 2 PM
+    writes/op. Kept as the crash-recovery path and equivalence oracle for
+    the wave engine; production batches use ``insert``."""
     keys = jnp.asarray(keys, U32).reshape(-1, KEY_LANES)
     vals = jnp.asarray(vals, U32).reshape(-1, VAL_LANES)
     (table, ctr), ok = jax.lax.scan(
@@ -358,8 +377,8 @@ def insert(cfg: ContinuityConfig, table: ContinuityTable, keys, vals):
 
 
 @functools.partial(jax.jit, static_argnums=0)
-def delete(cfg: ContinuityConfig, table: ContinuityTable, keys):
-    """Server-side batched delete. 1 PM write/op (indicator bit clear)."""
+def delete_serial(cfg: ContinuityConfig, table: ContinuityTable, keys):
+    """Reference ``lax.scan`` delete. 1 PM write/op (indicator bit clear)."""
     keys = jnp.asarray(keys, U32).reshape(-1, KEY_LANES)
     (table, ctr), ok = jax.lax.scan(
         _scan_op(cfg, _delete_one, 1), (table, pmem.PMCounters.zero()), (keys,))
@@ -367,8 +386,8 @@ def delete(cfg: ContinuityConfig, table: ContinuityTable, keys):
 
 
 @functools.partial(jax.jit, static_argnums=0)
-def update(cfg: ContinuityConfig, table: ContinuityTable, keys, vals):
-    """Server-side batched out-of-place update. 2 PM writes/op."""
+def update_serial(cfg: ContinuityConfig, table: ContinuityTable, keys, vals):
+    """Reference ``lax.scan`` out-of-place update. 2 PM writes/op."""
     keys = jnp.asarray(keys, U32).reshape(-1, KEY_LANES)
     vals = jnp.asarray(vals, U32).reshape(-1, VAL_LANES)
     (table, ctr), ok = jax.lax.scan(
@@ -377,40 +396,509 @@ def update(cfg: ContinuityConfig, table: ContinuityTable, keys, vals):
 
 
 # ---------------------------------------------------------------------------
-# parallel (conflict-resolved) insert — used by the serving page table, where
-# a batch touches mostly-distinct pairs; duplicates past the first per pair
-# are reported for retry (batch-order priority == lock order).
+# wave-vectorized mutation engine
+# ---------------------------------------------------------------------------
+# A batch of B mutations is scheduled into "waves": one stable sort by pair
+# index clusters same-pair ops (keeping batch order inside a cluster), a
+# segment scan assigns each op its intra-pair rank, and wave w holds every
+# op of rank w.  All ops in a wave touch pairwise-distinct pairs, so a wave
+# is one batched probe, one batched payload scatter (phase 1) and one
+# batched set of independent one-word indicator stores (phase 2) — exactly
+# B_w conflict-free applications of the paper's write protocol; same-pair
+# ops serialize across waves in batch order (lock order == batch order).
+#
+# Execution strategy per op kind:
+#   * ``insert``: occupancy per pair only GROWS, so every wave is
+#     determined by the pre-batch indicator word — the op of intra-cohort
+#     rank r takes the (r+1)-th empty candidate in its own probe order.
+#     All waves therefore run FUSED in a single rank-indexed bit-select
+#     pass over the 32-bit indicator words.  The one case where waves
+#     genuinely interact — both parities of one pair contending for the
+#     same middle SBucket slots — is detected exactly (see
+#     ``_insert_fused``) and resolved by a residual wave ``while_loop``.
+#   * ``update`` / ``delete``: occupancy mutates non-monotonically (bits
+#     clear, items relocate), so the waves execute sequentially in a
+#     ``while_loop`` whose trip count is max_collisions_per_pair — 1 for
+#     the all-distinct batches of the serving page table.
+
+def _stable_order(cls: jnp.ndarray, num_class: int):
+    """Stable ascending order of small int class ids.
+
+    Packs (class, position) into ONE uint32 sort key when the product fits
+    (single-array sort is ~2-3x faster on CPU/TPU than a key+payload sort),
+    falling back to a stable argsort otherwise.  Returns ``(cls_s, idx_s)``.
+    """
+    B = cls.shape[0]
+    width = 1 << max(1, (B - 1).bit_length())
+    if (num_class + 1) * width < 2 ** 31:
+        sk = jax.lax.sort(cls.astype(U32) * U32(width)
+                          + jnp.arange(B, dtype=U32))
+        return (sk // U32(width)).astype(I32), (sk & U32(width - 1)).astype(I32)
+    idx = jnp.argsort(cls, stable=True).astype(I32)
+    return cls[idx].astype(I32), idx
+
+
+def _cohort_ranks(cls_s: jnp.ndarray) -> jnp.ndarray:
+    """Rank of each element within its (sorted, contiguous) class run."""
+    B = cls_s.shape[0]
+    ii = jnp.arange(B, dtype=I32)
+    head = jnp.concatenate([jnp.ones((1,), jnp.bool_), cls_s[1:] != cls_s[:-1]])
+    return ii - jax.lax.cummax(jnp.where(head, ii, 0))
+
+
+def _plan_waves(cfg: ContinuityConfig, keys: jnp.ndarray, active: jnp.ndarray):
+    """Group a batch into per-pair cohorts with ONE stable packed sort.
+
+    Returns ``(pair, parity, rank, num_waves)``: ``rank[i]`` is op i's
+    position among active same-pair ops in batch order (-1 if inactive);
+    ops of equal rank touch pairwise-distinct pairs.
+    """
+    B = keys.shape[0]
+    pair, parity = locate(cfg, keys)
+    cls = jnp.where(active, pair, cfg.num_pairs)
+    cls_s, order = _stable_order(cls, cfg.num_pairs)
+    rank = jnp.zeros((B,), I32).at[order].set(_cohort_ranks(cls_s))
+    rank = jnp.where(active, rank, -1)
+    return pair, parity, rank, jnp.max(rank) + 1
+
+
+@jax.custom_batching.custom_vmap
+def _pin(xs):
+    """Identity that pins its operands as materialized values.
+
+    XLA CPU loop fusion re-computes a producer chain inside every consumer
+    fusion; without this the sort/probe chain above a commit phase runs once
+    PER SCATTER (~2x wall time at batch 512).  ``optimization_barrier`` has
+    no batching rule in this jax version, so supply one (the barrier applies
+    unchanged to the batched arrays)."""
+    return jax.lax.optimization_barrier(xs)
+
+
+@_pin.def_vmap
+def _pin_vmap(axis_size, in_batched, xs):
+    return jax.lax.optimization_barrier(xs), in_batched[0]
+
+
+def _bitreverse32(v: jnp.ndarray) -> jnp.ndarray:
+    c = U32
+    v = ((v >> c(1)) & c(0x55555555)) | ((v & c(0x55555555)) << c(1))
+    v = ((v >> c(2)) & c(0x33333333)) | ((v & c(0x33333333)) << c(2))
+    v = ((v >> c(4)) & c(0x0F0F0F0F)) | ((v & c(0x0F0F0F0F)) << c(4))
+    v = ((v >> c(8)) & c(0x00FF00FF)) | ((v & c(0x00FF00FF)) << c(8))
+    return (v >> c(16)) | (v << c(16))
+
+
+def _canonical_occupancy(cfg: ContinuityConfig, ind: jnp.ndarray,
+                         parity: jnp.ndarray) -> jnp.ndarray:
+    """Rearrange indicator words so bit p = the op's p-th probe candidate.
+
+    Even homes probe slots 0..seg-1 ascending (bits pass through); odd homes
+    probe slots S-1..S-seg descending (one vectorized bit-reversal); the
+    extension bits follow at positions seg.. for both parities.
+    """
+    S, seg, E = cfg.slots_per_pair, cfg.seg_slots, cfg.ext_slots
+    main = jnp.where(parity == 0, ind, _bitreverse32(ind) >> U32(32 - S))
+    canon = main & U32((1 << seg) - 1)
+    if E:
+        canon = canon | (((ind >> U32(S)) & U32((1 << E) - 1)) << U32(seg))
+    return canon
+
+
+def _select_bit(word: jnp.ndarray, n: jnp.ndarray) -> jnp.ndarray:
+    """Position of the (n+1)-th set bit of each uint32 word (branch-free
+    5-step binary descend on popcounts; valid iff n < popcount(word))."""
+    pos = jnp.zeros_like(word)
+    rem = n.astype(U32)
+    for width in (16, 8, 4, 2, 1):
+        low = (word >> pos) & U32((1 << width) - 1)
+        cnt = jax.lax.population_count(low)
+        go = rem >= cnt
+        rem = jnp.where(go, rem - cnt, rem)
+        pos = jnp.where(go, pos + U32(width), pos)
+    return pos.astype(I32)
+
+
+def _insert_wave_plan(cfg: ContinuityConfig, table: ContinuityTable,
+                      pair, parity, m):
+    """Probe phase of one insert wave: pick each active op's slot and grant
+    extension groups by prefix sum over batch order (== serial grant order).
+
+    Returns ``(slot, ok, grant, ext_idx)``.
+    """
+    B = pair.shape[0]
+    if cfg.ext_frac > 0:
+        pool_left = cfg.ext_pool_pairs - table.ext_count
+    else:
+        pool_left = jnp.zeros((), I32)
+    opt = jnp.broadcast_to(pool_left > 0, (B,))      # optimistic ext candidacy
+    cand, _, _, valid, slot_ok, is_ext, has_ext = _gather_candidates(
+        cfg, table, pair, parity, ext_allowed=opt)
+    empty = (~valid) & slot_ok
+    first = jnp.argmax(empty, axis=-1)
+    slot = jnp.take_along_axis(cand, first[:, None], 1)[:, 0]
+    want = m & jnp.any(empty, -1) & (slot >= cfg.slots_per_pair) & ~has_ext
+    grant = want & (jnp.cumsum(want.astype(I32)) - 1 < pool_left)
+    # pool-denied allocators fall back to main-segment candidates only
+    denied = want & ~grant
+    empty = jnp.where(denied[:, None], empty & ~is_ext, empty)
+    ok = m & jnp.any(empty, -1)
+    first = jnp.argmax(empty, axis=-1)
+    slot = jnp.take_along_axis(cand, first[:, None], 1)[:, 0]
+    new_idx = table.ext_count + jnp.cumsum(grant.astype(I32)) - 1
+    ext_idx = jnp.where(grant, new_idx, jnp.maximum(table.ext_map[pair], 0))
+    return slot, ok, grant, ext_idx
+
+
+def _insert_wave(cfg: ContinuityConfig, table: ContinuityTable, keys, vals,
+                 pair, parity, m):
+    """Execute one insert wave (active ops have distinct pairs)."""
+    slot, ok, grant, ext_idx = _insert_wave_plan(cfg, table, pair, parity, m)
+    ext_map = table.ext_map.at[jnp.where(grant, pair, jnp.iinfo(I32).max)].set(
+        ext_idx, mode="drop")
+    table = table._replace(
+        ext_map=ext_map, ext_count=table.ext_count + jnp.sum(grant).astype(I32))
+    table = _scatter_payload(table, ok, pair, slot, ext_idx, keys, vals,
+                             cfg.slots_per_pair)                    # phase 1
+    word = table.indicator[pair] | jnp.where(
+        ok, U32(1) << slot.astype(U32), U32(0))
+    table = _commit_indicator(table, ok, pair, word)                # phase 2
+    return table._replace(count=table.count + jnp.sum(ok).astype(I32)), \
+        ok, grant, ext_idx
+
+
+def _reorder_ext_pool(cfg: ContinuityConfig, table: ContinuityTable,
+                      alloc_pos, alloc_idx):
+    """Relabel extension groups granted this batch into batch-position order.
+
+    Waves grant pool rows in (wave, batch) order while the serial reference
+    grants in pure batch order; both grant the SAME pair set, so a pure
+    metadata permutation of the pool rows + ``ext_map`` makes the wave
+    result byte-identical to the serial one.
+    """
+    B = alloc_pos.shape[0]
+    PE = cfg.ext_pool_pairs
+    did = alloc_pos >= 0
+    order = jnp.argsort(jnp.where(did, alloc_pos, jnp.iinfo(I32).max),
+                        stable=True)                 # granters first
+    did_s = did[order]
+    old_s = alloc_idx[order]
+    new_s = (table.ext_count - jnp.sum(did).astype(I32)
+             + jnp.arange(B, dtype=I32))
+    fwd = jnp.arange(PE, dtype=I32).at[
+        jnp.where(did_s, old_s, PE)].set(new_s, mode="drop")
+    inv = jnp.arange(PE, dtype=I32).at[
+        jnp.where(did_s, new_s, PE)].set(old_s, mode="drop")
+    ext_map = jnp.where(table.ext_map >= 0,
+                        fwd[jnp.maximum(table.ext_map, 0)], -1)
+    return table._replace(ext_keys=table.ext_keys[inv],
+                          ext_vals=table.ext_vals[inv], ext_map=ext_map)
+
+
+def _batch_arrays(keys, vals=None, mask=None):
+    keys = jnp.asarray(keys, U32).reshape(-1, KEY_LANES)
+    B = keys.shape[0]
+    if vals is not None:
+        vals = jnp.asarray(vals, U32).reshape(-1, VAL_LANES)
+    active = (jnp.ones((B,), jnp.bool_) if mask is None
+              else jnp.asarray(mask).reshape(B).astype(jnp.bool_))
+    return keys, vals, active
+
+
+def _insert_fused(cfg: ContinuityConfig, table: ContinuityTable, keys, vals,
+                  active):
+    """All insert waves fused into one rank-indexed bit-select pass.
+
+    For an insert-only batch, a pair's occupancy only grows, so the op of
+    intra-cohort rank r takes the (r+1)-th empty candidate of the PRE-batch
+    indicator word — every wave is computable up front.  The single genuine
+    inter-wave interaction is a pair whose two home parities contend for the
+    same middle SBucket slots; a cohort is contention-free (closed form ==
+    serial for every interleaving) iff it is single-parity, or no op leaves
+    its main segment AND the two directional claims fit disjointly:
+    ``n_even + n_odd <= popcount(empty main slots)`` (claims from opposite
+    ends of one ordered slot list can only collide if they outnumber it).
+    Contended cohorts are flagged and returned for the residual wave loop.
+
+    Returns ``(table, ok, unsafe_sorted, idx_s, grant_pos, grant_idx)`` —
+    ``unsafe_sorted``/``idx_s`` flag contended cohorts (in sorted op order),
+    and the grant records (batch position / pool row) feed the final
+    serial-order pool relabel.
+    """
+    B = keys.shape[0]
+    P = cfg.num_pairs
+    S, seg, E = cfg.slots_per_pair, cfg.seg_slots, cfg.ext_slots
+    pair, parity = locate(cfg, keys)
+    drop = jnp.iinfo(I32).max
+
+    # plan: one stable packed sort by (pair, parity); batch order within
+    cls = jnp.where(active, pair * 2 + parity, 2 * P)
+    cls_s, idx_s = _stable_order(cls, 2 * P)
+    act = cls_s < 2 * P
+    pair_s = jnp.minimum(cls_s >> 1, P - 1)
+    par_s = cls_s & 1
+    r2 = _cohort_ranks(cls_s)                 # rank within (pair, parity)
+    # barriers pin each stage's results: XLA CPU otherwise re-fuses the
+    # producer chain into every downstream scatter/gather (see EXPERIMENTS)
+    act, pair_s, par_s, r2, idx_s = _pin((act, pair_s, par_s, r2, idx_s))
+
+    ind = table.indicator[pair_s]
+    has_ext = table.ext_map[pair_s] >= 0
+    main_mask = U32((1 << seg) - 1)
+    canon = _canonical_occupancy(cfg, ind, par_s)
+    own_empty = jax.lax.population_count(~canon & main_mask).astype(I32)
+    spill = act & (r2 >= own_empty)           # would leave its main segment
+    canon, own_empty, spill = _pin((canon, own_empty, spill))
+
+    # cohort safety: per-(pair, parity) op count + spill flag, ONE scatter
+    rec = jnp.where(act, 1 + (spill.astype(I32) << 16), 0)
+    cnt = jnp.zeros((P, 2), I32).at[pair_s, par_s].add(rec)
+    own = cnt[pair_s, par_s]
+    oth = cnt[pair_s, 1 - par_s]
+    pair_empty = jax.lax.population_count(
+        ~ind & U32((1 << S) - 1)).astype(I32)
+    unsafe = act & (oth > 0) & (
+        ((own >> 16) + (oth >> 16) > 0)
+        | ((own & 0xFFFF) + (oth & 0xFFFF) > pair_empty))
+    go = act & ~unsafe
+
+    # extension grants, in batch order (== serial grant order); a spilling
+    # op in a safe cohort is necessarily single-parity, and the trigger is
+    # the first such op (rank == #empty main candidates).  The grant branch
+    # also produces the (batch position, pool row) records for the final
+    # pool relabel; batches without ext pressure skip all of it.
+    no_grant = (jnp.zeros((B,), jnp.bool_), jnp.zeros((B,), I32),
+                jnp.full((B,), -1, I32), jnp.full((B,), -1, I32))
+    if cfg.ext_frac > 0 and E:
+        pool_left = cfg.ext_pool_pairs - table.ext_count
+        want = go & (r2 == own_empty) & ~has_ext
+        def grants(_):
+            wb = jnp.zeros((B,), jnp.bool_).at[idx_s].set(want)
+            grank = jnp.cumsum(wb.astype(I32)) - 1
+            gb = wb & (grank < pool_left)
+            gi = jnp.where(gb, table.ext_count + grank, -1)
+            return gb[idx_s], (table.ext_count + grank)[idx_s], \
+                jnp.where(gb, jnp.arange(B, dtype=I32), -1), gi
+        grant, new_eidx, gpos, gidx = jax.lax.cond(
+            jnp.any(want) & (pool_left > 0), grants, lambda _: no_grant, 0)
+        ext_map = table.ext_map.at[
+            jnp.where(grant, pair_s, drop)].set(new_eidx, mode="drop")
+        table = table._replace(
+            ext_map=ext_map,
+            ext_count=table.ext_count + jnp.sum(grant).astype(I32))
+    else:
+        grant, new_eidx, gpos, gidx = no_grant
+    eidx = table.ext_map[pair_s]
+
+    # rank-indexed slot selection on the canonical empty word
+    ext_bits = U32(((1 << E) - 1) << seg) if E else U32(0)
+    empty = ~canon & (main_mask | jnp.where(eidx >= 0, ext_bits, U32(0)))
+    ok = go & (r2 < jax.lax.population_count(empty).astype(I32))
+    pos = _select_bit(empty, r2)
+    slot = jnp.where(pos < seg,
+                     jnp.where(par_s == 0, pos, S - 1 - pos),
+                     S + (pos - seg))
+
+    # materialize the plan once: without this barrier XLA re-fuses the whole
+    # sort/probe chain into EVERY commit scatter below (~2x the work)
+    ok, slot, eidx, pair_s, idx_s, unsafe, k_s, v_s = _pin(
+        (ok, slot, eidx, pair_s, idx_s, unsafe, keys[idx_s], vals[idx_s]))
+
+    # phase 1: payload rows (flat 1-D scatters; ext rows cond-skipped)
+    is_ext = slot >= S
+    midx = jnp.where(ok & ~is_ext, pair_s * S + jnp.minimum(slot, S - 1), drop)
+    tkeys = table.keys.reshape(P * S, KEY_LANES).at[midx].set(
+        k_s, mode="drop").reshape(P, S, KEY_LANES)
+    tvals = table.vals.reshape(P * S, VAL_LANES).at[midx].set(
+        v_s, mode="drop").reshape(P, S, VAL_LANES)
+
+    def ext_rows(kv):
+        ek, ev = kv
+        PE, EX = ek.shape[0], ek.shape[1]
+        eix = jnp.where(ok & is_ext,
+                        jnp.maximum(eidx, 0) * EX + jnp.maximum(slot - S, 0),
+                        drop)
+        return (ek.reshape(PE * EX, KEY_LANES).at[eix].set(
+                    k_s, mode="drop").reshape(ek.shape),
+                ev.reshape(PE * EX, VAL_LANES).at[eix].set(
+                    v_s, mode="drop").reshape(ev.shape))
+    tek, tev = jax.lax.cond(jnp.any(ok & is_ext), ext_rows,
+                            lambda kv: kv, (table.ext_keys, table.ext_vals))
+
+    # phase 2: one-word indicator commits (bits of one pair are disjoint,
+    # so a scatter-add is the batch of independent atomic ORs)
+    add = jnp.zeros((P,), U32).at[jnp.where(ok, pair_s, drop)].add(
+        U32(1) << slot.astype(U32), mode="drop")
+    table = table._replace(
+        keys=tkeys, vals=tvals, ext_keys=tek, ext_vals=tev,
+        indicator=table.indicator | add,
+        count=table.count + jnp.sum(ok).astype(I32))
+
+    okb = jnp.zeros((B,), jnp.bool_).at[idx_s].set(ok)
+    return table, okb, unsafe, idx_s, gpos, gidx
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def insert(cfg: ContinuityConfig, table: ContinuityTable, keys, vals,
+           mask=None):
+    """Server-side batched insert on the wave engine. 2 PM writes/op.
+
+    Byte-identical tables and counters to ``insert_serial`` (masked ops are
+    skipped); same-pair ops execute in batch order. The one permitted
+    divergence is extension-pool exhaustion mid-batch: grants are a true
+    serialization point, so when the pool runs dry in a batch that also has
+    parity-contended cohorts, a different set of pairs may win the last
+    groups than under the serial order — and with them the admitted ops,
+    ``ok`` flags and PM-write totals. Batches that do not exhaust the pool
+    (every sweep/test config here) are exactly serial.
+    """
+    keys, vals, active = _batch_arrays(keys, vals, mask)
+    B = keys.shape[0]
+    table, ok, unsafe_s, idx_s, gpos, gidx = _insert_fused(
+        cfg, table, keys, vals, active)
+
+    def contended(args):
+        # residual wave loop: only parity-contended cohorts (rare) run here
+        table, ok, gpos, gidx = args
+        unsafe = jnp.zeros((B,), jnp.bool_).at[idx_s].set(unsafe_s)
+        pair, parity, rank, num_waves = _plan_waves(cfg, keys, unsafe)
+
+        def body(c):
+            w, t, okw, ap, ai = c
+            t, wok, wgrant, weidx = _insert_wave(cfg, t, keys, vals, pair,
+                                                 parity, rank == w)
+            ap = jnp.where(wgrant, jnp.arange(B, dtype=I32), ap)
+            ai = jnp.where(wgrant, weidx, ai)
+            return w + 1, t, okw | wok, ap, ai
+
+        _, table, ok, gpos, gidx = jax.lax.while_loop(
+            lambda c: c[0] < num_waves, body,
+            (jnp.zeros((), I32), table, ok, gpos, gidx))
+        return table, ok, gpos, gidx
+
+    table, ok, gpos, gidx = jax.lax.cond(
+        jnp.any(unsafe_s), contended, lambda a: a, (table, ok, gpos, gidx))
+
+    if cfg.ext_frac > 0:
+        # relabel pool rows into batch-grant order (== serial pool layout)
+        table = jax.lax.cond(
+            jnp.any(gpos >= 0),
+            lambda t: _reorder_ext_pool(cfg, t, gpos, gidx),
+            lambda t: t, table)
+    ctr = pmem.PMCounters.zero().add(pm_writes=2 * jnp.sum(ok), ops=B)
+    return table, ok, ctr
+
+
+def _gather_candidate_keys(cfg: ContinuityConfig, table: ContinuityTable,
+                           pair, parity, ext_allowed):
+    """``_gather_candidates`` minus the value gathers — the write-path waves
+    only match/probe on keys (values are scattered, never read)."""
+    probe = jnp.asarray(_probe_order(cfg))           # (2, C)
+    cand = probe[parity]                             # (B, C)
+    S = cfg.slots_per_pair
+    is_ext = cand >= S
+    ind = table.indicator[pair]
+    bits = (ind[:, None] >> cand.astype(U32)) & U32(1)
+    main_ids = jnp.minimum(cand, S - 1)
+    mkeys = table.keys[pair[:, None], main_ids]
+    eidx = table.ext_map[pair]
+    has_ext = eidx >= 0
+    ekeys = table.ext_keys[jnp.maximum(eidx, 0)[:, None], jnp.maximum(cand - S, 0)]
+    cand_keys = jnp.where(is_ext[..., None], ekeys, mkeys)
+    slot_ok = jnp.where(is_ext, (has_ext | ext_allowed)[:, None], True)
+    valid = (bits == 1) & slot_ok & jnp.where(is_ext, has_ext[:, None], True)
+    return cand, cand_keys, valid, slot_ok
+
+
+def _delete_wave(cfg: ContinuityConfig, table: ContinuityTable, keys,
+                 pair, parity, m):
+    B = keys.shape[0]
+    no = jnp.zeros((B,), jnp.bool_)
+    cand, ckeys, valid, _ = _gather_candidate_keys(
+        cfg, table, pair, parity, ext_allowed=no)
+    match = valid & jnp.all(ckeys == keys[:, None, :], axis=-1)
+    ok = m & jnp.any(match, -1)
+    slot = jnp.take_along_axis(cand, jnp.argmax(match, -1)[:, None], 1)[:, 0]
+    ok, slot = _pin((ok, slot))
+    word = table.indicator[pair] & ~jnp.where(
+        ok, U32(1) << jnp.maximum(slot, 0).astype(U32), U32(0))
+    table = _commit_indicator(table, ok, pair, word)    # the ONE PM write
+    return table._replace(count=table.count - jnp.sum(ok).astype(I32)), ok
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def delete(cfg: ContinuityConfig, table: ContinuityTable, keys, mask=None):
+    """Server-side batched delete on the wave engine. 1 PM write/op."""
+    keys, _, active = _batch_arrays(keys, mask=mask)
+    pair, parity, rank, num_waves = _plan_waves(cfg, keys, active)
+
+    def body(c):
+        w, t, ok = c
+        t, wok = _delete_wave(cfg, t, keys, pair, parity, rank == w)
+        return w + 1, t, ok | wok
+
+    init = (jnp.zeros((), I32), table, jnp.zeros((keys.shape[0],), jnp.bool_))
+    _, table, ok = jax.lax.while_loop(lambda c: c[0] < num_waves, body, init)
+    ctr = pmem.PMCounters.zero().add(pm_writes=jnp.sum(ok), ops=keys.shape[0])
+    return table, ok, ctr
+
+
+def _update_wave(cfg: ContinuityConfig, table: ContinuityTable, keys, vals,
+                 pair, parity, m):
+    B = keys.shape[0]
+    no = jnp.zeros((B,), jnp.bool_)
+    cand, ckeys, valid, slot_ok = _gather_candidate_keys(
+        cfg, table, pair, parity, ext_allowed=no)
+    match = valid & jnp.all(ckeys == keys[:, None, :], axis=-1)
+    found = jnp.any(match, -1)
+    old = jnp.take_along_axis(cand, jnp.argmax(match, -1)[:, None], 1)[:, 0]
+    empty = (~valid) & slot_ok
+    new = jnp.take_along_axis(cand, jnp.argmax(empty, -1)[:, None], 1)[:, 0]
+    ok = m & found & jnp.any(empty, -1)
+    ext_idx = jnp.maximum(table.ext_map[pair], 0)
+    ok, old, new, ext_idx = _pin((ok, old, new, ext_idx))
+    table = _scatter_payload(table, ok, pair, new, ext_idx, keys, vals,
+                             cfg.slots_per_pair)                    # phase 1
+    flip = (U32(1) << jnp.maximum(old, 0).astype(U32)) | \
+        (U32(1) << new.astype(U32))
+    word = table.indicator[pair] ^ jnp.where(ok, flip, U32(0))
+    return _commit_indicator(table, ok, pair, word), ok             # phase 2
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def update(cfg: ContinuityConfig, table: ContinuityTable, keys, vals,
+           mask=None):
+    """Server-side batched out-of-place update on the wave engine.
+    2 PM writes/op; both bit-flips land in ONE atomic indicator store."""
+    keys, vals, active = _batch_arrays(keys, vals, mask)
+    pair, parity, rank, num_waves = _plan_waves(cfg, keys, active)
+
+    def body(c):
+        w, t, ok = c
+        t, wok = _update_wave(cfg, t, keys, vals, pair, parity, rank == w)
+        return w + 1, t, ok | wok
+
+    init = (jnp.zeros((), I32), table, jnp.zeros((keys.shape[0],), jnp.bool_))
+    _, table, ok = jax.lax.while_loop(lambda c: c[0] < num_waves, body, init)
+    ctr = pmem.PMCounters.zero().add(pm_writes=2 * jnp.sum(ok),
+                                     ops=keys.shape[0])
+    return table, ok, ctr
+
+
+# ---------------------------------------------------------------------------
+# parallel (conflict-resolved) insert — one wave of the engine; used by the
+# serving page table, where a batch touches mostly-distinct pairs.  Same-pair
+# duplicates past the first are reported for retry (batch-order priority ==
+# lock order).  Unlike the old O(B^2) all-pairs conflict matrix this costs
+# one argsort, and extension groups CAN be granted (prefix-sum allocation).
 # ---------------------------------------------------------------------------
 
 @functools.partial(jax.jit, static_argnums=0)
 def insert_parallel(cfg: ContinuityConfig, table: ContinuityTable, keys, vals,
                     mask=None):
-    keys = jnp.asarray(keys, U32).reshape(-1, KEY_LANES)
-    vals = jnp.asarray(vals, U32).reshape(-1, VAL_LANES)
-    B = keys.shape[0]
-    active = jnp.ones((B,), jnp.bool_) if mask is None else jnp.asarray(mask)
-    pair, parity = locate(cfg, keys)
-    # first active occurrence per pair wins; later ones retry next batch
-    same = (pair[:, None] == pair[None, :]) & active[None, :]
-    earlier = jnp.tril(jnp.ones((B, B), jnp.bool_), k=-1)
-    dup = jnp.any(same & earlier, axis=-1)
-    go = active & ~dup
-
-    no = jnp.zeros((B,), jnp.bool_)
-    cand, _, _, valid, slot_ok, _, _ = _gather_candidates(
-        cfg, table, pair, parity, ext_allowed=no)
-    empty = (~valid) & slot_ok
-    ok = go & jnp.any(empty, axis=-1)
-    first = jnp.argmax(empty, axis=-1)
-    slot = jnp.take_along_axis(cand, first[:, None], 1)[:, 0]
-    ext_idx = jnp.maximum(table.ext_map[pair], 0)
-    table = _scatter_payload(table, ok, pair, slot, ext_idx, keys, vals,
-                             cfg.slots_per_pair)
-    okbit = jnp.where(ok, U32(1) << slot.astype(U32), U32(0))
-    word = table.indicator.at[jnp.where(ok, pair, jnp.iinfo(I32).max)].set(
-        table.indicator[pair] | okbit, mode="drop")
-    table = table._replace(indicator=word,
-                           count=table.count + jnp.sum(ok).astype(I32))
+    keys, vals, active = _batch_arrays(keys, vals, mask)
+    pair, parity, rank, _ = _plan_waves(cfg, keys, active)
+    table, ok, _, _ = _insert_wave(cfg, table, keys, vals, pair, parity,
+                                   rank == 0)
     retry = active & ~ok
     return table, ok, retry
 
@@ -451,17 +939,7 @@ def resize(cfg: ContinuityConfig, table: ContinuityTable, factor: int = 2):
     new_cfg = cfg.grow(factor)
     new = create(new_cfg)
     keys, vals, mask = extract_items(cfg, table)
-
-    def step(carry, kv):
-        t, = carry
-        k, v, m = kv
-        def do(t):
-            t2, _ = _insert_one(new_cfg, t, k, v)
-            return t2
-        t = jax.lax.cond(m, do, lambda t: t, t)
-        return (t,), None
-
-    (new,), _ = jax.lax.scan(step, (new,), (keys, vals, mask))
+    new, _, _ = insert(new_cfg, new, keys, vals, mask)
     return new_cfg, new
 
 

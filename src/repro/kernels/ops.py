@@ -48,10 +48,13 @@ def table_rows(table: ContinuityTable) -> jnp.ndarray:
 
 
 def probe_table(cfg: ContinuityConfig, table: ContinuityTable, keys,
-                *, interpret: bool = True, use_kernel: bool = True):
+                *, interpret: bool = True, use_kernel: bool = True,
+                qblock: int = 8):
     """Probe the main segments of ``table`` for a batch of keys.
 
-    Returns (match_slot, empty_slot, pair, parity); slots are -1 on miss/full.
+    ``qblock`` queries share one grid step (one VPU pass over their
+    DMA-gathered segment rows). Returns (match_slot, empty_slot, pair,
+    parity); slots are -1 on miss/full.
     """
     from repro.core.continuity import locate  # local import to avoid cycle
     keys = jnp.asarray(keys, jnp.uint32).reshape(-1, KEY_LANES)
@@ -59,10 +62,13 @@ def probe_table(cfg: ContinuityConfig, table: ContinuityTable, keys,
     rows = table_rows(table)
     ind = table.indicator[:, None]
     prio = jnp.asarray(priority_table(cfg))
-    fn = _probe.probe_segments if use_kernel else (
-        lambda *a, interpret=True: _probe_ref.probe_ref(*a))
-    match, empty = fn(rows, ind, prio, pair, parity, keys, interpret=interpret) \
-        if use_kernel else _probe_ref.probe_ref(rows, ind, prio, pair, parity, keys)
+    if use_kernel:
+        match, empty = _probe.probe_segments(
+            rows, ind, prio, pair, parity, keys, interpret=interpret,
+            qblock=qblock)
+    else:
+        match, empty = _probe_ref.probe_ref(rows, ind, prio, pair, parity,
+                                            keys)
     return match, empty, pair, parity
 
 

@@ -195,14 +195,13 @@ def open_new_pages(g: PageGeometry, cache: PagedCache,
     logical = cache.seq_lens // g.page_size                  # page being opened
     keys = page_keys(cache.seq_ids, logical)                 # (DS, Bl, 4)
     vals = page_values(phys)
-    # insert_parallel defers same-pair duplicates within a batch (batch-order
-    # priority == the paper's lock order); loop until the retry set drains.
-    table, pending = cache.table, need
-    for _ in range(min(Bl, 8)):
-        table, ok, pending = jax.vmap(
-            lambda t, k, v, m: ch.insert_parallel(g.table_cfg, t, k, v, m)
-        )(table, keys.reshape(DS, Bl, 4), vals.reshape(DS, Bl, 4), pending)
-        table = ch.ContinuityTable(*table)
+    # the wave engine resolves same-pair cohorts internally (batch-order
+    # priority == the paper's lock order) and can grant extension groups,
+    # so one call replaces the old insert_parallel retry loop.
+    table, ok, _ = jax.vmap(
+        lambda t, k, v, m: ch.insert(g.table_cfg, t, k, v, m)
+    )(cache.table, keys.reshape(DS, Bl, 4), vals.reshape(DS, Bl, 4), need)
+    table = ch.ContinuityTable(*table)
     nf = cache.next_free + jnp.sum(need, axis=1).astype(I32)
     return cache._replace(
         table=table,

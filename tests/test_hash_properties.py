@@ -7,6 +7,9 @@ set IFF the slot holds a live item that lookup can see.
 
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 import repro.core.continuity as ch

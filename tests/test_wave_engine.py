@@ -1,0 +1,228 @@
+"""Wave-vectorized mutation engine vs the serial lax.scan reference.
+
+The engine must produce BYTE-IDENTICAL tables (every array of the pytree),
+identical per-op success flags and identical PM-write counters for any
+batch, including the adversarial shapes: all ops on one pair, all pairs
+distinct, extension-allocating overflows, duplicate keys, mixed-parity
+contention on tiny tables, and masked batches.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core.continuity as ch
+from repro.data import ycsb
+
+
+def table_diff(a: ch.ContinuityTable, b: ch.ContinuityTable):
+    return [name for name, x, y in zip(a._fields, a, b)
+            if not np.array_equal(np.asarray(x), np.asarray(y))] or None
+
+
+def keys_vals(ids, seed=0):
+    rng = np.random.RandomState(seed)
+    ids = np.asarray(ids)
+    return ycsb.make_key(ids), ycsb.make_value(rng, len(ids))
+
+
+def same_pair_ids(cfg, pair_want, parity_want=None, n=32, search=20000):
+    """Record ids whose home lands on one specific pair (optionally parity)."""
+    ids = []
+    for i in range(search):
+        k = ycsb.make_key(np.array([i]))
+        pair, parity = ch.locate(cfg, jnp.asarray(k))
+        if int(pair[0]) == pair_want and (
+                parity_want is None or int(parity[0]) == parity_want):
+            ids.append(i)
+            if len(ids) == n:
+                break
+    return np.asarray(ids)
+
+
+def assert_equivalent(cfg, K, V, mask=None):
+    t_ref = ch.create(cfg)
+    if mask is None:
+        t_ref, ok_ref, c_ref = ch.insert_serial(cfg, t_ref, K, V)
+    else:
+        t_ref, ok_m, c_ref = ch.insert_serial(cfg, t_ref, K[mask], V[mask])
+        ok_ref = np.zeros(len(K), bool)
+        ok_ref[mask] = np.asarray(ok_m)
+    t_wave, ok_wave, c_wave = ch.insert(
+        cfg, ch.create(cfg), K, V,
+        None if mask is None else jnp.asarray(mask))
+    assert table_diff(t_ref, t_wave) is None
+    np.testing.assert_array_equal(np.asarray(ok_ref), np.asarray(ok_wave))
+    assert int(c_ref.pm_writes) == int(c_wave.pm_writes)
+    return t_wave
+
+
+def test_insert_all_distinct_pairs():
+    cfg = ch.ContinuityConfig(num_buckets=256)
+    K, V = keys_vals(np.arange(64))
+    assert_equivalent(cfg, K, V)
+
+
+def test_insert_all_same_pair_single_parity():
+    cfg = ch.ContinuityConfig(num_buckets=16, ext_frac=0.5)
+    ids = same_pair_ids(cfg, pair_want=3, parity_want=0, n=24)
+    K, V = keys_vals(ids)
+    t = assert_equivalent(cfg, K, V)
+    assert int(t.count) > 0
+
+
+def test_insert_all_same_pair_mixed_parity_contention():
+    """Both parities fighting over one pair's SBuckets must fall back to the
+    exact wave loop — still byte-identical to serial."""
+    cfg = ch.ContinuityConfig(num_buckets=4, ext_frac=0.5)
+    even = same_pair_ids(cfg, pair_want=1, parity_want=0, n=16)
+    odd = same_pair_ids(cfg, pair_want=1, parity_want=1, n=16)
+    inter = np.empty(32, dtype=even.dtype)
+    inter[0::2], inter[1::2] = even, odd      # adversarial interleaving
+    K, V = keys_vals(inter)
+    assert_equivalent(cfg, K, V)
+
+
+def test_insert_extension_allocating():
+    """Overflowing batches must grant added-SBucket groups in the same pool
+    order as the serial reference (ext_keys/ext_vals byte-identical)."""
+    cfg = ch.ContinuityConfig(num_buckets=8, ext_frac=1.0)
+    K, V = keys_vals(np.arange(180))
+    t = assert_equivalent(cfg, K, V)
+    assert int(t.ext_count) >= 1
+
+
+def test_insert_duplicate_keys():
+    cfg = ch.ContinuityConfig(num_buckets=64)
+    ids = np.repeat(np.arange(16), 4)
+    K, V = keys_vals(ids)
+    assert_equivalent(cfg, K, V)
+
+
+def test_insert_masked_batch():
+    cfg = ch.ContinuityConfig(num_buckets=64)
+    K, V = keys_vals(np.arange(80))
+    mask = np.random.RandomState(3).rand(80) < 0.5
+    assert_equivalent(cfg, K, V, mask=mask)
+
+
+def test_insert_fuzz_matches_serial():
+    for seed in range(12):
+        rng = np.random.RandomState(seed)
+        cfg = ch.ContinuityConfig(
+            num_buckets=int(rng.choice([2, 4, 8, 32, 64])),
+            ext_frac=float(rng.choice([0.0, 0.1, 0.5, 1.0])))
+        n = int(rng.randint(1, 150))
+        K = ycsb.make_key(rng.randint(0, 80, n))
+        V = ycsb.make_value(rng, n)
+        assert_equivalent(cfg, K, V)
+
+
+def test_update_matches_serial_with_duplicates():
+    cfg = ch.ContinuityConfig(num_buckets=32)
+    K, V = keys_vals(np.arange(40))
+    t0, _, _ = ch.insert(cfg, ch.create(cfg), K, V)
+    # duplicate update targets force multi-wave execution
+    ids = np.concatenate([np.arange(40), np.arange(10), np.arange(5)])
+    KU, VU = keys_vals(ids, seed=9)
+    t_ref, ok_r, c_r = ch.update_serial(cfg, t0, KU, VU)
+    t_wav, ok_w, c_w = ch.update(cfg, t0, KU, VU)
+    assert table_diff(t_ref, t_wav) is None
+    np.testing.assert_array_equal(np.asarray(ok_r), np.asarray(ok_w))
+    assert int(c_r.pm_writes) == int(c_w.pm_writes) == 2 * int(ok_r.sum())
+
+
+def test_delete_matches_serial_with_duplicate_stored_keys():
+    """A key stored twice (two duplicate inserts) then deleted twice in ONE
+    batch: the second delete must clear the second slot, as in serial."""
+    cfg = ch.ContinuityConfig(num_buckets=32)
+    ids = np.concatenate([np.arange(20), np.arange(6)])  # 6 keys stored twice
+    K, V = keys_vals(ids)
+    t0, _, _ = ch.insert(cfg, ch.create(cfg), K, V)
+    KD = ycsb.make_key(np.concatenate([np.arange(6), np.arange(12)]))
+    t_ref, ok_r, c_r = ch.delete_serial(cfg, t0, KD)
+    t_wav, ok_w, c_w = ch.delete(cfg, t0, KD)
+    assert table_diff(t_ref, t_wav) is None
+    np.testing.assert_array_equal(np.asarray(ok_r), np.asarray(ok_w))
+    assert int(c_r.pm_writes) == int(c_w.pm_writes) == int(ok_r.sum())
+
+
+def test_load_factor_parity_at_resize_trigger():
+    """The engine must reach the serial path's load factor (within 1%) at
+    the moment inserts first fail (the resize trigger)."""
+    def drive(insert_fn):
+        cfg = ch.ContinuityConfig(num_buckets=20, ext_frac=0.1)
+        t = ch.create(cfg)
+        i = 0
+        while True:
+            K = ycsb.make_key(np.arange(i, i + 4))
+            V = ycsb.make_value(np.random.RandomState(i), 4)
+            t, ok, _ = insert_fn(cfg, t, K, V)
+            i += int(np.asarray(ok).sum())
+            if not bool(np.asarray(ok).all()):
+                return float(ch.load_factor(cfg, t))
+    lf_serial = drive(ch.insert_serial)
+    lf_wave = drive(ch.insert)
+    assert abs(lf_wave - lf_serial) <= 0.01 * max(lf_serial, 1e-9), \
+        (lf_wave, lf_serial)
+
+
+def test_insert_parallel_single_wave_and_ext_grant():
+    """insert_parallel = wave 0 of the engine: first active op per pair
+    executes (batch order priority), the rest retry; extension groups CAN
+    now be granted on the parallel path."""
+    cfg = ch.ContinuityConfig(num_buckets=4, ext_frac=1.0)
+    K, V = keys_vals(np.arange(90))
+    t, ok, retry = ch.insert_parallel(cfg, ch.create(cfg), K, V)
+    r = np.asarray(retry)
+    assert (np.asarray(ok) | r).all()
+    rounds = 0
+    while r.any() and rounds < 95:
+        t, ok, retry = ch.insert_parallel(cfg, t, K, V, mask=jnp.asarray(r))
+        r2 = np.asarray(retry)
+        if r2.sum() == r.sum():        # table full: survivors keep failing
+            break
+        r, rounds = r2, rounds + 1
+    t_ref, _, _ = ch.insert_serial(cfg, ch.create(cfg), K, V)
+    assert ch.items_host(cfg, t) == ch.items_host(cfg, t_ref)
+    assert int(t.ext_count) == int(t_ref.ext_count) >= 1
+
+
+def test_vmapped_insert_matches_serial_per_shard():
+    """The serving page table vmaps the engine over data shards."""
+    cfg = ch.ContinuityConfig(num_buckets=64)
+    DS, B = 3, 40
+    base = ch.create(cfg)
+    tables = ch.ContinuityTable(*jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (DS,) + x.shape), base))
+    K = np.stack([ycsb.make_key(np.arange(i * B, (i + 1) * B))
+                  for i in range(DS)])
+    V = np.stack([ycsb.make_value(np.random.RandomState(i), B)
+                  for i in range(DS)])
+    Kj = jnp.asarray(K.astype(np.uint32))
+    Vj = jnp.asarray(V.astype(np.uint32))
+    out, ok, _ = jax.vmap(
+        lambda t, k, v: ch.insert(cfg, t, k, v))(tables, Kj, Vj)
+    out = ch.ContinuityTable(*out)
+    assert bool(np.asarray(ok).all())
+    for s in range(DS):
+        ref, _, _ = ch.insert_serial(cfg, base, K[s], V[s])
+        shard = ch.ContinuityTable(*[np.asarray(x)[s] for x in out])
+        assert table_diff(ref, shard) is None
+
+
+def test_fused_phase_split_crash_invisible():
+    """Phase 1 (payload scatter) without phase 2 (indicator commit) must be
+    invisible — the engine preserves the paper's log-free atomicity split."""
+    cfg = ch.ContinuityConfig(num_buckets=64)
+    K, V = keys_vals(np.arange(12))
+    t, _, _ = ch.insert(cfg, ch.create(cfg), K[:8], V[:8])
+    before = ch.items_host(cfg, t)
+    # phase 1 only: scatter the payload for a new key, no indicator commit
+    pair, parity = ch.locate(cfg, jnp.asarray(K[8:9]))
+    crashed = ch._scatter_payload(
+        t, jnp.ones((1,), jnp.bool_), pair, jnp.zeros((1,), jnp.int32),
+        jnp.zeros((1,), jnp.int32), jnp.asarray(K[8:9]), jnp.asarray(V[8:9]),
+        cfg.slots_per_pair)
+    assert ch.items_host(cfg, crashed) == before
