@@ -24,28 +24,31 @@ import jax
 import numpy as np
 
 from benchmarks.common import SchemeDriver, timeit
+from repro import api
 from repro.data import ycsb
 
-SCHEMES = ("continuity", "level", "pfarm")
+# registry-driven: every scheme registered with repro.api is benchmarked
+# (continuity, level, pfarm, dense, + anything a later PR registers)
+SCHEMES = tuple(api.available_schemes())
 
 
-def bench_pm_writes(rows):
-    """Table I."""
+def bench_pm_writes(rows, n=512, table_slots=4096):
+    """Table I — through ``repro.api`` (one `CostLedger` per scheme)."""
     rng = np.random.RandomState(0)
-    n = 512
     K = ycsb.make_key(np.arange(n))
     V = ycsb.make_value(rng, n)
     for s in SCHEMES:
-        d = SchemeDriver(s, table_slots=4096)
-        _, ci = d.insert(K, V)
-        _, cu = d.update(K, ycsb.make_value(rng, n))
-        _, cd = d.delete(K[: n // 2])
+        store = api.make_store(s, table_slots=table_slots)
+        t = store.create()
+        t, ri = store.insert(t, K, V)
+        t, ru = store.update(t, K, ycsb.make_value(rng, n))
+        t, rd = store.delete(t, K[: n // 2])
         rows.append((f"pm_writes_insert[{s}]", 0.0,
-                     f"{float(ci.pm_writes)/float(ci.ops):.2f}"))
+                     f"{ri.ledger.pm_per_op():.2f}"))
         rows.append((f"pm_writes_update[{s}]", 0.0,
-                     f"{float(cu.pm_writes)/float(cu.ops):.2f}"))
+                     f"{ru.ledger.pm_per_op():.2f}"))
         rows.append((f"pm_writes_delete[{s}]", 0.0,
-                     f"{float(cd.pm_writes)/float(cd.ops):.2f}"))
+                     f"{rd.ledger.pm_per_op():.2f}"))
 
 
 def bench_access_amp(rows):
@@ -157,24 +160,23 @@ def bench_update_micro(rows, num_records=2000):
 
 def bench_load_factor(rows):
     """Fig 18: load factor at each resize trigger; 3 extension policies."""
-    import repro.core.continuity as ch
     rng = np.random.RandomState(6)
     for frac, label in ((0.0, "none"), (1 / 20, "1/20"), (1 / 10, "1/10")):
-        cfg = ch.ContinuityConfig(num_buckets=20, ext_frac=frac)
-        table = ch.create(cfg)
+        store = api.make_store("continuity", table_slots=200, ext_frac=frac)
+        table = store.create()
         lfs = []
         next_id = 0
         for resize_round in range(6):
             while True:
                 K = ycsb.make_key(np.arange(next_id, next_id + 8))
                 V = ycsb.make_value(rng, 8)
-                table, ok, _ = ch.insert(cfg, table, K, V)
-                okn = np.asarray(ok)
+                table, res = store.insert(table, K, V)
+                okn = np.asarray(res.ok)
                 next_id += int(okn.sum())
                 if not okn.all():
                     break
-            lfs.append(float(ch.load_factor(cfg, table)))
-            cfg, table = ch.resize(cfg, table)
+            lfs.append(float(store.load_factor(table)))
+            store, table = store.resize(table)
         rows.append((f"load_factor[{label}]", 0.0,
                      " ".join(f"{x:.2f}" for x in lfs)))
 
@@ -182,41 +184,45 @@ def bench_load_factor(rows):
 def bench_write_batch_sweep(rows, batches=(64, 512, 4096), iters=3):
     """Serial-scan vs wave-vectorized write paths across batch sizes.
 
-    Returns the BENCH_hash.json payload: per (op, path, batch) ops/s and the
-    exact PM-write counters. The counters MATCH between paths whenever the
-    extension pool is not exhausted mid-batch — true for every config in
-    this sweep (the engine is an execution-strategy change, not a protocol
-    change; see ``continuity.insert`` for the exhaustion caveat).
+    Both paths run through ``repro.api`` — the execution strategy is the
+    `ExecPolicy` the store was built with, which is the whole point of the
+    policy boundary.  Returns the BENCH_hash.json payload: per (op, path,
+    batch) ops/s and the exact PM-write counters. The counters MATCH
+    between paths whenever the extension pool is not exhausted mid-batch —
+    true for every config in this sweep (the engine is an execution-
+    strategy change, not a protocol change; see ``continuity.insert`` for
+    the exhaustion caveat).
     """
-    import repro.core.continuity as ch
     from benchmarks.common import timeit
     rng = np.random.RandomState(7)
     sweep = {}
     for B in batches:
-        pairs = max(4096, 4 * B) // 20
-        cfg = ch.ContinuityConfig(num_buckets=2 * pairs)
+        slots = max(4096, 4 * B)
+        stores = {
+            "serial": api.make_store("continuity", table_slots=slots,
+                                     policy=api.ExecPolicy(engine="serial")),
+            "wave": api.make_store("continuity", table_slots=slots),
+        }
         K = ycsb.make_key(np.arange(B))
         V = ycsb.make_value(rng, B)
         V2 = ycsb.make_value(rng, B)
-        base = ch.create(cfg)
-        loaded, _, _ = ch.insert(cfg, base, K, V)   # for update/delete timing
-        cases = {
-            "insert": {"serial": lambda: ch.insert_serial(cfg, base, K, V),
-                       "wave": lambda: ch.insert(cfg, base, K, V)},
-            "update": {"serial": lambda: ch.update_serial(cfg, loaded, K, V2),
-                       "wave": lambda: ch.update(cfg, loaded, K, V2)},
-            "delete": {"serial": lambda: ch.delete_serial(cfg, loaded, K),
-                       "wave": lambda: ch.delete(cfg, loaded, K)},
-        }
-        for op, paths in cases.items():
-            for path, fn in paths.items():
-                med, (_, ok, ctr) = timeit(fn, warmup=1, iters=iters)
+        base = stores["wave"].create()
+        loaded, _ = stores["wave"].insert(base, K, V)  # for update/delete
+        for path, st in stores.items():
+            cases = {
+                "insert": lambda st=st: st.insert(base, K, V),
+                "update": lambda st=st: st.update(loaded, K, V2),
+                "delete": lambda st=st: st.delete(loaded, K),
+            }
+            for op, fn in cases.items():
+                med, (_, res) = timeit(fn, warmup=1, iters=iters)
                 cell = {"ops_per_s": B / med, "us_per_op": med / B * 1e6,
-                        "pm_writes": int(ctr.pm_writes),
-                        "succeeded": int(np.asarray(ok).sum())}
+                        "pm_writes": int(res.ledger.pm_writes),
+                        "succeeded": int(np.asarray(res.ok).sum())}
                 sweep.setdefault(op, {}).setdefault(path, {})[str(B)] = cell
                 rows.append((f"{op}_{path}_b{B}[continuity]", med / B * 1e6,
-                             f"{B/med:.0f} ops/s pm={int(ctr.pm_writes)}"))
+                             f"{B/med:.0f} ops/s "
+                             f"pm={int(res.ledger.pm_writes)}"))
     speedups = {
         f"{op}_b{B}": (sweep[op]["wave"][str(B)]["ops_per_s"]
                        / sweep[op]["serial"][str(B)]["ops_per_s"])

@@ -46,7 +46,7 @@ def bench_paged_decode(rows):
 
 def bench_prefix_sharing(rows):
     """Content-addressed page keys: identical prompt prefixes dedupe."""
-    from repro.core import continuity as ch
+    from repro import api
     from repro.serving.engine import content_page_keys
 
     rng = np.random.RandomState(0)
@@ -60,15 +60,15 @@ def bench_prefix_sharing(rows):
     rows.append(("prefix_share_unique_pages", 0.0,
                  f"{uniq}/{total} ({1-uniq/total:.0%} shared)"))
 
-    cfg = ch.ContinuityConfig(num_buckets=64)
-    t = ch.create(cfg)
+    store = api.make_store("continuity", table_slots=640)
+    t = store.create()
     vals = jnp.tile(jnp.arange(total, dtype=jnp.uint32)[:, None], (1, 4))
-    t, ok, ctr = ch.insert(cfg, t, jnp.asarray(flat), vals)
+    t, _ = store.insert(t, jnp.asarray(flat), vals)
     # duplicate keys simply insert twice in this path; a dedup insert would
     # first lookup — count how many lookups hit after the first copy
-    res = ch.lookup(cfg, t, jnp.asarray(flat))
+    hit = store.lookup(t, jnp.asarray(flat))
     rows.append(("prefix_share_lookup_hits", 0.0,
-                 f"{int(res.found.sum())}/{total}"))
+                 f"{int(hit.ok.sum())}/{total}"))
 
 
 def run(rows):

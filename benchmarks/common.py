@@ -1,4 +1,14 @@
-"""Shared benchmark utilities: timing + scheme-uniform op drivers."""
+"""Shared benchmark utilities: timing + the legacy scheme-driver shim.
+
+``SchemeDriver`` predates ``repro.api`` and is now a thin shim over it —
+kept so existing bench scripts and notebooks keep running.  New code
+should use the registry directly:
+
+    from repro import api
+    store = api.make_store("continuity", table_slots=4096)
+
+(see README.md "Migrating to repro.api" for the full old->new mapping).
+"""
 
 from __future__ import annotations
 
@@ -6,6 +16,8 @@ import time
 
 import jax
 import numpy as np
+
+from repro import api
 
 
 def timeit(fn, *args, warmup=1, iters=3):
@@ -23,61 +35,41 @@ def timeit(fn, *args, warmup=1, iters=3):
 
 
 class SchemeDriver:
-    """Uniform (insert/delete/update/lookup) driver over the three schemes.
+    """DEPRECATED shim: uniform op driver over the registered schemes.
 
-    ``continuity`` runs the wave-vectorized mutation engine;
-    ``continuity_serial`` pins the reference ``lax.scan`` write paths (the
-    before/after pair for the EXPERIMENTS.md §Perf write-batch sweep).
+    ``<name>_serial`` pins ``ExecPolicy(engine="serial")`` (the before/
+    after pair for the EXPERIMENTS.md §Perf write-batch sweep).  All
+    behaviour lives in `repro.api`; this class only carries mutable table
+    state between calls the way the old driver did.
     """
 
     def __init__(self, name: str, table_slots: int = 4096):
-        import repro.core.continuity as ch
-        import repro.core.level as lv
-        import repro.core.pfarm as pf
         self.name = name
-        self.serial = name.endswith("_serial")
-        if name in ("continuity", "continuity_serial"):
-            # slots = pairs * 20
-            pairs = table_slots // 20
-            self.cfg = ch.ContinuityConfig(num_buckets=2 * pairs)
-            self.mod = ch
-        elif name == "level":
-            # slots = 1.5 * num_top * bucket_slots
-            top = int(table_slots / 1.5 / 4)
-            self.cfg = lv.LevelConfig(num_top=top + top % 2)
-            self.mod = lv
-        elif name == "pfarm":
-            nb = int(table_slots / 1.25 / 4)
-            self.cfg = pf.PFarmConfig(num_buckets=nb)
-            self.mod = pf
-        else:
-            raise ValueError(name)
-        self.table = self.mod.create(self.cfg)
-
-    def _op(self, op: str):
-        if self.serial:
-            return getattr(self.mod, op + "_serial")
-        return getattr(self.mod, op)
+        scheme = name[:-len("_serial")] if name.endswith("_serial") else name
+        policy = (api.ExecPolicy(engine="serial")
+                  if name.endswith("_serial") else api.ExecPolicy())
+        self.store = api.make_store(scheme, table_slots=table_slots,
+                                    policy=policy)
+        self.cfg = self.store.cfg
+        self.table = self.store.create()
 
     def insert(self, keys, vals):
-        self.table, ok, ctr = self._op("insert")(self.cfg, self.table, keys, vals)
-        return ok, ctr
+        self.table, res = self.store.insert(self.table, keys, vals)
+        return res.ok, res.ledger
 
     def update(self, keys, vals):
-        self.table, ok, ctr = self._op("update")(self.cfg, self.table, keys, vals)
-        return ok, ctr
+        self.table, res = self.store.update(self.table, keys, vals)
+        return res.ok, res.ledger
 
     def delete(self, keys):
-        self.table, ok, ctr = self._op("delete")(self.cfg, self.table, keys)
-        return ok, ctr
+        self.table, res = self.store.delete(self.table, keys)
+        return res.ok, res.ledger
 
     def lookup(self, keys):
-        res = self.mod.lookup(self.cfg, self.table, keys)
-        ctr = self.mod.read_counters(self.cfg, res) \
-            if hasattr(self.mod, "read_counters") else None
-        return res, ctr
+        res = self.store.lookup(self.table, keys)
+        return res, res.ledger
 
     def lookup_fn(self):
         """Jit-stable lookup callable for timing."""
-        mod, cfg = self.mod, self.cfg
-        return lambda table, keys: mod.lookup(cfg, table, keys)
+        store = self.store
+        return lambda table, keys: store.lookup(table, keys)

@@ -1,16 +1,23 @@
 """Benchmark harness: one section per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV. Sections:
-  * bench_hash    — Table I (PM writes), Figs 4–18 (YCSB throughput/latency,
-                    search micro, update micro, load factor), access-amp
+  * hash          — everything below (Table I + Figs 4–18 + access-amp)
+  * pm_writes     — Table I (PM writes per op, via repro.api CostLedger)
+  * access_amp    — contiguous fetches + bytes per lookup
+  * search        — positive/negative search micro (Figs 6/7 + 13/14)
+  * update_micro  — 100% updates (Figs 10/17)
+  * ycsb          — YCSB-A/B/C/D/F throughput + latency (Figs 4–10/11–17)
+  * load_factor   — load factor at each resize (Fig 18)
   * bench_serving — technique-on-the-hot-path serving numbers
   * roofline      — per-(arch x shape x mesh) dry-run roofline rows
                     (requires experiments/dryrun/*.json from
                     ``python -m repro.launch.dryrun --all``)
 
 The serial-vs-wave write-batch sweep always runs and is written to
-``BENCH_hash.json`` (ops/s + PM-write counters at batch {64, 512, 4096}) so
-successive PRs accumulate a perf trajectory — see EXPERIMENTS.md §Perf.
+``--bench-json`` (default BENCH_hash.json; ops/s + PM-write counters at
+``--sweep-batches``) so successive PRs accumulate a perf trajectory — see
+EXPERIMENTS.md §Perf.  ``benchmarks/validate_bench.py`` checks the emitted
+artifact against its schema (CI runs it on the smoke sweep).
 """
 
 from __future__ import annotations
@@ -18,30 +25,51 @@ from __future__ import annotations
 import argparse
 import json
 
+HASH_SECTIONS = ("pm_writes", "access_amp", "search", "update_micro",
+                 "ycsb", "load_factor")
+SECTIONS = HASH_SECTIONS + ("hash", "serving", "roofline")
+
 
 def main(argv=None) -> None:
     p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("--sections", default="hash,serving,roofline",
-                   help="comma-separated subset of hash,serving,roofline "
+                   help="comma-separated subset of "
+                        f"{', '.join(SECTIONS)} "
                         "(the write-batch sweep always runs)")
     p.add_argument("--bench-json", default="BENCH_hash.json",
                    help="where to write the write-batch sweep artifact")
+    p.add_argument("--sweep-batches", default="64,512,4096",
+                   help="batch sizes for the serial-vs-wave sweep "
+                        "(smoke CI uses a small subset)")
     args = p.parse_args(argv)
     sections = {s for s in args.sections.split(",") if s}
-    unknown = sections - {"hash", "serving", "roofline"}
+    unknown = sections - set(SECTIONS)
     if unknown:
-        p.error(f"unknown sections {sorted(unknown)}; "
-                f"valid: hash, serving, roofline (or empty for sweep only)")
+        p.error(f"unknown sections {sorted(unknown)}; valid: "
+                f"{', '.join(SECTIONS)} (or empty for sweep only)")
+    if "hash" in sections:
+        sections |= set(HASH_SECTIONS)
+    batches = tuple(int(b) for b in args.sweep_batches.split(",") if b)
 
     rows = []
     from benchmarks import bench_hash, bench_serving, roofline
-    if "hash" in sections:
-        bench_hash.run(rows)
+    if "pm_writes" in sections:
+        bench_hash.bench_pm_writes(rows)
+    if "access_amp" in sections:
+        bench_hash.bench_access_amp(rows)
+    if "search" in sections:
+        bench_hash.bench_search_micro(rows)
+    if "update_micro" in sections:
+        bench_hash.bench_update_micro(rows)
+    if "ycsb" in sections:
+        bench_hash.bench_ycsb(rows)
+    if "load_factor" in sections:
+        bench_hash.bench_load_factor(rows)
     if "serving" in sections:
         bench_serving.run(rows)
     if "roofline" in sections:
         roofline.run(rows)
-    payload = bench_hash.bench_write_batch_sweep(rows)
+    payload = bench_hash.bench_write_batch_sweep(rows, batches=batches)
     with open(args.bench_json, "w") as f:
         json.dump(payload, f, indent=2, sort_keys=True)
     print("name,us_per_call,derived")

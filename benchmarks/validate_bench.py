@@ -1,0 +1,120 @@
+"""Schema check for the BENCH_hash.json perf artifact.
+
+The artifact is the cross-PR perf trajectory (EXPERIMENTS.md §Perf), so CI
+guards its shape: a structural schema (hand-rolled — no jsonschema dep in
+the container) over the payload ``benchmarks/run.py`` emits:
+
+    {
+      "write_batch_sweep": {<op>: {<path>: {<batch>: CELL}}},
+      "wave_over_serial_speedup": {"<op>_b<batch>": float}
+    }
+
+    CELL = {"ops_per_s": float > 0, "us_per_op": float > 0,
+            "pm_writes": int >= 0, "succeeded": int >= 0}
+
+Usage: python benchmarks/validate_bench.py [BENCH_hash.json]
+Exit 0 on a valid artifact; raises/exits 1 with the offending path else.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+OPS = ("insert", "update", "delete")
+PATHS = ("serial", "wave")
+CELL_FIELDS = {
+    "ops_per_s": (float, int),
+    "us_per_op": (float, int),
+    "pm_writes": (int,),
+    "succeeded": (int,),
+}
+
+
+class SchemaError(ValueError):
+    pass
+
+
+def _fail(path: str, msg: str):
+    raise SchemaError(f"{path}: {msg}")
+
+
+def _check_cell(cell, path: str) -> None:
+    if not isinstance(cell, dict):
+        _fail(path, f"expected object, got {type(cell).__name__}")
+    for field, types in CELL_FIELDS.items():
+        if field not in cell:
+            _fail(path, f"missing field {field!r}")
+        v = cell[field]
+        if not isinstance(v, types) or isinstance(v, bool):
+            _fail(f"{path}.{field}", f"expected {types}, got {v!r}")
+        if v < 0:
+            _fail(f"{path}.{field}", f"negative value {v!r}")
+    for field in ("ops_per_s", "us_per_op"):
+        if not cell[field] > 0:
+            _fail(f"{path}.{field}", f"must be > 0, got {cell[field]!r}")
+    extra = set(cell) - set(CELL_FIELDS)
+    if extra:
+        _fail(path, f"unexpected fields {sorted(extra)}")
+
+
+def validate(payload: dict) -> None:
+    """Raise `SchemaError` unless ``payload`` is a valid sweep artifact."""
+    if not isinstance(payload, dict):
+        _fail("$", "top level must be an object")
+    missing = {"write_batch_sweep", "wave_over_serial_speedup"} - set(payload)
+    if missing:
+        _fail("$", f"missing keys {sorted(missing)}")
+
+    sweep = payload["write_batch_sweep"]
+    if set(sweep) - set(OPS) or not sweep:
+        _fail("write_batch_sweep", f"ops must be a subset of {OPS}, "
+                                   f"got {sorted(sweep)}")
+    batches = None
+    for op, by_path in sweep.items():
+        if set(by_path) != set(PATHS):
+            _fail(f"write_batch_sweep.{op}",
+                  f"paths must be exactly {PATHS}, got {sorted(by_path)}")
+        for path, by_batch in by_path.items():
+            here = f"write_batch_sweep.{op}.{path}"
+            if not by_batch:
+                _fail(here, "no batch cells")
+            for b, cell in by_batch.items():
+                if not b.isdigit() or int(b) <= 0:
+                    _fail(here, f"batch key {b!r} is not a positive int")
+                _check_cell(cell, f"{here}.{b}")
+            keys = set(by_batch)
+            if batches is None:
+                batches = keys
+            elif keys != batches:
+                _fail(here, f"inconsistent batch set {sorted(keys)} "
+                            f"vs {sorted(batches)}")
+
+    speed = payload["wave_over_serial_speedup"]
+    want = {f"{op}_b{b}" for op in sweep for b in batches}
+    if set(speed) != want:
+        _fail("wave_over_serial_speedup",
+              f"keys {sorted(set(speed) ^ want)} mismatch the sweep grid")
+    for k, v in speed.items():
+        if not isinstance(v, (int, float)) or isinstance(v, bool) or v <= 0:
+            _fail(f"wave_over_serial_speedup.{k}",
+                  f"expected positive number, got {v!r}")
+
+
+def main(argv=None) -> int:
+    args = argv if argv is not None else sys.argv[1:]
+    fname = args[0] if args else "BENCH_hash.json"
+    with open(fname) as f:
+        payload = json.load(f)
+    try:
+        validate(payload)
+    except SchemaError as e:
+        print(f"INVALID {fname}: {e}", file=sys.stderr)
+        return 1
+    print(f"OK {fname}: valid write-batch sweep artifact "
+          f"({len(payload['write_batch_sweep'])} ops)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

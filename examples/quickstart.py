@@ -1,25 +1,28 @@
-"""Quickstart: continuity hashing in 60 lines.
+"""Quickstart: continuity hashing through `repro.api` in 60 lines.
 
-Builds a table, runs the paper's op mix, and prints the metrics the paper
+Builds a store, runs the paper's op mix, and prints the metrics the paper
 reports: PM writes per op (Table I), contiguous fetches per lookup (the
-RDMA-amplification claim), and the load factor.
+RDMA-amplification claim), and the load factor — all read off the one
+`CostLedger` every scheme shares. Swap the scheme name for "level",
+"pfarm" or "dense" and the same script benchmarks the baselines.
 
 Run: PYTHONPATH=src python examples/quickstart.py
 """
 
 import numpy as np
 
-import repro.core.continuity as ch
+from repro import api
 from repro.data import ycsb
 
 
 def main():
-    cfg = ch.ContinuityConfig(num_buckets=256)   # 128 segment pairs
+    store = api.make_store("continuity", table_slots=2560)  # 128 pairs
+    cfg = store.cfg
     print(f"table: {cfg.num_buckets} buckets, {cfg.num_pairs} segment pairs, "
           f"{cfg.slots_per_pair} slots/pair (+{cfg.ext_slots} ext), "
           f"indicator {cfg.total_bits} bits, segment fetch "
           f"{cfg.segment_bytes} B")
-    table = ch.create(cfg)
+    table = store.create()
 
     rng = np.random.RandomState(0)
     n = 1500
@@ -27,41 +30,37 @@ def main():
     vals = ycsb.make_value(rng, n)
 
     # server-side inserts: payload write + ONE atomic indicator commit each
-    table, ok, ctr = ch.insert(cfg, table, keys, vals)
-    print(f"\ninsert: {int(ok.sum())}/{n} ok, "
-          f"{float(ctr.pm_writes)/n:.2f} PM writes/op (paper Table I: 2)")
+    table, ins = store.insert(table, keys, vals)
+    print(f"\ninsert: {int(ins.ok.sum())}/{n} ok, "
+          f"{ins.ledger.pm_per_op():.2f} PM writes/op (paper Table I: 2)")
 
     # client-side reads: ONE contiguous segment fetch per lookup
-    res = ch.lookup(cfg, table, keys)
-    rc = ch.read_counters(cfg, res)
-    print(f"lookup: {int(res.found.sum())}/{n} hits, "
-          f"{float(rc.rdma_reads)/n:.2f} contiguous fetches/op "
+    hit = store.lookup(table, keys)
+    print(f"lookup: {int(hit.ok.sum())}/{n} hits, "
+          f"{hit.ledger.reads_per_op():.2f} contiguous fetches/op "
           f"(level hashing needs up to 4), "
-          f"{float(rc.bytes_fetched)/n:.0f} B/op")
+          f"{hit.ledger.bytes_per_op():.0f} B/op")
 
-    neg = ycsb.negative_keys(rng, n, 500)
-    nres = ch.lookup(cfg, table, neg)
-    print(f"negative search: {int(nres.found.sum())} false hits, "
-          f"{float(np.mean(np.asarray(nres.reads))):.2f} fetches/op")
+    neg = store.lookup(table, ycsb.negative_keys(rng, n, 500))
+    print(f"negative search: {int(neg.ok.sum())} false hits, "
+          f"{neg.ledger.reads_per_op():.2f} fetches/op")
 
     # out-of-place updates: two indicator bits flip in ONE atomic store
-    table, uok, uc = ch.update(cfg, table, keys[:500], ycsb.make_value(rng, 500))
-    print(f"update: {int(uok.sum())}/500 ok, "
-          f"{float(uc.pm_writes)/500:.2f} PM writes/op (paper: 2)")
+    table, upd = store.update(table, keys[:500], ycsb.make_value(rng, 500))
+    print(f"update: {int(upd.ok.sum())}/500 ok, "
+          f"{upd.ledger.pm_per_op():.2f} PM writes/op (paper: 2)")
 
-    table, dok, dc = ch.delete(cfg, table, keys[:250])
-    print(f"delete: {int(dok.sum())}/250 ok, "
-          f"{float(dc.pm_writes)/250:.2f} PM writes/op (paper: 1)")
+    table, dele = store.delete(table, keys[:250])
+    print(f"delete: {int(dele.ok.sum())}/250 ok, "
+          f"{dele.ledger.pm_per_op():.2f} PM writes/op (paper: 1)")
 
-    print(f"\nload factor: {float(ch.load_factor(cfg, table)):.2f} "
-          f"({int(table.count)} items, {int(table.ext_count)} extension "
-          f"groups in use)")
+    print(f"\nstats: {store.stats(table)}")
 
-    # log-free resizing (insert-to-new then delete-from-old per item)
-    cfg2, table2 = ch.resize(cfg, table)
-    res2 = ch.lookup(cfg2, table2, keys[250:])
-    print(f"resize 2x: {int(res2.found.sum())}/{n-250} items survive, "
-          f"new load factor {float(ch.load_factor(cfg2, table2)):.2f}")
+    # log-free resizing (rehash every live item into a 2x store)
+    store2, table2 = store.resize(table)
+    hit2 = store2.lookup(table2, keys[250:])
+    print(f"resize 2x: {int(hit2.ok.sum())}/{n-250} items survive, "
+          f"new load factor {float(store2.load_factor(table2)):.2f}")
 
 
 if __name__ == "__main__":

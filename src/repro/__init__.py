@@ -1,0 +1,27 @@
+"""repro — Consistent RDMA-Friendly Hashing on Remote Persistent Memory,
+grown into a jax/pallas serving system.
+
+Stable import surface (everything else is internal layout):
+
+    from repro import api                  # the hash-store interface
+    from repro.api import make_store, ExecPolicy, CostLedger
+
+Deep imports of ``repro.core.continuity`` et al. keep working but are the
+module-level API; new code should go through ``repro.api`` (see DESIGN.md).
+The lazy ``__getattr__`` keeps ``import repro`` free of jax initialization.
+"""
+
+_SUBMODULES = ("api", "core", "kernels", "serving", "data", "configs",
+               "models", "launch", "distribution", "training", "checkpoint",
+               "runtime")
+
+
+def __getattr__(name):
+    if name in _SUBMODULES:
+        import importlib
+        return importlib.import_module(f"repro.{name}")
+    raise AttributeError(f"module 'repro' has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(_SUBMODULES)

@@ -1,0 +1,36 @@
+"""`repro.api` — the scheme-agnostic hash-store interface.
+
+One typed surface over every index this repo implements (the paper's
+continuity hashing, its two baselines, and the dense block-table
+reference), so that the serving page table, the YCSB harness, the
+benchmarks and the tests all program against ONE protocol and the
+comparative claims (1 RDMA read per lookup, Table I PM-write counts) fall
+out of one shared `CostLedger` instead of per-module counters.
+
+    from repro import api
+
+    store = api.make_store("continuity", table_slots=4096)
+    table = store.create()
+    table, res = store.insert(table, keys, vals)
+    hits = store.lookup(table, keys)
+    print(res.ledger.pm_per_op(), hits.ledger.reads_per_op())
+
+Execution strategy is picked at this boundary via `ExecPolicy` (wave
+engine vs serial scan oracle; jnp gather vs Pallas probe kernel), and new
+schemes plug in through `register_scheme` — see DESIGN.md §6.
+"""
+
+from repro.api.registry import (available_schemes, get_scheme, make_store,
+                                register_scheme)
+from repro.api.stores import (ContinuityStore, DenseStore, LevelStore,
+                              PFarmStore, _register_builtin)
+from repro.api.types import (CostLedger, ExecPolicy, HashStore, OpResult,
+                             store_shard_axes)
+
+_register_builtin(register_scheme)
+
+__all__ = [
+    "available_schemes", "get_scheme", "make_store", "register_scheme",
+    "ContinuityStore", "DenseStore", "LevelStore", "PFarmStore",
+    "CostLedger", "ExecPolicy", "HashStore", "OpResult", "store_shard_axes",
+]

@@ -1,0 +1,50 @@
+"""Scheme registry: one name -> store-factory map for every hash scheme.
+
+A factory takes ``(table_slots, policy, **overrides)`` and returns a store
+satisfying the `HashStore` protocol, sized so the table offers roughly
+``table_slots`` storage units (the cross-scheme fairness knob the paper's
+evaluation uses: equal capacity, not equal bucket counts).
+
+    from repro import api
+    store = api.make_store("continuity", table_slots=4096)
+    table = store.create()
+
+``register_scheme`` is the extension point every future scheme plugs into:
+benchmarks, the YCSB harness, the property tests, and the serving page
+table all iterate ``available_schemes()`` instead of hard-coding names.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional
+
+from repro.api.types import ExecPolicy, HashStore
+
+_REGISTRY: Dict[str, Callable[..., HashStore]] = {}
+
+
+def register_scheme(name: str, factory: Callable[..., HashStore],
+                    *, overwrite: bool = False) -> None:
+    """Register ``factory(table_slots, policy, **kw) -> store`` under ``name``."""
+    if name in _REGISTRY and not overwrite:
+        raise ValueError(f"scheme {name!r} already registered")
+    _REGISTRY[name] = factory
+
+
+def available_schemes() -> tuple:
+    """All registered scheme names (deterministic registration order)."""
+    return tuple(_REGISTRY)
+
+
+def get_scheme(name: str) -> Callable[..., HashStore]:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown scheme {name!r}; registered: {sorted(_REGISTRY)}") from None
+
+
+def make_store(name: str, *, table_slots: int = 4096,
+               policy: Optional[ExecPolicy] = None, **overrides) -> HashStore:
+    """Build a ready-to-use store for ``name`` (see module docstring)."""
+    return get_scheme(name)(table_slots, policy or ExecPolicy(), **overrides)

@@ -1,0 +1,291 @@
+"""Registered `HashStore` adapters for the four built-in schemes.
+
+Each adapter is a frozen dataclass (hashable — safe as jit static / inside
+other frozen configs) binding a scheme module's pure functions to the
+protocol's calling convention, the unified `OpResult`/`CostLedger`, and an
+`ExecPolicy`.  Registration happens at import of ``repro.api``:
+
+  * ``continuity`` — the paper's scheme; `ExecPolicy.engine` selects the
+    wave-vectorized mutation engine vs the serial ``lax.scan`` oracle, and
+    `ExecPolicy.probe` selects the pure-jnp gather vs the Pallas segment-
+    probe kernel (vs its jnp reference) for lookups;
+  * ``level``  — Level hashing (OSDI'18), the paper's PM-friendly baseline;
+  * ``pfarm``  — P-FaRM-KV (FaRM-KV x RECIPE), the paper's RDMA baseline;
+  * ``dense``  — the dense block-table reference (vLLM-style), the
+    correctness oracle and the non-hashed serving page-table backend.
+
+Factories size the table to ``table_slots`` storage units so cross-scheme
+numbers compare at equal capacity (the paper's evaluation setup).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, ClassVar, Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.api.types import ExecPolicy, OpResult
+from repro.core import continuity as ch
+from repro.core import dense as dn
+from repro.core import level as lv
+from repro.core import pfarm as pf
+from repro.core.continuity import KEY_LANES, VAL_LANES
+
+
+def _check_resize_lossless(name: str, old_table, new_table) -> None:
+    lost = int(old_table.count) - int(new_table.count)
+    if lost:
+        raise RuntimeError(
+            f"resize dropped {lost} live item(s) from the {name!r} store "
+            f"({int(old_table.count)} -> {int(new_table.count)}); grow by a "
+            f"larger factor or rehash manually")
+
+
+@dataclasses.dataclass(frozen=True)
+class _ModuleStore:
+    """Shared plumbing: scheme-module functions -> protocol methods."""
+
+    cfg: Any
+    policy: ExecPolicy = ExecPolicy()
+
+    name: ClassVar[str] = "?"
+
+    # -- per-scheme hooks ---------------------------------------------------
+    @property
+    def _mod(self):
+        raise NotImplementedError
+
+    def _insert_fn(self):
+        return self._mod.insert
+
+    def _update_fn(self):
+        return self._mod.update
+
+    def _delete_fn(self):
+        return self._mod.delete
+
+    def _lookup_res(self, table, keys):
+        return self._mod.lookup(self.cfg, table, keys)
+
+    def _extract(self, table):
+        """(keys, vals, live_mask) of every storage slot — generic resize."""
+        raise NotImplementedError
+
+    def total_slots(self, table=None) -> float:
+        raise NotImplementedError
+
+    # -- protocol -----------------------------------------------------------
+    def with_policy(self, policy: ExecPolicy) -> "_ModuleStore":
+        return dataclasses.replace(self, policy=policy)
+
+    def create(self):
+        return self._mod.create(self.cfg)
+
+    def insert(self, table, keys, vals, mask=None) -> Tuple[Any, OpResult]:
+        table, ok, ctr = self._insert_fn()(self.cfg, table, keys, vals, mask)
+        return table, OpResult(ok=ok, ledger=ctr)
+
+    def update(self, table, keys, vals, mask=None) -> Tuple[Any, OpResult]:
+        table, ok, ctr = self._update_fn()(self.cfg, table, keys, vals, mask)
+        return table, OpResult(ok=ok, ledger=ctr)
+
+    def delete(self, table, keys, mask=None) -> Tuple[Any, OpResult]:
+        table, ok, ctr = self._delete_fn()(self.cfg, table, keys, mask)
+        return table, OpResult(ok=ok, ledger=ctr)
+
+    def lookup(self, table, keys) -> OpResult:
+        res = self._lookup_res(table, keys)
+        ctr = self._mod.read_counters(self.cfg, res)
+        return OpResult(ok=res.found, ledger=ctr, values=res.values,
+                        reads=res.reads)
+
+    def resize(self, table, factor: int = 2) -> Tuple["_ModuleStore", Any]:
+        """Rehash every live item into a ``factor``x-capacity store.
+
+        Host-level op (blocks on the result): raises if any live item fails
+        to reinsert (possible for the bucketed baselines when candidate
+        buckets collide even at the larger size) instead of dropping it."""
+        new = dataclasses.replace(self, cfg=self.cfg.grow(factor))
+        keys, vals, live = self._extract(table)
+        new_table, _ = new.insert(new.create(), keys, vals, live)
+        _check_resize_lossless(self.name, table, new_table)
+        return new, new_table
+
+    def load_factor(self, table) -> jnp.ndarray:
+        return self._mod.load_factor(self.cfg, table)
+
+    def stats(self, table) -> dict:
+        """Host-side diagnostics (blocks on device values)."""
+        return {
+            "scheme": self.name,
+            "count": int(table.count),
+            "total_slots": float(self.total_slots(table)),
+            "load_factor": float(self.load_factor(table)),
+        }
+
+
+@dataclasses.dataclass(frozen=True)
+class ContinuityStore(_ModuleStore):
+    """The paper's continuity hashing behind the protocol.
+
+    ``policy.engine``: ``wave`` -> the fused wave-vectorized mutation
+    engine; ``serial`` -> the byte-identical ``lax.scan`` reference.
+    ``policy.probe``: ``gather`` -> pure-jnp lookup; ``pallas`` /
+    ``reference`` -> the Pallas segment-probe kernel / its jnp oracle
+    (`repro.kernels.ops.probe_lookup`)."""
+
+    cfg: ch.ContinuityConfig = ch.ContinuityConfig(num_buckets=256)
+    name: ClassVar[str] = "continuity"
+
+    @property
+    def _mod(self):
+        return ch
+
+    def _insert_fn(self):
+        return ch.insert_serial if self.policy.engine == "serial" else ch.insert
+
+    def _update_fn(self):
+        return ch.update_serial if self.policy.engine == "serial" else ch.update
+
+    def _delete_fn(self):
+        return ch.delete_serial if self.policy.engine == "serial" else ch.delete
+
+    def _lookup_res(self, table, keys):
+        if self.policy.probe == "gather":
+            return ch.lookup(self.cfg, table, keys)
+        from repro.kernels import ops as K          # deferred: pallas import
+        return K.probe_lookup(
+            self.cfg, table, keys,
+            use_kernel=self.policy.probe == "pallas",
+            interpret=self.policy.interpret, qblock=self.policy.qblock)
+
+    def _extract(self, table):
+        return ch.extract_items(self.cfg, table)
+
+    def resize(self, table, factor: int = 2):
+        # delegate to the scheme's own rehash (ONE implementation of the
+        # paper's log-free resizing), keeping the protocol's loss check
+        new_cfg, new_table = ch.resize(self.cfg, table, factor)
+        _check_resize_lossless(self.name, table, new_table)
+        return dataclasses.replace(self, cfg=new_cfg), new_table
+
+    def total_slots(self, table=None) -> float:
+        if table is None:
+            return float(self.cfg.num_pairs * self.cfg.slots_per_pair)
+        return float(ch.capacity(self.cfg, table))
+
+    def stats(self, table) -> dict:
+        out = super().stats(table)
+        out["ext_groups"] = int(table.ext_count)
+        return out
+
+    @classmethod
+    def from_slots(cls, table_slots: int, policy: ExecPolicy = ExecPolicy(),
+                   **overrides) -> "ContinuityStore":
+        per_pair = ch.ContinuityConfig(2).slots_per_pair
+        pairs = max(2, -(-table_slots // per_pair))   # ceil: >= table_slots
+        cfg = dataclasses.replace(
+            ch.ContinuityConfig(num_buckets=2 * pairs), **overrides)
+        return cls(cfg=cfg, policy=policy)
+
+
+def _token_mask(tok: jnp.ndarray, bucket_slots: int) -> jnp.ndarray:
+    bits = (tok[:, None] >> jnp.arange(bucket_slots, dtype=jnp.uint8)) \
+        & jnp.uint8(1)
+    return (bits == 1).reshape(-1)
+
+
+@dataclasses.dataclass(frozen=True)
+class LevelStore(_ModuleStore):
+    """Level hashing baseline (single batched strategy: the scan order —
+    ``policy.engine`` is accepted and irrelevant by construction)."""
+
+    cfg: lv.LevelConfig = lv.LevelConfig(num_top=64)
+    name: ClassVar[str] = "level"
+
+    @property
+    def _mod(self):
+        return lv
+
+    def _extract(self, table):
+        keys = jnp.concatenate([table.tkeys.reshape(-1, KEY_LANES),
+                                table.bkeys.reshape(-1, KEY_LANES)])
+        vals = jnp.concatenate([table.tvals.reshape(-1, VAL_LANES),
+                                table.bvals.reshape(-1, VAL_LANES)])
+        live = jnp.concatenate([_token_mask(table.ttok, self.cfg.bucket_slots),
+                                _token_mask(table.btok, self.cfg.bucket_slots)])
+        return keys, vals, live
+
+    def total_slots(self, table=None) -> float:
+        return float(self.cfg.total_slots)
+
+    @classmethod
+    def from_slots(cls, table_slots: int, policy: ExecPolicy = ExecPolicy(),
+                   **overrides) -> "LevelStore":
+        top = int(table_slots / 1.5 / 4)
+        cfg = dataclasses.replace(
+            lv.LevelConfig(num_top=top + top % 2), **overrides)
+        return cls(cfg=cfg, policy=policy)
+
+
+@dataclasses.dataclass(frozen=True)
+class PFarmStore(_ModuleStore):
+    """P-FaRM-KV baseline (RECIPE logging: 5 PM writes per mutation)."""
+
+    cfg: pf.PFarmConfig = pf.PFarmConfig(num_buckets=64)
+    name: ClassVar[str] = "pfarm"
+
+    @property
+    def _mod(self):
+        return pf
+
+    def _extract(self, table):
+        keys = jnp.concatenate([table.keys.reshape(-1, KEY_LANES),
+                                table.okeys.reshape(-1, KEY_LANES)])
+        vals = jnp.concatenate([table.vals.reshape(-1, VAL_LANES),
+                                table.ovals.reshape(-1, VAL_LANES)])
+        live = jnp.concatenate([_token_mask(table.tok, self.cfg.bucket_slots),
+                                _token_mask(table.otok, self.cfg.bucket_slots)])
+        return keys, vals, live
+
+    def total_slots(self, table=None) -> float:
+        return float(self.cfg.total_slots)
+
+    @classmethod
+    def from_slots(cls, table_slots: int, policy: ExecPolicy = ExecPolicy(),
+                   **overrides) -> "PFarmStore":
+        cfg = dataclasses.replace(
+            pf.PFarmConfig(num_buckets=int(table_slots / 1.25 / 4)),
+            **overrides)
+        return cls(cfg=cfg, policy=policy)
+
+
+@dataclasses.dataclass(frozen=True)
+class DenseStore(_ModuleStore):
+    """Dense block-table reference (no hashing; whole-table lookups)."""
+
+    cfg: dn.DenseConfig = dn.DenseConfig(capacity=256)
+    name: ClassVar[str] = "dense"
+
+    @property
+    def _mod(self):
+        return dn
+
+    def _extract(self, table):
+        return dn.extract_items(self.cfg, table)
+
+    def total_slots(self, table=None) -> float:
+        return float(self.cfg.capacity)
+
+    @classmethod
+    def from_slots(cls, table_slots: int, policy: ExecPolicy = ExecPolicy(),
+                   **overrides) -> "DenseStore":
+        cfg = dataclasses.replace(dn.DenseConfig(capacity=table_slots),
+                                  **overrides)
+        return cls(cfg=cfg, policy=policy)
+
+
+def _register_builtin(registry_register) -> None:
+    for cls in (ContinuityStore, LevelStore, PFarmStore, DenseStore):
+        registry_register(cls.name, cls.from_slots)

@@ -1,0 +1,120 @@
+"""The typed hash-store surface: ``HashStore`` protocol, ``ExecPolicy``,
+``OpResult`` and the unified ``CostLedger``.
+
+Every scheme (continuity, level, pfarm, dense, and anything registered
+later) is exposed as a *store*: a frozen, hashable dataclass bundling the
+static table geometry with an execution policy.  Table STATE stays a pure
+pytree (a flat NamedTuple of arrays) that threads through jit/vmap/scan;
+the store itself is static — safe to close over in jitted callables, use
+as a jit static argument, or embed in other frozen configs (the serving
+``PageGeometry`` does exactly that).
+
+Calling convention (uniform across schemes):
+
+    table            = store.create()
+    table, res       = store.insert(table, keys, vals[, mask])
+    table, res       = store.update(table, keys, vals[, mask])
+    table, res       = store.delete(table, keys[, mask])
+    res              = store.lookup(table, keys)
+    store2, table2   = store.resize(table, factor)
+    lf               = store.load_factor(table)
+    info             = store.stats(table)          # host-side dict
+
+``res`` is an `OpResult`; ``res.ledger`` is the `CostLedger` every scheme
+reports in the same units, which is what makes the paper's Table I an
+apples-to-apples subtraction: ``res.ledger.pm_per_op()``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional, Protocol, Tuple, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.pmem import CostLedger
+
+ENGINES = ("wave", "serial")
+PROBES = ("gather", "pallas", "reference")
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecPolicy:
+    """Execution strategy, selected at the API boundary (not per-call kwargs).
+
+    * ``engine`` — server-side mutation strategy: ``"wave"`` (the batch-
+      vectorized wave engine where the scheme has one; continuity does) or
+      ``"serial"`` (the ``lax.scan`` reference order).  Schemes with a
+      single strategy (level, pfarm, dense) accept either value and run
+      their one batched path — results are engine-independent by
+      construction.
+    * ``probe`` — client-side read strategy for schemes with a kernel:
+      ``"gather"`` (pure-jnp vector gather), ``"pallas"`` (the Pallas
+      segment-probe kernel), ``"reference"`` (the kernel's jnp oracle).
+    * ``qblock`` — queries per Pallas grid step (probe kernel only).
+    * ``interpret`` — run Pallas kernels in interpreter mode (True on CPU
+      containers; set False on real TPU hardware).
+    """
+
+    engine: str = "wave"
+    probe: str = "gather"
+    qblock: int = 8
+    interpret: bool = True
+
+    def __post_init__(self):
+        assert self.engine in ENGINES, self.engine
+        assert self.probe in PROBES, self.probe
+        assert self.qblock >= 1
+
+
+class OpResult(NamedTuple):
+    """Uniform per-batch op result.
+
+    ``ok``     (B,) bool — per-item success (write) / found (lookup).
+    ``ledger`` accumulated `CostLedger` for the batch.
+    ``values`` (B, VAL_LANES) uint32 — lookup payloads (None on writes).
+    ``reads``  (B,) int32 — contiguous fetches per lookup (None on writes).
+    """
+
+    ok: jnp.ndarray
+    ledger: CostLedger
+    values: Optional[jnp.ndarray] = None
+    reads: Optional[jnp.ndarray] = None
+
+
+@runtime_checkable
+class HashStore(Protocol):
+    """Structural type every registered scheme satisfies (see module doc
+    for the calling convention).  ``name`` is the registry key; ``policy``
+    the store's `ExecPolicy`."""
+
+    name: str
+    policy: ExecPolicy
+
+    def create(self) -> Any: ...
+
+    def insert(self, table: Any, keys, vals, mask=None) -> Tuple[Any, OpResult]: ...
+
+    def update(self, table: Any, keys, vals, mask=None) -> Tuple[Any, OpResult]: ...
+
+    def delete(self, table: Any, keys, mask=None) -> Tuple[Any, OpResult]: ...
+
+    def lookup(self, table: Any, keys) -> OpResult: ...
+
+    def resize(self, table: Any, factor: int = 2) -> Tuple["HashStore", Any]: ...
+
+    def load_factor(self, table: Any) -> jnp.ndarray: ...
+
+    def stats(self, table: Any) -> dict: ...
+
+
+def store_shard_axes(table: Any, axis: str):
+    """Logical-axis tree for a store state carrying one leading shard dim.
+
+    Every leaf of ``table`` (already broadcast to ``(shards,) + ...``) maps
+    to ``(axis, None, ..., None)`` — the generic form of the hand-written
+    per-scheme axis trees the serving cache used to maintain."""
+    leaves, treedef = jax.tree.flatten(table)
+    return jax.tree.unflatten(
+        treedef, [(axis,) + (None,) * (leaf.ndim - 1) for leaf in leaves])

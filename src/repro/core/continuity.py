@@ -310,8 +310,11 @@ def _find_insert_slot(cfg, table, key):
     return pair[0], slot, ok, need_alloc, ext_idx
 
 
-def _insert_one(cfg, table: ContinuityTable, key, val):
+def _insert_one(cfg, table: ContinuityTable, key, val, active=None):
     pair, slot, ok, need_alloc, ext_idx = _find_insert_slot(cfg, table, key)
+    if active is not None:
+        ok = ok & active
+        need_alloc = need_alloc & active
     # extension allocation is metadata (rebuilt on recovery from ext_map scan)
     ext_map = table.ext_map.at[jnp.where(need_alloc, pair, jnp.iinfo(I32).max)].set(
         ext_idx, mode="drop")
@@ -324,19 +327,23 @@ def _insert_one(cfg, table: ContinuityTable, key, val):
     return table._replace(count=table.count + ok.astype(I32)), ok
 
 
-def _delete_one(cfg, table: ContinuityTable, key):
+def _delete_one(cfg, table: ContinuityTable, key, active=None):
     res = lookup(cfg, table, key[None])
     ok, pair, slot = res.found[0], res.pair[0], res.slot[0]
+    if active is not None:
+        ok = ok & active
     safe = jnp.maximum(slot, 0).astype(U32)
     new_word = table.indicator[pair] & ~jnp.where(ok, U32(1) << safe, U32(0))
     table = _commit_indicator(table, ok, pair, new_word)
     return table._replace(count=table.count - ok.astype(I32)), ok
 
 
-def _update_one(cfg, table: ContinuityTable, key, val):
+def _update_one(cfg, table: ContinuityTable, key, val, active=None):
     """Out-of-place update: both bit-flips land in ONE atomic indicator store."""
     res = lookup(cfg, table, key[None])
     found, pair, old_slot = res.found[0], res.pair[0], res.slot[0]
+    if active is not None:
+        found = found & active
     _, parity = locate(cfg, key[None])
     no = jnp.zeros((1,), jnp.bool_)
     cand, _, _, valid, slot_ok, _, _ = _gather_candidates(
@@ -358,40 +365,56 @@ def _update_one(cfg, table: ContinuityTable, key, val):
 def _scan_op(cfg, one_fn, pm_per_op):
     def step(carry, kv):
         table, ctr = carry
-        table, ok = one_fn(cfg, table, *kv)
-        ctr = ctr.add(pm_writes=jnp.where(ok, pm_per_op, 0), ops=1)
+        *args, active = kv
+        table, ok = one_fn(cfg, table, *args, active)
+        # masked-off ops count neither writes nor the ops denominator, so
+        # per-op ledger averages stay meaningful for masked batches
+        ctr = ctr.add(pm_writes=jnp.where(ok, pm_per_op, 0),
+                      ops=jnp.where(active, 1, 0))
         return (table, ctr), ok
     return step
 
 
+def _active_mask(keys, mask):
+    B = keys.shape[0]
+    return (jnp.ones((B,), jnp.bool_) if mask is None
+            else jnp.asarray(mask).reshape(B).astype(jnp.bool_))
+
+
 @functools.partial(jax.jit, static_argnums=0)
-def insert_serial(cfg: ContinuityConfig, table: ContinuityTable, keys, vals):
+def insert_serial(cfg: ContinuityConfig, table: ContinuityTable, keys, vals,
+                  mask=None):
     """Reference ``lax.scan`` insert (batch-order deterministic). 2 PM
     writes/op. Kept as the crash-recovery path and equivalence oracle for
     the wave engine; production batches use ``insert``."""
     keys = jnp.asarray(keys, U32).reshape(-1, KEY_LANES)
     vals = jnp.asarray(vals, U32).reshape(-1, VAL_LANES)
     (table, ctr), ok = jax.lax.scan(
-        _scan_op(cfg, _insert_one, 2), (table, pmem.PMCounters.zero()), (keys, vals))
+        _scan_op(cfg, _insert_one, 2), (table, pmem.PMCounters.zero()),
+        (keys, vals, _active_mask(keys, mask)))
     return table, ok, ctr
 
 
 @functools.partial(jax.jit, static_argnums=0)
-def delete_serial(cfg: ContinuityConfig, table: ContinuityTable, keys):
+def delete_serial(cfg: ContinuityConfig, table: ContinuityTable, keys,
+                  mask=None):
     """Reference ``lax.scan`` delete. 1 PM write/op (indicator bit clear)."""
     keys = jnp.asarray(keys, U32).reshape(-1, KEY_LANES)
     (table, ctr), ok = jax.lax.scan(
-        _scan_op(cfg, _delete_one, 1), (table, pmem.PMCounters.zero()), (keys,))
+        _scan_op(cfg, _delete_one, 1), (table, pmem.PMCounters.zero()),
+        (keys, _active_mask(keys, mask)))
     return table, ok, ctr
 
 
 @functools.partial(jax.jit, static_argnums=0)
-def update_serial(cfg: ContinuityConfig, table: ContinuityTable, keys, vals):
+def update_serial(cfg: ContinuityConfig, table: ContinuityTable, keys, vals,
+                  mask=None):
     """Reference ``lax.scan`` out-of-place update. 2 PM writes/op."""
     keys = jnp.asarray(keys, U32).reshape(-1, KEY_LANES)
     vals = jnp.asarray(vals, U32).reshape(-1, VAL_LANES)
     (table, ctr), ok = jax.lax.scan(
-        _scan_op(cfg, _update_one, 2), (table, pmem.PMCounters.zero()), (keys, vals))
+        _scan_op(cfg, _update_one, 2), (table, pmem.PMCounters.zero()),
+        (keys, vals, _active_mask(keys, mask)))
     return table, ok, ctr
 
 
@@ -784,7 +807,8 @@ def insert(cfg: ContinuityConfig, table: ContinuityTable, keys, vals,
             jnp.any(gpos >= 0),
             lambda t: _reorder_ext_pool(cfg, t, gpos, gidx),
             lambda t: t, table)
-    ctr = pmem.PMCounters.zero().add(pm_writes=2 * jnp.sum(ok), ops=B)
+    ctr = pmem.PMCounters.zero().add(pm_writes=2 * jnp.sum(ok),
+                                     ops=jnp.sum(active))
     return table, ok, ctr
 
 
@@ -838,7 +862,8 @@ def delete(cfg: ContinuityConfig, table: ContinuityTable, keys, mask=None):
 
     init = (jnp.zeros((), I32), table, jnp.zeros((keys.shape[0],), jnp.bool_))
     _, table, ok = jax.lax.while_loop(lambda c: c[0] < num_waves, body, init)
-    ctr = pmem.PMCounters.zero().add(pm_writes=jnp.sum(ok), ops=keys.shape[0])
+    ctr = pmem.PMCounters.zero().add(pm_writes=jnp.sum(ok),
+                                     ops=jnp.sum(active))
     return table, ok, ctr
 
 
@@ -880,7 +905,7 @@ def update(cfg: ContinuityConfig, table: ContinuityTable, keys, vals,
     init = (jnp.zeros((), I32), table, jnp.zeros((keys.shape[0],), jnp.bool_))
     _, table, ok = jax.lax.while_loop(lambda c: c[0] < num_waves, body, init)
     ctr = pmem.PMCounters.zero().add(pm_writes=2 * jnp.sum(ok),
-                                     ops=keys.shape[0])
+                                     ops=jnp.sum(active))
     return table, ok, ctr
 
 

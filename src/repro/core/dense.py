@@ -1,0 +1,180 @@
+"""Dense block-table reference store (the vLLM-style baseline index).
+
+One flat, fully-associative region of ``capacity`` slots: a lookup fetches
+the WHOLE table (it is dense and local — one contiguous region, so exactly
+one "fetch" whose payload is the entire table) and compares against every
+slot; an insert takes the first free slot in index order.  No hashing, no
+buckets, no extension machinery — this is the correctness reference the
+hash schemes are measured against, and the drop-in "dense page table"
+backend for the serving path (`repro.api` registers it as ``dense``).
+
+Cost model (for the shared `CostLedger` accounting):
+  * lookup  — 1 contiguous fetch of ``table_bytes`` (dense tables are only
+    viable when local; remote they are the worst case the paper's schemes
+    exist to avoid);
+  * insert  — 2 PM writes (slot payload, then the live-bit commit word —
+    same split-commit discipline as continuity so crash tests can reuse it);
+  * update  — 1 PM write (in-place value store; a dense entry is one line);
+  * delete  — 1 PM write (live-bit clear).
+
+All ops are batched and fully vectorized (O(B*C) compares); same-batch
+duplicate KEYS on the write paths are resolved in batch order for insert
+(prefix-sum slot grants) — update/delete of the same key twice in one batch
+is a single-slot scatter and keeps one of the writes (unspecified which),
+matching what a real block table does under racing writers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import pmem
+from repro.core.continuity import KEY_LANES, VAL_LANES, SLOT_BYTES
+
+U32 = jnp.uint32
+I32 = jnp.int32
+
+
+@dataclasses.dataclass(frozen=True)
+class DenseConfig:
+    capacity: int                 # total slots
+
+    def __post_init__(self):
+        assert self.capacity >= 1
+
+    @property
+    def total_slots(self) -> int:
+        return self.capacity
+
+    @property
+    def table_bytes(self) -> int:
+        return self.capacity * (SLOT_BYTES + 1)   # slots + live bytes
+
+    def grow(self, factor: int = 2) -> "DenseConfig":
+        return dataclasses.replace(self, capacity=self.capacity * factor)
+
+
+class DenseTable(NamedTuple):
+    keys: jnp.ndarray    # (C, KL) uint32
+    vals: jnp.ndarray    # (C, VL) uint32
+    live: jnp.ndarray    # (C,) bool
+    count: jnp.ndarray   # () int32
+
+
+def create(cfg: DenseConfig) -> DenseTable:
+    C = cfg.capacity
+    return DenseTable(
+        keys=jnp.zeros((C, KEY_LANES), U32),
+        vals=jnp.zeros((C, VAL_LANES), U32),
+        live=jnp.zeros((C,), jnp.bool_),
+        count=jnp.zeros((), I32),
+    )
+
+
+def load_factor(cfg: DenseConfig, t: DenseTable) -> jnp.ndarray:
+    return t.count.astype(jnp.float32) / cfg.capacity
+
+
+class LookupResult(NamedTuple):
+    found: jnp.ndarray   # (B,) bool
+    values: jnp.ndarray  # (B, VAL_LANES)
+    slot: jnp.ndarray    # (B,) int32 (-1 on miss)
+    reads: jnp.ndarray   # (B,) int32 — always 1 (whole-table fetch)
+
+
+def _match(t: DenseTable, keys: jnp.ndarray) -> jnp.ndarray:
+    """(B, C) bool: live slot holds exactly this key."""
+    return t.live[None, :] & jnp.all(
+        t.keys[None, :, :] == keys[:, None, :], axis=-1)
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def lookup(cfg: DenseConfig, t: DenseTable, keys) -> LookupResult:
+    keys = jnp.asarray(keys, U32).reshape(-1, KEY_LANES)
+    m = _match(t, keys)
+    found = jnp.any(m, -1)
+    slot = jnp.where(found, jnp.argmax(m, -1), -1)
+    values = jnp.where(found[:, None], t.vals[jnp.maximum(slot, 0)], 0)
+    return LookupResult(found, values, slot,
+                        jnp.ones((keys.shape[0],), I32))
+
+
+def read_counters(cfg: DenseConfig, res: LookupResult) -> pmem.PMCounters:
+    n = res.reads.shape[0]
+    return pmem.PMCounters.zero().add(
+        rdma_reads=jnp.sum(res.reads),
+        bytes_fetched=n * cfg.table_bytes, ops=n)
+
+
+def _batch(keys, vals, mask):
+    keys = jnp.asarray(keys, U32).reshape(-1, KEY_LANES)
+    B = keys.shape[0]
+    if vals is not None:
+        vals = jnp.asarray(vals, U32).reshape(-1, VAL_LANES)
+    active = (jnp.ones((B,), jnp.bool_) if mask is None
+              else jnp.asarray(mask).reshape(B).astype(jnp.bool_))
+    return keys, vals, active
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def insert(cfg: DenseConfig, t: DenseTable, keys, vals, mask=None):
+    """Batched insert: active op of batch rank r takes the (r+1)-th free
+    slot in index order. 2 PM writes/op (payload, live commit)."""
+    keys, vals, active = _batch(keys, vals, mask)
+    free = ~t.live                                     # (C,)
+    rank = jnp.cumsum(active.astype(I32)) - 1          # (B,) batch order
+    freerank = jnp.cumsum(free.astype(I32)) - 1        # (C,) free order
+    eq = free[None, :] & (freerank[None, :] == rank[:, None])
+    ok = active & (rank < jnp.sum(free.astype(I32)))
+    slot = jnp.argmax(eq, -1)
+    drop = jnp.iinfo(I32).max
+    w = jnp.where(ok, slot, drop)
+    t = t._replace(
+        keys=t.keys.at[w].set(keys, mode="drop"),      # phase 1: payload
+        vals=t.vals.at[w].set(vals, mode="drop"))
+    t = t._replace(live=t.live.at[w].set(True, mode="drop"),  # phase 2
+                   count=t.count + jnp.sum(ok).astype(I32))
+    ctr = pmem.PMCounters.zero().add(pm_writes=2 * jnp.sum(ok),
+                                     ops=jnp.sum(active))
+    return t, ok, ctr
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def update(cfg: DenseConfig, t: DenseTable, keys, vals, mask=None):
+    """Batched in-place update. 1 PM write/op."""
+    keys, vals, active = _batch(keys, vals, mask)
+    m = _match(t, keys)
+    ok = active & jnp.any(m, -1)
+    slot = jnp.argmax(m, -1)
+    drop = jnp.iinfo(I32).max
+    w = jnp.where(ok, slot, drop)
+    t = t._replace(vals=t.vals.at[w].set(vals, mode="drop"))
+    ctr = pmem.PMCounters.zero().add(pm_writes=jnp.sum(ok),
+                                     ops=jnp.sum(active))
+    return t, ok, ctr
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def delete(cfg: DenseConfig, t: DenseTable, keys, mask=None):
+    """Batched delete: live-bit clear. 1 PM write/op."""
+    keys, _, active = _batch(keys, None, mask)
+    m = _match(t, keys)
+    ok = active & jnp.any(m, -1)
+    slot = jnp.argmax(m, -1)
+    drop = jnp.iinfo(I32).max
+    w = jnp.where(ok, slot, drop)
+    t = t._replace(live=t.live.at[w].set(False, mode="drop"),
+                   count=t.count - jnp.sum(ok).astype(I32))
+    ctr = pmem.PMCounters.zero().add(pm_writes=jnp.sum(ok),
+                                     ops=jnp.sum(active))
+    return t, ok, ctr
+
+
+def extract_items(cfg: DenseConfig, t: DenseTable):
+    """Live (key, value) slots + validity mask (for generic resize)."""
+    return t.keys, t.vals, t.live

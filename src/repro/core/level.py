@@ -179,7 +179,7 @@ def _commit_tok(t: LevelTable, is_top, bucket, new_tok, ok):
                       btok=t.btok.at[bb].set(new_tok, mode="drop"))
 
 
-def _insert_one(cfg, t: LevelTable, key, val):
+def _insert_one(cfg, t: LevelTable, key, val, active):
     bs = cfg.bucket_slots
     cand = _cand_buckets(cfg, key[None])[0]              # (4,)
     toks = jnp.stack([t.ttok[cand[0]], t.ttok[cand[1]],
@@ -188,7 +188,7 @@ def _insert_one(cfg, t: LevelTable, key, val):
     empty = bits == 0                                     # (4,bs)
     has = jnp.any(empty, -1)
     bsel = jnp.argmax(has)                                # first bucket w/ empty
-    ok_plain = jnp.any(has)
+    ok_plain = jnp.any(has) & active
     slot = jnp.argmax(empty[bsel])
     is_top = bsel < 2
     bucket = cand[bsel]
@@ -203,7 +203,7 @@ def _insert_one(cfg, t: LevelTable, key, val):
         alt = jnp.where(a1 == cand[0], a2, a1)
         atok = t.ttok[alt]
         abits = (atok >> jnp.arange(bs, dtype=U8)) & U8(1)   # (bs,)
-        can = jnp.any(abits == 0) & (alt != cand[0])
+        can = jnp.any(abits == 0) & (alt != cand[0]) & active
         aslot = jnp.argmax(abits == 0)
         tt = jnp.ones((), jnp.bool_)
         t2 = _write_slot(t, tt, alt, aslot, mkey, mval, can)
@@ -227,9 +227,9 @@ def _insert_one(cfg, t: LevelTable, key, val):
     return t2._replace(count=t2.count + ok.astype(I32)), ok, pm
 
 
-def _delete_one(cfg, t: LevelTable, key):
+def _delete_one(cfg, t: LevelTable, key, active):
     res = lookup(cfg, t, key[None])
-    ok = res.found[0]
+    ok = res.found[0] & active
     bidx, slot = res.where[0, 0], res.where[0, 1]
     cand = _cand_buckets(cfg, key[None])[0]
     bucket = cand[jnp.maximum(bidx, 0)]
@@ -240,10 +240,10 @@ def _delete_one(cfg, t: LevelTable, key):
     return t2._replace(count=t2.count - ok.astype(I32)), ok, jnp.where(ok, 1, 0).astype(I32)
 
 
-def _update_one(cfg, t: LevelTable, key, val):
+def _update_one(cfg, t: LevelTable, key, val, active):
     bs = cfg.bucket_slots
     res = lookup(cfg, t, key[None])
-    found = res.found[0]
+    found = res.found[0] & active
     bidx, slot = res.where[0, 0], res.where[0, 1]
     cand = _cand_buckets(cfg, key[None])[0]
     bucket = cand[jnp.maximum(bidx, 0)]
@@ -268,32 +268,43 @@ def _update_one(cfg, t: LevelTable, key, val):
 def _scan(cfg, fn):
     def step(carry, kv):
         t, ctr = carry
-        t, ok, pm = fn(cfg, t, *kv)
-        return (t, ctr.add(pm_writes=pm, ops=1)), ok
+        *args, active = kv
+        t, ok, pm = fn(cfg, t, *args, active)
+        # masked-off ops count neither writes nor the ops denominator
+        return (t, ctr.add(pm_writes=pm, ops=jnp.where(active, 1, 0))), ok
     return step
 
 
+def _active(keys, mask):
+    B = keys.shape[0]
+    return (jnp.ones((B,), jnp.bool_) if mask is None
+            else jnp.asarray(mask).reshape(B).astype(jnp.bool_))
+
+
 @functools.partial(jax.jit, static_argnums=0)
-def insert(cfg, t, keys, vals):
+def insert(cfg, t, keys, vals, mask=None):
     keys = jnp.asarray(keys, U32).reshape(-1, KEY_LANES)
     vals = jnp.asarray(vals, U32).reshape(-1, VAL_LANES)
-    (t, ctr), ok = jax.lax.scan(_scan(cfg, _insert_one),
-                                (t, pmem.PMCounters.zero()), (keys, vals))
+    (t, ctr), ok = jax.lax.scan(
+        _scan(cfg, _insert_one), (t, pmem.PMCounters.zero()),
+        (keys, vals, _active(keys, mask)))
     return t, ok, ctr
 
 
 @functools.partial(jax.jit, static_argnums=0)
-def delete(cfg, t, keys):
+def delete(cfg, t, keys, mask=None):
     keys = jnp.asarray(keys, U32).reshape(-1, KEY_LANES)
-    (t, ctr), ok = jax.lax.scan(_scan(cfg, _delete_one),
-                                (t, pmem.PMCounters.zero()), (keys,))
+    (t, ctr), ok = jax.lax.scan(
+        _scan(cfg, _delete_one), (t, pmem.PMCounters.zero()),
+        (keys, _active(keys, mask)))
     return t, ok, ctr
 
 
 @functools.partial(jax.jit, static_argnums=0)
-def update(cfg, t, keys, vals):
+def update(cfg, t, keys, vals, mask=None):
     keys = jnp.asarray(keys, U32).reshape(-1, KEY_LANES)
     vals = jnp.asarray(vals, U32).reshape(-1, VAL_LANES)
-    (t, ctr), ok = jax.lax.scan(_scan(cfg, _update_one),
-                                (t, pmem.PMCounters.zero()), (keys, vals))
+    (t, ctr), ok = jax.lax.scan(
+        _scan(cfg, _update_one), (t, pmem.PMCounters.zero()),
+        (keys, vals, _active(keys, mask)))
     return t, ok, ctr

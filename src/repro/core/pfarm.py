@@ -60,6 +60,9 @@ class PFarmConfig:
     def block_bytes(self) -> int:
         return self.bucket_slots * SLOT_BYTES + 16  # slots + tok + next ptr
 
+    def grow(self, factor: int = 2) -> "PFarmConfig":
+        return dataclasses.replace(self, num_buckets=self.num_buckets * factor)
+
 
 class PFarmTable(NamedTuple):
     keys: jnp.ndarray    # (N, bs, KL)
@@ -165,7 +168,7 @@ def read_counters(cfg: PFarmConfig, res: LookupResult) -> pmem.PMCounters:
 
 # -- server-side ops ---------------------------------------------------------
 
-def _insert_one(cfg, t: PFarmTable, key, val):
+def _insert_one(cfg, t: PFarmTable, key, val, active):
     bs, H = cfg.bucket_slots, cfg.window
     home = _home(cfg, key[None])[0]
     win = _window_ids(cfg, home[None])[0]              # (H,)
@@ -174,7 +177,7 @@ def _insert_one(cfg, t: PFarmTable, key, val):
     empty = bits == 0                                  # (H,bs)
     has = jnp.any(empty, -1)
     bsel = jnp.argmax(has)
-    ok_plain = jnp.any(has)
+    ok_plain = jnp.any(has) & active
     bucket = win[bsel]
     slot = jnp.argmax(empty[bsel])
 
@@ -196,7 +199,7 @@ def _insert_one(cfg, t: PFarmTable, key, val):
         wempty = (wbits == 0).reshape(H * bs, H * bs)
         can_move = jnp.any(wempty, -1)
         msel = jnp.argmax(can_move)
-        movable = jnp.any(can_move)
+        movable = jnp.any(can_move) & active
         src_b, src_s = win[msel // bs], msel % bs
         dflat = jnp.argmax(wempty[msel])
         dst_b = wwin[msel, dflat // bs]
@@ -228,7 +231,7 @@ def _insert_one(cfg, t: PFarmTable, key, val):
             can_alloc = t.ocount < cfg.pool_blocks
             blk = jnp.where(head_has, hblk, t.ocount)
             slot2 = jnp.where(head_has, hslot, 0)
-            ok = head_has | can_alloc
+            ok = (head_has | can_alloc) & active
             drop = jnp.iinfo(I32).max
             wblk = jnp.where(ok, blk, drop)
             t2 = t._replace(
@@ -250,9 +253,9 @@ def _insert_one(cfg, t: PFarmTable, key, val):
     return t2._replace(count=t2.count + ok.astype(I32)), ok, pm
 
 
-def _delete_one(cfg, t: PFarmTable, key):
+def _delete_one(cfg, t: PFarmTable, key, active):
     res = lookup(cfg, t, key[None])
-    ok = res.found[0]
+    ok = res.found[0] & active
     in_chain, where, slot = res.where[0, 0], res.where[0, 1], res.where[0, 2]
     drop = jnp.iinfo(I32).max
     mb = jnp.where(ok & (in_chain == 0), where, drop)
@@ -265,9 +268,9 @@ def _delete_one(cfg, t: PFarmTable, key):
     return t2._replace(count=t2.count - ok.astype(I32)), ok, pm
 
 
-def _update_one(cfg, t: PFarmTable, key, val):
+def _update_one(cfg, t: PFarmTable, key, val, active):
     res = lookup(cfg, t, key[None])
-    ok = res.found[0]
+    ok = res.found[0] & active
     in_chain, where, slot = res.where[0, 0], res.where[0, 1], res.where[0, 2]
     drop = jnp.iinfo(I32).max
     mb = jnp.where(ok & (in_chain == 0), where, drop)
@@ -284,32 +287,43 @@ def _update_one(cfg, t: PFarmTable, key, val):
 def _scan(cfg, fn):
     def step(carry, kv):
         t, ctr = carry
-        t, ok, pm = fn(cfg, t, *kv)
-        return (t, ctr.add(pm_writes=pm, ops=1)), ok
+        *args, active = kv
+        t, ok, pm = fn(cfg, t, *args, active)
+        # masked-off ops count neither writes nor the ops denominator
+        return (t, ctr.add(pm_writes=pm, ops=jnp.where(active, 1, 0))), ok
     return step
 
 
+def _active(keys, mask):
+    B = keys.shape[0]
+    return (jnp.ones((B,), jnp.bool_) if mask is None
+            else jnp.asarray(mask).reshape(B).astype(jnp.bool_))
+
+
 @functools.partial(jax.jit, static_argnums=0)
-def insert(cfg, t, keys, vals):
+def insert(cfg, t, keys, vals, mask=None):
     keys = jnp.asarray(keys, U32).reshape(-1, KEY_LANES)
     vals = jnp.asarray(vals, U32).reshape(-1, VAL_LANES)
-    (t, ctr), ok = jax.lax.scan(_scan(cfg, _insert_one),
-                                (t, pmem.PMCounters.zero()), (keys, vals))
+    (t, ctr), ok = jax.lax.scan(
+        _scan(cfg, _insert_one), (t, pmem.PMCounters.zero()),
+        (keys, vals, _active(keys, mask)))
     return t, ok, ctr
 
 
 @functools.partial(jax.jit, static_argnums=0)
-def delete(cfg, t, keys):
+def delete(cfg, t, keys, mask=None):
     keys = jnp.asarray(keys, U32).reshape(-1, KEY_LANES)
-    (t, ctr), ok = jax.lax.scan(_scan(cfg, _delete_one),
-                                (t, pmem.PMCounters.zero()), (keys,))
+    (t, ctr), ok = jax.lax.scan(
+        _scan(cfg, _delete_one), (t, pmem.PMCounters.zero()),
+        (keys, _active(keys, mask)))
     return t, ok, ctr
 
 
 @functools.partial(jax.jit, static_argnums=0)
-def update(cfg, t, keys, vals):
+def update(cfg, t, keys, vals, mask=None):
     keys = jnp.asarray(keys, U32).reshape(-1, KEY_LANES)
     vals = jnp.asarray(vals, U32).reshape(-1, VAL_LANES)
-    (t, ctr), ok = jax.lax.scan(_scan(cfg, _update_one),
-                                (t, pmem.PMCounters.zero()), (keys, vals))
+    (t, ctr), ok = jax.lax.scan(
+        _scan(cfg, _update_one), (t, pmem.PMCounters.zero()),
+        (keys, vals, _active(keys, mask)))
     return t, ok, ctr

@@ -11,7 +11,11 @@ The paper measures:
     collective payload of the sharded lookup, so the same counter feeds the
     roofline collective term.
 
-Counters are a small pytree so they can thread through jitted scans.
+``CostLedger`` is the ONE counter pytree threaded through every op of every
+scheme (`repro.api` returns it on each `OpResult`); the per-op apples-to-
+apples comparison the paper's Table I makes is just
+``ledger.pm_per_op()`` across schemes.  ``PMCounters`` is a back-compat
+alias — the name the scheme modules grew up with.
 """
 
 from __future__ import annotations
@@ -21,29 +25,56 @@ from typing import NamedTuple
 import jax.numpy as jnp
 
 
-class PMCounters(NamedTuple):
-    """Accumulated device-side counters (all int32 scalars)."""
+class CostLedger(NamedTuple):
+    """Accumulated device-side counters (all int32 scalars).
+
+    ``rdma_reads`` counts one-sided CONTIGUOUS fetches — in this codebase a
+    "read" and a "contiguous fetch" are the same unit (the paper's access-
+    amplification denominator); per-op fetch traces live on
+    ``OpResult.reads``.
+    """
 
     pm_writes: jnp.ndarray      # cache-line flushes issued
     rdma_reads: jnp.ndarray     # one-sided contiguous fetches issued
     bytes_fetched: jnp.ndarray  # total fetched payload (bytes)
-    ops: jnp.ndarray            # operations accounted
+    ops: jnp.ndarray            # ACTIVE operations accounted (masked-off
+                                # batch slots count neither writes nor ops)
 
     @staticmethod
-    def zero() -> "PMCounters":
+    def zero() -> "CostLedger":
         z = jnp.zeros((), jnp.int32)
-        return PMCounters(z, z, z, z)
+        return CostLedger(z, z, z, z)
 
-    def add(self, pm_writes=0, rdma_reads=0, bytes_fetched=0, ops=0) -> "PMCounters":
-        return PMCounters(
+    def add(self, pm_writes=0, rdma_reads=0, bytes_fetched=0, ops=0) -> "CostLedger":
+        return CostLedger(
             self.pm_writes + jnp.asarray(pm_writes, jnp.int32),
             self.rdma_reads + jnp.asarray(rdma_reads, jnp.int32),
             self.bytes_fetched + jnp.asarray(bytes_fetched, jnp.int32),
             self.ops + jnp.asarray(ops, jnp.int32),
         )
 
-    def merge(self, other: "PMCounters") -> "PMCounters":
-        return PMCounters(*(a + b for a, b in zip(self, other)))
+    def merge(self, other: "CostLedger") -> "CostLedger":
+        return CostLedger(*(a + b for a, b in zip(self, other)))
+
+    # -- per-op averages (host-side floats; the paper's table cells) --------
+    def _per_op(self, x) -> float:
+        n = float(self.ops)
+        return float(x) / n if n else 0.0
+
+    def pm_per_op(self) -> float:
+        """Average PM writes per op (Table I cell)."""
+        return self._per_op(self.pm_writes)
+
+    def reads_per_op(self) -> float:
+        """Average contiguous fetches per op (access amplification)."""
+        return self._per_op(self.rdma_reads)
+
+    def bytes_per_op(self) -> float:
+        return self._per_op(self.bytes_fetched)
+
+
+# Back-compat name used throughout the scheme modules.
+PMCounters = CostLedger
 
 
 CACHE_LINE = 64

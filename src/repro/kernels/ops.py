@@ -2,8 +2,12 @@
 
 ``probe_table`` adapts a ``ContinuityTable`` into the probe kernel's layout
 (flat contiguous rows + parity priority table) and returns results identical
-to ``repro.core.continuity.lookup``'s probe stage. ``paged_attention`` is
-re-exported with TPU-alignment padding for the q-head-group dimension.
+to ``repro.core.continuity.lookup``'s probe stage. ``probe_lookup`` extends
+it to a FULL lookup (values + extension slots + fetch accounting) — it is
+the continuity backend's kernel probe strategy, selected through
+``repro.api.ExecPolicy(probe="pallas")`` instead of per-call kwargs.
+``paged_attention`` is re-exported with TPU-alignment padding for the
+q-head-group dimension.
 
 Set ``interpret=False`` on real TPU hardware; this container is CPU-only so
 every caller (tests, benches) uses the interpreter, which executes the same
@@ -70,6 +74,54 @@ def probe_table(cfg: ContinuityConfig, table: ContinuityTable, keys,
         match, empty = _probe_ref.probe_ref(rows, ind, prio, pair, parity,
                                             keys)
     return match, empty, pair, parity
+
+
+def probe_lookup(cfg: ContinuityConfig, table: ContinuityTable, keys,
+                 *, interpret: bool = True, use_kernel: bool = True,
+                 qblock: int = 8):
+    """Full continuity lookup with the Pallas kernel as the main-segment
+    probe stage; byte-identical to ``repro.core.continuity.lookup``.
+
+    The kernel resolves the directional main-segment scan (one contiguous
+    row DMA per query); the rare extension-slot tail (the paper's "+1 fetch
+    iff the pair has added SBuckets and the main segment missed") is a tiny
+    jnp gather over the 12 ext candidates, exactly as the reference."""
+    from repro.core import continuity as ch
+    keys = jnp.asarray(keys, jnp.uint32).reshape(-1, KEY_LANES)
+    match, _, pair, parity = probe_table(
+        cfg, table, keys, interpret=interpret, use_kernel=use_kernel,
+        qblock=qblock)
+    found_main = match >= 0
+    safe_m = jnp.maximum(match, 0)
+    vals_main = table.vals[pair, safe_m]
+
+    # extension tail: slots S..S+E-1, ascending for BOTH parities (probe
+    # order puts them last), only addressable when the pair is extended
+    S, E = cfg.slots_per_pair, cfg.ext_slots
+    eidx = table.ext_map[pair]                         # (B,)
+    has_ext = eidx >= 0
+    if E:
+        ebits = (table.indicator[pair][:, None]
+                 >> (S + jnp.arange(E, dtype=jnp.uint32))[None]) & jnp.uint32(1)
+        ekeys = table.ext_keys[jnp.maximum(eidx, 0)]   # (B, E, KL)
+        ematch = has_ext[:, None] & (ebits == 1) & \
+            jnp.all(ekeys == keys[:, None, :], axis=-1)
+        efound = jnp.any(ematch, axis=-1)
+        efirst = jnp.argmax(ematch, axis=-1)
+        evals = jnp.take_along_axis(
+            table.ext_vals[jnp.maximum(eidx, 0)], efirst[:, None, None], 1)[:, 0]
+    else:
+        efound = jnp.zeros_like(found_main)
+        efirst = jnp.zeros(keys.shape[0], jnp.int32)
+        evals = jnp.zeros_like(vals_main)
+
+    found = found_main | efound
+    slot = jnp.where(found_main, match,
+                     jnp.where(efound, S + efirst, -1))
+    values = jnp.where(found_main[:, None], vals_main,
+                       jnp.where(efound[:, None], evals, 0))
+    reads = 1 + (has_ext & ~found_main).astype(jnp.int32)
+    return ch.LookupResult(found, values, slot, pair, reads)
 
 
 def paged_attention(q, kpool, vpool, page_table, seq_lens, *,

@@ -27,7 +27,6 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import continuity as ch
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
 from repro.serving import kvcache as KC
@@ -116,15 +115,15 @@ def prefill(cfg: ModelConfig, geom: KC.PageGeometry, params: dict,
         x = T.L.layernorm(x, params["final_scale"], params["final_bias"])
     logits = T.logits_fn(cfg, params, x[:, -1])
 
-    # register page mappings (server-side batched inserts, scan-serialized)
+    # register page mappings (server-side batched inserts via the store)
     pages = jnp.broadcast_to(jnp.arange(npages, dtype=U32), (Bl, npages))
     keys = jax.vmap(lambda s: KC.page_keys(
         jnp.repeat(s, npages).reshape(Bl, npages), pages))(cache.seq_ids)
     vals = KC.page_values(phys)
-    table, ok, _ = jax.vmap(
-        lambda t, k, v: ch.insert(geom.table_cfg, t, k.reshape(-1, 4),
-                                  v.reshape(-1, 4)))(cache.table, keys, vals)
-    table = ch.ContinuityTable(*table)
+    table, _ = jax.vmap(
+        lambda t, k, v: geom.store.insert(t, k.reshape(-1, 4),
+                                          v.reshape(-1, 4)))(
+        cache.table, keys, vals)
 
     plen = prompt_len if prompt_len is not None else S
     cache = cache._replace(
@@ -150,16 +149,14 @@ def release_sequence(geom: KC.PageGeometry, cache: KC.PagedCache,
     pages = jnp.arange(geom.max_pages, dtype=U32)
     keys = KC.page_keys(jnp.broadcast_to(seq, pages.shape), pages)
     table_s = jax.tree.map(lambda x: x[shard_idx], cache.table)
-    table_s = ch.ContinuityTable(*table_s)
     mask = pages < npages.astype(U32)
-    # delete only the mapped pages (scan preserves PM-write accounting)
-    table_s, ok, _ = ch.delete(geom.table_cfg, table_s,
-                               jnp.where(mask[:, None], keys, 0))
+    # delete only the mapped pages (masked batch keeps PM-write accounting)
+    table_s, _ = geom.store.delete(table_s, keys, mask)
     table = jax.tree.map(lambda full, s: full.at[shard_idx].set(s),
                          cache.table, table_s)
     new_id = jnp.max(cache.seq_ids) + 1
     return cache._replace(
-        table=ch.ContinuityTable(*table),
+        table=table,
         seq_ids=cache.seq_ids.at[shard_idx, slot].set(new_id),
         seq_lens=cache.seq_lens.at[shard_idx, slot].set(0),
         cur_page=cache.cur_page.at[shard_idx, slot].set(0),

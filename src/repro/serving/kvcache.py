@@ -1,38 +1,41 @@
-"""Paged KV cache whose page table IS a continuity hash table.
+"""Paged KV cache whose page table is a pluggable `repro.api` hash store.
 
 The physical KV pool is a fixed set of pages per data shard (the "server's
 PM region"); the logical->physical mapping (sequence_id, logical_page) ->
-physical_page lives in a per-shard continuity hash table. Lookups on the
-decode hot path are the paper's client reads: ONE contiguous segment fetch
-per page translation; insertions (page allocation) are the server-side writes
-with indicator-commit atomicity.
+physical_page lives in a per-shard hash-store table behind the
+`repro.api.HashStore` protocol — continuity hashing by default, but any
+registered scheme (``level``, ``pfarm``, ``dense``) plugs in via
+``make_geometry(..., scheme=...)``.  Lookups on the decode hot path are the
+paper's client reads (for continuity: ONE contiguous segment fetch per page
+translation); insertions (page allocation) are the server-side writes with
+indicator-commit atomicity.
 
-Why a hash table instead of a dense block table (the vLLM baseline, also
-provided): content-addressed keys enable cross-request prefix sharing, and
-the index survives pool oversubscription (physical pool smaller than
-worst-case logical space) — which is what makes the qwen1.5-32b decode_32k
-cell fit on a v5e pod at all (EXPERIMENTS.md §Perf).
+Why a hash table instead of a dense block table (the vLLM baseline, now a
+registered ``dense`` scheme): content-addressed keys enable cross-request
+prefix sharing, and the index survives pool oversubscription (physical pool
+smaller than worst-case logical space) — which is what makes the
+qwen1.5-32b decode_32k cell fit on a v5e pod at all (EXPERIMENTS.md §Perf).
 
 Sharding layout (see DESIGN.md §5):
   * pools: (L, DS, NPl, KVH, PS, D) — DS = data shards (pod x data axes);
     page-token dim PS is sharded over the MODEL axis ("split-KV" decoding:
     works for any kv-head count, bounds per-device cache bytes at
     total / (DS * model));
-  * page tables: one continuity table per data shard (leading DS dim,
-    vmapped ops) — the paper's one-server-per-node deployment.
+  * page tables: one store table per data shard (leading DS dim, vmapped
+    ops) — the paper's one-server-per-node deployment.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import NamedTuple, Optional
+from typing import Any, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import continuity as ch
+from repro.api import ExecPolicy, make_store, store_shard_axes
 from repro.models.config import ModelConfig, ShapeConfig
 
 U32 = jnp.uint32
@@ -52,7 +55,7 @@ class PageGeometry:
     batch_per_shard: int
     pool_pages: int           # NPl physical pages per shard
     kv_dtype: str             # bfloat16 | int8
-    table_cfg: ch.ContinuityConfig
+    store: Any                # repro.api.HashStore — the page-table backend
     # legacy decode path that merges (MAXP, PS) -> T before attention;
     # forces a GSPMD involuntary remat — kept for the §Perf before/after
     merged_attn: bool = False
@@ -61,43 +64,50 @@ class PageGeometry:
     def batch(self) -> int:
         return self.shards * self.batch_per_shard
 
+    @property
+    def table_cfg(self):
+        """Deprecated: the page-table backend's raw config. Kept for old
+        call sites; new code reads ``geom.store`` (the `HashStore`)."""
+        return self.store.cfg
+
+
+def page_table_slots(geom_entries: int, load: float = 0.5) -> int:
+    """Storage units a page-table store needs for ``geom_entries``
+    mappings/shard at target ``load``."""
+    return int(np.ceil(geom_entries / load))
+
+
+def make_geometry(cfg: ModelConfig, shape: ShapeConfig, shards: int,
+                  page_size: int = 512, oversub: float = 1.0,
+                  kv_dtype: Optional[str] = None,
+                  merged_attn: bool = False,
+                  scheme: str = "continuity",
+                  policy: Optional[ExecPolicy] = None) -> PageGeometry:
+    assert shape.global_batch % shards == 0, (shape.global_batch, shards)
+    bl = shape.global_batch // shards
+    maxp = (shape.seq_len + page_size - 1) // page_size
+    pool = max(1, int(np.ceil(bl * maxp * oversub)))
+    store = make_store(scheme, table_slots=page_table_slots(bl * maxp),
+                       policy=policy or ExecPolicy())
+    return PageGeometry(
+        layers=cfg.n_layers, kv_heads=cfg.n_kv_heads, head_dim=cfg.hd,
+        page_size=page_size, max_pages=maxp, shards=shards,
+        batch_per_shard=bl, pool_pages=pool,
+        kv_dtype=kv_dtype or cfg.kv_quant.replace("none", cfg.dtype),
+        store=store, merged_attn=merged_attn)
+
 
 class PagedCache(NamedTuple):
     kpool: jnp.ndarray          # (L, DS, NPl, KVH, PS, D) kv_dtype
     vpool: jnp.ndarray
     kscale: Optional[jnp.ndarray]  # (L, DS, NPl, KVH, PS, 1) f32 when int8
     vscale: Optional[jnp.ndarray]
-    table: ch.ContinuityTable   # leading DS dim on every leaf
+    table: Any                  # store state; leading DS dim on every leaf
     next_free: jnp.ndarray      # (DS,) int32 — physical page bump allocator
     seq_ids: jnp.ndarray        # (DS, Bl) uint32 global sequence ids
     seq_lens: jnp.ndarray       # (DS, Bl) int32 tokens already cached
     cur_page: jnp.ndarray       # (DS, Bl) int32 physical id of open page
     cur_off: jnp.ndarray        # (DS, Bl) int32 write offset in open page
-
-
-def page_table_config(geom_entries: int, load: float = 0.5) -> ch.ContinuityConfig:
-    """Size a continuity table for ``geom_entries`` page mappings/shard."""
-    cfg0 = ch.ContinuityConfig(num_buckets=2)
-    slots_per_pair = cfg0.slots_per_pair
-    pairs = max(2, int(np.ceil(geom_entries / load / slots_per_pair)))
-    return ch.ContinuityConfig(num_buckets=2 * pairs)
-
-
-def make_geometry(cfg: ModelConfig, shape: ShapeConfig, shards: int,
-                  page_size: int = 512, oversub: float = 1.0,
-                  kv_dtype: Optional[str] = None,
-                  merged_attn: bool = False) -> PageGeometry:
-    assert shape.global_batch % shards == 0, (shape.global_batch, shards)
-    bl = shape.global_batch // shards
-    maxp = (shape.seq_len + page_size - 1) // page_size
-    pool = max(1, int(np.ceil(bl * maxp * oversub)))
-    return PageGeometry(
-        layers=cfg.n_layers, kv_heads=cfg.n_kv_heads, head_dim=cfg.hd,
-        page_size=page_size, max_pages=maxp, shards=shards,
-        batch_per_shard=bl, pool_pages=pool,
-        kv_dtype=kv_dtype or cfg.kv_quant.replace("none", cfg.dtype),
-        table_cfg=page_table_config(bl * maxp),
-        merged_attn=merged_attn)
 
 
 def _pool_shape(g: PageGeometry):
@@ -108,10 +118,9 @@ def _pool_shape(g: PageGeometry):
 def create_cache(g: PageGeometry) -> PagedCache:
     dt = jnp.int8 if g.kv_dtype == "int8" else jnp.dtype(g.kv_dtype)
     quant = g.kv_dtype == "int8"
-    t0 = ch.create(g.table_cfg)
+    t0 = g.store.create()
     table = jax.tree.map(lambda x: jnp.broadcast_to(x, (g.shards,) + x.shape),
                          t0)
-    table = ch.ContinuityTable(*table)
     DS, Bl = g.shards, g.batch_per_shard
     return PagedCache(
         kpool=jnp.zeros(_pool_shape(g), dt),
@@ -130,16 +139,8 @@ def create_cache(g: PageGeometry) -> PagedCache:
 def cache_logical_axes(g: PageGeometry, cache: PagedCache):
     """Logical-axis tree matching ``cache`` (see distribution.sharding)."""
     pool_ax = ("layers", "kv_shard", None, "kv_heads_dec", "page_tokens", None)
-    table_ax = ch.ContinuityTable(
-        keys=("kv_shard", None, None, None),
-        vals=("kv_shard", None, None, None),
-        indicator=("kv_shard", None),
-        ext_keys=("kv_shard", None, None, None),
-        ext_vals=("kv_shard", None, None, None),
-        ext_map=("kv_shard", None),
-        ext_count=("kv_shard",),
-        count=("kv_shard",),
-    )
+    # scheme-generic: every store-state leaf shards its leading DS dim
+    table_ax = store_shard_axes(cache.table, "kv_shard")
     return PagedCache(
         kpool=pool_ax, vpool=pool_ax,
         kscale=None if cache.kscale is None else pool_ax[:-1] + (None,),
@@ -168,19 +169,18 @@ def page_values(phys: jnp.ndarray) -> jnp.ndarray:
 
 # -- the paper's ops on the decode path --------------------------------------
 
-def lookup_pages(g: PageGeometry, table: ch.ContinuityTable,
-                 seq_ids: jnp.ndarray) -> jnp.ndarray:
-    """Translate every (sequence, logical page) via continuity lookup:
-    one contiguous segment fetch per translation. Returns (DS, Bl, MAXP)
-    physical ids, -1 where unmapped."""
+def lookup_pages(g: PageGeometry, table, seq_ids: jnp.ndarray) -> jnp.ndarray:
+    """Translate every (sequence, logical page) via a store lookup — the
+    paper's client read (for continuity: one contiguous segment fetch per
+    translation). Returns (DS, Bl, MAXP) physical ids, -1 where unmapped."""
     DS, Bl = seq_ids.shape
     pages = jnp.broadcast_to(jnp.arange(g.max_pages, dtype=U32),
                              (Bl, g.max_pages))
     keys = jax.vmap(lambda s: page_keys(
         jnp.repeat(s, g.max_pages).reshape(Bl, g.max_pages), pages))(seq_ids)
     flat = keys.reshape(DS, Bl * g.max_pages, 4)
-    res = jax.vmap(lambda t, k: ch.lookup(g.table_cfg, t, k))(table, flat)
-    phys = jnp.where(res.found, res.values[..., 0].astype(I32), -1)
+    res = jax.vmap(g.store.lookup)(table, flat)
+    phys = jnp.where(res.ok, res.values[..., 0].astype(I32), -1)
     return phys.reshape(DS, Bl, g.max_pages)
 
 
@@ -195,13 +195,11 @@ def open_new_pages(g: PageGeometry, cache: PagedCache,
     logical = cache.seq_lens // g.page_size                  # page being opened
     keys = page_keys(cache.seq_ids, logical)                 # (DS, Bl, 4)
     vals = page_values(phys)
-    # the wave engine resolves same-pair cohorts internally (batch-order
-    # priority == the paper's lock order) and can grant extension groups,
-    # so one call replaces the old insert_parallel retry loop.
-    table, ok, _ = jax.vmap(
-        lambda t, k, v, m: ch.insert(g.table_cfg, t, k, v, m)
-    )(cache.table, keys.reshape(DS, Bl, 4), vals.reshape(DS, Bl, 4), need)
-    table = ch.ContinuityTable(*table)
+    # the store's batch engine resolves same-pair cohorts internally
+    # (batch-order priority == the paper's lock order; for continuity this
+    # is the wave engine, which can also grant extension groups).
+    table, _ = jax.vmap(g.store.insert)(
+        cache.table, keys.reshape(DS, Bl, 4), vals.reshape(DS, Bl, 4), need)
     nf = cache.next_free + jnp.sum(need, axis=1).astype(I32)
     return cache._replace(
         table=table,

@@ -1,8 +1,10 @@
 """Property-based (hypothesis) tests: every scheme is a faithful map.
 
-A random op sequence applied to each scheme must match a python-dict oracle,
-and the continuity invariant must hold after every op: an indicator bit is
-set IFF the slot holds a live item that lookup can see.
+A random op sequence applied to EVERY registered `repro.api` scheme must
+match a python-dict oracle (one generic test, parametrized over the
+registry — new schemes get the oracle for free), and the continuity
+invariant must hold after every op: an indicator bit is set IFF the slot
+holds a live item that lookup can see.
 """
 
 import jax.numpy as jnp
@@ -13,9 +15,11 @@ hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 import repro.core.continuity as ch
+from repro import api
 from repro.data import ycsb
 
 CFG = ch.ContinuityConfig(num_buckets=32)
+SLOTS = 320   # equal capacity across schemes (CFG's slot count)
 
 ops_strategy = st.lists(
     st.tuples(st.sampled_from(["insert", "update", "delete", "lookup"]),
@@ -32,39 +36,42 @@ def val_of(x):
     return np.full((1, 4), x, np.uint32)
 
 
-@settings(max_examples=40, deadline=None)
+@pytest.mark.parametrize("scheme", list(api.available_schemes()))
+@settings(max_examples=25, deadline=None)
 @given(ops_strategy)
-def test_continuity_matches_dict_oracle(ops):
-    t = ch.create(CFG)
+def test_scheme_matches_dict_oracle(scheme, ops):
+    """One oracle, every registered scheme, through `repro.api`."""
+    store = api.make_store(scheme, table_slots=SLOTS)
+    t = store.create()
     oracle = {}
     for op, i, x in ops:
         K, V = key_of(i), val_of(x)
         if op == "insert":
             if i in oracle:          # paper's insert assumes new keys
                 continue
-            t, ok, _ = ch.insert(CFG, t, K, V)
-            if bool(ok[0]):
+            t, r = store.insert(t, K, V)
+            if bool(r.ok[0]):
                 oracle[i] = x
         elif op == "update":
-            t, ok, _ = ch.update(CFG, t, K, V)
-            assert bool(ok[0]) == (i in oracle and
-                                   bool(ok[0]))  # may fail only if full
-            if bool(ok[0]):
+            t, r = store.update(t, K, V)
+            # success implies presence (may fail only if the bucket is full)
+            assert (not bool(r.ok[0])) or i in oracle
+            if bool(r.ok[0]):
                 oracle[i] = x
         elif op == "delete":
-            t, ok, _ = ch.delete(CFG, t, K)
-            assert bool(ok[0]) == (i in oracle)
+            t, r = store.delete(t, K)
+            assert bool(r.ok[0]) == (i in oracle)
             oracle.pop(i, None)
         else:
-            res = ch.lookup(CFG, t, K)
-            assert bool(res.found[0]) == (i in oracle)
+            r = store.lookup(t, K)
+            assert bool(r.ok[0]) == (i in oracle)
             if i in oracle:
-                assert int(np.asarray(res.values)[0, 0]) == oracle[i]
+                assert int(np.asarray(r.values)[0, 0]) == oracle[i]
     # final sweep
     for i, x in oracle.items():
-        res = ch.lookup(CFG, t, key_of(i))
-        assert bool(res.found[0])
-        assert int(np.asarray(res.values)[0, 0]) == x
+        r = store.lookup(t, key_of(i))
+        assert bool(r.ok[0])
+        assert int(np.asarray(r.values)[0, 0]) == x
     assert int(t.count) == len(oracle)
 
 
@@ -85,25 +92,3 @@ def test_indicator_bit_iff_live_item(ids):
     for j in np.nonzero(np.asarray(ok))[0]:
         pair, slot = int(res.pair[j]), int(res.slot[j])
         assert (int(t.indicator[pair]) >> slot) & 1 == 1
-
-
-@settings(max_examples=20, deadline=None)
-@given(st.lists(st.integers(0, 300), min_size=2, max_size=50, unique=True),
-       st.data())
-def test_level_and_pfarm_match_oracle(ids, data):
-    import repro.core.level as lv
-    import repro.core.pfarm as pf
-    for mod, cfg in ((lv, lv.LevelConfig(num_top=32)),
-                     (pf, pf.PFarmConfig(num_buckets=32))):
-        t = mod.create(cfg)
-        K = ycsb.make_key(np.asarray(ids))
-        V = ycsb.make_value(np.random.RandomState(1), len(ids))
-        t, ok, _ = mod.insert(cfg, t, K, V)
-        okn = np.asarray(ok)
-        res = mod.lookup(cfg, t, K)
-        assert np.asarray(res.found)[okn].all()
-        kill = data.draw(st.integers(0, len(ids) - 1))
-        if okn[kill]:
-            t, dok, _ = mod.delete(cfg, t, K[kill:kill + 1])
-            assert bool(dok[0])
-            assert not bool(mod.lookup(cfg, t, K[kill:kill + 1]).found[0])
