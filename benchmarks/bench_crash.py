@@ -1,0 +1,38 @@
+"""Crash-consistency benchmark: recovery work per scheme.
+
+Runs the `repro.consistency` crash/scheme matrix (every scheme x
+insert/update/delete, every trace prefix + torn split injected) and
+reports what each scheme's RESTART costs — the paper's consistency
+contrast as numbers instead of prose:
+
+  * continuity — indicator words scanned, zero log records, zero repairs;
+  * level      — token words + undo-log rollbacks + duplicate-scan slots;
+  * pfarm      — token words + RECIPE redo-log replays (every op logged);
+  * dense      — live bits only; its in-place update is the documented
+    torn-write hazard (violations are EXPECTED there and only there).
+
+Rows land in the CSV; the structured per-cell summaries go into the
+BENCH json under ``crash_consistency`` (schema-checked by
+``validate_bench.py``, which requires every cell's ``ok`` flag — the
+same gate the crash-matrix CI job enforces).
+"""
+
+from __future__ import annotations
+
+from repro.consistency import matrix as cmatrix
+
+
+def run(rows):
+    payload = {}
+    for r in cmatrix.run_matrix():
+        s = cmatrix.summarize(r)
+        rec = s["recovery"]
+        rows.append((
+            f"crash_recovery[{r.scheme}-{r.op}]", 0.0,
+            f"crash={s['crash_points']} torn={s['torn_points']} "
+            f"viol={s['violations']} log_used={s['log_used_points']} "
+            f"words={rec['commit_words_scanned']} "
+            f"repairs={rec['repairs']} dup={rec['duplicates_cleared']} "
+            f"{'OK' if s['ok'] else 'UNEXPECTED'}"))
+        payload[f"{r.scheme}.{r.op}"] = s
+    return payload

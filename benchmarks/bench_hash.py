@@ -33,22 +33,28 @@ SCHEMES = tuple(api.available_schemes())
 
 
 def bench_pm_writes(rows, n=512, table_slots=4096):
-    """Table I — through ``repro.api`` (one `CostLedger` per scheme)."""
+    """Table I — through ``repro.api`` (one `CostLedger` per scheme).
+
+    Returns the ``table1`` payload for the BENCH json ({scheme: {op:
+    pm/op}}), which ``validate_bench.py --assert-table1`` checks against
+    the paper's values (CI's Table I gate)."""
     rng = np.random.RandomState(0)
     K = ycsb.make_key(np.arange(n))
     V = ycsb.make_value(rng, n)
+    table1 = {}
     for s in SCHEMES:
         store = api.make_store(s, table_slots=table_slots)
         t = store.create()
         t, ri = store.insert(t, K, V)
         t, ru = store.update(t, K, ycsb.make_value(rng, n))
         t, rd = store.delete(t, K[: n // 2])
-        rows.append((f"pm_writes_insert[{s}]", 0.0,
-                     f"{ri.ledger.pm_per_op():.2f}"))
-        rows.append((f"pm_writes_update[{s}]", 0.0,
-                     f"{ru.ledger.pm_per_op():.2f}"))
-        rows.append((f"pm_writes_delete[{s}]", 0.0,
-                     f"{rd.ledger.pm_per_op():.2f}"))
+        table1[s] = {"insert": ri.ledger.pm_per_op(),
+                     "update": ru.ledger.pm_per_op(),
+                     "delete": rd.ledger.pm_per_op()}
+        for op in ("insert", "update", "delete"):
+            rows.append((f"pm_writes_{op}[{s}]", 0.0,
+                         f"{table1[s][op]:.2f}"))
+    return table1
 
 
 def bench_access_amp(rows):

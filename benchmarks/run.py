@@ -8,6 +8,8 @@ Prints ``name,us_per_call,derived`` CSV. Sections:
   * update_micro  — 100% updates (Figs 10/17)
   * ycsb          — YCSB-A/B/C/D/F throughput + latency (Figs 4–10/11–17)
   * load_factor   — load factor at each resize (Fig 18)
+  * crash_consistency — recovery work per scheme from the crash/scheme
+                    matrix (repro.consistency; EXPERIMENTS.md §Crash)
   * bench_serving — technique-on-the-hot-path serving numbers
   * roofline      — per-(arch x shape x mesh) dry-run roofline rows
                     (requires experiments/dryrun/*.json from
@@ -27,7 +29,8 @@ import json
 
 HASH_SECTIONS = ("pm_writes", "access_amp", "search", "update_micro",
                  "ycsb", "load_factor")
-SECTIONS = HASH_SECTIONS + ("hash", "serving", "roofline")
+SECTIONS = HASH_SECTIONS + ("crash_consistency", "hash", "serving",
+                            "roofline")
 
 
 def main(argv=None) -> None:
@@ -52,9 +55,12 @@ def main(argv=None) -> None:
     batches = tuple(int(b) for b in args.sweep_batches.split(",") if b)
 
     rows = []
-    from benchmarks import bench_hash, bench_serving, roofline
+    table1 = crash = None
+    from benchmarks import bench_crash, bench_hash, bench_serving, roofline
     if "pm_writes" in sections:
-        bench_hash.bench_pm_writes(rows)
+        table1 = bench_hash.bench_pm_writes(rows)
+    if "crash_consistency" in sections:
+        crash = bench_crash.run(rows)
     if "access_amp" in sections:
         bench_hash.bench_access_amp(rows)
     if "search" in sections:
@@ -70,6 +76,10 @@ def main(argv=None) -> None:
     if "roofline" in sections:
         roofline.run(rows)
     payload = bench_hash.bench_write_batch_sweep(rows, batches=batches)
+    if table1 is not None:
+        payload["table1"] = table1
+    if crash is not None:
+        payload["crash_consistency"] = crash
     with open(args.bench_json, "w") as f:
         json.dump(payload, f, indent=2, sort_keys=True)
     print("name,us_per_call,derived")

@@ -1,4 +1,4 @@
-"""Schema check for the BENCH_hash.json perf artifact.
+"""Schema + value checks for the BENCH json perf artifacts.
 
 The artifact is the cross-PR perf trajectory (EXPERIMENTS.md §Perf), so CI
 guards its shape: a structural schema (hand-rolled — no jsonschema dep in
@@ -6,23 +6,45 @@ the container) over the payload ``benchmarks/run.py`` emits:
 
     {
       "write_batch_sweep": {<op>: {<path>: {<batch>: CELL}}},
-      "wave_over_serial_speedup": {"<op>_b<batch>": float}
+      "wave_over_serial_speedup": {"<op>_b<batch>": float},
+      "table1": {<scheme>: {"insert"|"update"|"delete": float}},   # optional
+      "crash_consistency": {"<scheme>.<op>": {..., "ok": bool}}     # optional
     }
 
     CELL = {"ops_per_s": float > 0, "us_per_op": float > 0,
             "pm_writes": int >= 0, "succeeded": int >= 0}
 
-Usage: python benchmarks/validate_bench.py [BENCH_hash.json]
-Exit 0 on a valid artifact; raises/exits 1 with the offending path else.
+``--assert-table1`` additionally checks the ``table1`` VALUES against the
+paper (continuity 2/2/1, pfarm 5/5/5, level and dense bands) — the CI
+Table I gate, reading structured JSON instead of grepping CSV rows.
+``crash_consistency`` cells, when present, must all report ``ok``.
+
+Usage: python benchmarks/validate_bench.py [BENCH.json] [--assert-table1]
+Exit 0 on a valid artifact; exits 1 with the offending path else.
 """
 
 from __future__ import annotations
 
+import argparse
 import json
 import sys
 
 OPS = ("insert", "update", "delete")
 PATHS = ("serial", "wave")
+
+# scheme -> {op: (lo, hi)} inclusive acceptance band (paper Table I; level
+# insert/update have path-dependent ranges, dense is the repo's reference)
+TABLE1_BANDS = {
+    "continuity": {"insert": (2.0, 2.0), "update": (2.0, 2.0),
+                   "delete": (1.0, 1.0)},
+    "pfarm": {"insert": (5.0, 5.0), "update": (5.0, 5.0),
+              "delete": (5.0, 5.0)},
+    "level": {"insert": (2.0, 2.2), "update": (2.0, 5.0),
+              "delete": (1.0, 1.0)},
+    "dense": {"insert": (2.0, 2.0), "update": (1.0, 1.0),
+              "delete": (1.0, 1.0)},
+}
+TABLE1_REQUIRED = ("continuity", "pfarm")    # the paper's headline contrast
 CELL_FIELDS = {
     "ops_per_s": (float, int),
     "us_per_op": (float, int),
@@ -58,6 +80,53 @@ def _check_cell(cell, path: str) -> None:
         _fail(path, f"unexpected fields {sorted(extra)}")
 
 
+def _check_table1(t1) -> None:
+    if not isinstance(t1, dict) or not t1:
+        _fail("table1", "must be a non-empty object")
+    for scheme, cells in t1.items():
+        if not isinstance(cells, dict):
+            _fail(f"table1.{scheme}",
+                  f"expected object, got {type(cells).__name__}")
+        if set(cells) != set(OPS):
+            _fail(f"table1.{scheme}", f"ops must be exactly {OPS}, "
+                                      f"got {sorted(cells)}")
+        for op, v in cells.items():
+            if not isinstance(v, (int, float)) or isinstance(v, bool) or v < 0:
+                _fail(f"table1.{scheme}.{op}",
+                      f"expected non-negative number, got {v!r}")
+
+
+def _check_crash(cc) -> None:
+    if not isinstance(cc, dict) or not cc:
+        _fail("crash_consistency", "must be a non-empty object")
+    for cell, s in cc.items():
+        if not isinstance(s, dict) or "ok" not in s:
+            _fail(f"crash_consistency.{cell}", "missing 'ok' flag")
+        if s["ok"] is not True:
+            _fail(f"crash_consistency.{cell}",
+                  "cell did not match its crash-matrix expectation")
+
+
+def assert_table1(payload: dict) -> None:
+    """Check the paper's Table I values from the structured payload."""
+    if "table1" not in payload:
+        _fail("table1", "missing (run with --sections pm_writes)")
+    _check_table1(payload["table1"])
+    t1 = payload["table1"]
+    missing = set(TABLE1_REQUIRED) - set(t1)
+    if missing:
+        _fail("table1", f"required schemes missing: {sorted(missing)}")
+    for scheme, cells in t1.items():
+        bands = TABLE1_BANDS.get(scheme)
+        if bands is None:
+            continue
+        for op, (lo, hi) in bands.items():
+            v = cells[op]
+            if not lo - 1e-9 <= v <= hi + 1e-9:
+                _fail(f"table1.{scheme}.{op}",
+                      f"{v!r} outside the paper band [{lo}, {hi}]")
+
+
 def validate(payload: dict) -> None:
     """Raise `SchemaError` unless ``payload`` is a valid sweep artifact."""
     if not isinstance(payload, dict):
@@ -65,6 +134,10 @@ def validate(payload: dict) -> None:
     missing = {"write_batch_sweep", "wave_over_serial_speedup"} - set(payload)
     if missing:
         _fail("$", f"missing keys {sorted(missing)}")
+    if "table1" in payload:
+        _check_table1(payload["table1"])
+    if "crash_consistency" in payload:
+        _check_crash(payload["crash_consistency"])
 
     sweep = payload["write_batch_sweep"]
     if set(sweep) - set(OPS) or not sweep:
@@ -102,17 +175,26 @@ def validate(payload: dict) -> None:
 
 
 def main(argv=None) -> int:
-    args = argv if argv is not None else sys.argv[1:]
-    fname = args[0] if args else "BENCH_hash.json"
-    with open(fname) as f:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("file", nargs="?", default="BENCH_hash.json")
+    p.add_argument("--assert-table1", action="store_true",
+                   help="also check table1 VALUES against the paper bands")
+    args = p.parse_args(argv)
+    with open(args.file) as f:
         payload = json.load(f)
     try:
         validate(payload)
+        if args.assert_table1:
+            assert_table1(payload)
     except SchemaError as e:
-        print(f"INVALID {fname}: {e}", file=sys.stderr)
+        print(f"INVALID {args.file}: {e}", file=sys.stderr)
         return 1
-    print(f"OK {fname}: valid write-batch sweep artifact "
-          f"({len(payload['write_batch_sweep'])} ops)")
+    extras = [k for k in ("table1", "crash_consistency") if k in payload]
+    print(f"OK {args.file}: valid write-batch sweep artifact "
+          f"({len(payload['write_batch_sweep'])} ops"
+          + (f"; + {', '.join(extras)}" if extras else "")
+          + ("; table1 values in paper bands" if args.assert_table1 else "")
+          + ")")
     return 0
 
 

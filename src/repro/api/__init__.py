@@ -18,6 +18,11 @@ out of one shared `CostLedger` instead of per-module counters.
 Execution strategy is picked at this boundary via `ExecPolicy` (wave
 engine vs serial scan oracle; jnp gather vs Pallas probe kernel), and new
 schemes plug in through `register_scheme` — see DESIGN.md §6.
+
+Every store also exposes the crash-consistency surface (DESIGN.md §7):
+``store.trace_insert/trace_update/trace_delete`` emit the op's ordered PM
+store trace for `repro.consistency`'s crash injector, and
+``store.recover`` runs the scheme's restart procedure.
 """
 
 from repro.api.registry import (available_schemes, get_scheme, make_store,

@@ -112,6 +112,31 @@ class _ModuleStore:
         _check_resize_lossless(self.name, table, new_table)
         return new, new_table
 
+    # -- crash-consistency surface (repro.consistency) ----------------------
+    # Traced twins of the write ops: same table-out/ok-out contract, plus
+    # the ordered PM store trace (`TraceResult.trace`) the crash injector
+    # replays.  ``recover`` is the scheme's restart procedure; it accepts a
+    # table pytree or a crash-injected state (`CrashState.state`).
+
+    def trace_insert(self, table, keys, vals, mask=None):
+        from repro import consistency
+        return consistency.trace_store_op(self, table, "insert", keys, vals,
+                                          mask)
+
+    def trace_update(self, table, keys, vals, mask=None):
+        from repro import consistency
+        return consistency.trace_store_op(self, table, "update", keys, vals,
+                                          mask)
+
+    def trace_delete(self, table, keys, mask=None):
+        from repro import consistency
+        return consistency.trace_store_op(self, table, "delete", keys, None,
+                                          mask)
+
+    def recover(self, table_or_state):
+        from repro import consistency
+        return consistency.recover_store(self, table_or_state)
+
     def load_factor(self, table) -> jnp.ndarray:
         return self._mod.load_factor(self.cfg, table)
 

@@ -20,6 +20,9 @@ Calling convention (uniform across schemes):
     lf               = store.load_factor(table)
     info             = store.stats(table)          # host-side dict
 
+    table, tres      = store.trace_insert(table, keys, vals)   # + PM trace
+    table2, report   = store.recover(crashed_state)            # restart
+
 ``res`` is an `OpResult`; ``res.ledger`` is the `CostLedger` every scheme
 reports in the same units, which is what makes the paper's Table I an
 apples-to-apples subtraction: ``res.ledger.pm_per_op()``.
@@ -107,6 +110,18 @@ class HashStore(Protocol):
     def load_factor(self, table: Any) -> jnp.ndarray: ...
 
     def stats(self, table: Any) -> dict: ...
+
+    # crash-consistency surface (`repro.consistency`): traced twins of the
+    # write ops — same (table, result) contract, but the result carries the
+    # ordered PM store trace the crash injector replays — and the scheme's
+    # restart procedure (returns (table, RecoveryReport)).
+    def trace_insert(self, table: Any, keys, vals, mask=None) -> Tuple[Any, Any]: ...
+
+    def trace_update(self, table: Any, keys, vals, mask=None) -> Tuple[Any, Any]: ...
+
+    def trace_delete(self, table: Any, keys, mask=None) -> Tuple[Any, Any]: ...
+
+    def recover(self, table_or_state: Any) -> Tuple[Any, Any]: ...
 
 
 def store_shard_axes(table: Any, axis: str):

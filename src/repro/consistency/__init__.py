@@ -1,0 +1,41 @@
+"""`repro.consistency` — PM write tracing, crash injection, recovery.
+
+The paper's "second bird" (log-free PM consistency: every op becomes
+durable via ONE atomic 8-byte indicator store) reproduced as actual crash
+semantics, not just Table I write counts:
+
+  * `trace`    — `PMStore` records (address range, payload, atomicity),
+    `PMTrace`, and the crash injector (`crash_states`: every trace
+    prefix + every torn split of non-atomic stores);
+  * `schemes`  — instrumented write paths + recovery per registered
+    scheme (continuity: pure indicator-word recovery, zero log; level:
+    undo log + duplicate scan; pfarm: RECIPE redo-log replay; dense:
+    split commit, unprotected in-place update as negative control);
+  * `checker`  — per-op atomic-visibility verification over every crash
+    point (`run_case`);
+  * `matrix`   — the scheme x op CI gate
+    (``python -m repro.consistency.matrix``).
+
+`repro.api` stores expose this as ``store.trace_insert / trace_update /
+trace_delete`` and ``store.recover`` (see `api_glue`); the serving page
+table gets `serving.kvcache.open_new_pages_traced`.
+"""
+
+from repro.consistency.api_glue import (TraceResult, recover_store,
+                                        trace_store_op)
+from repro.consistency.checker import (CaseResult, all_or_nothing_violations,
+                                       run_case, serial_prefix_items)
+from repro.consistency.recovery import RecoveryReport
+from repro.consistency.schemes import HANDLERS, trace_batch
+from repro.consistency.trace import (ATOMIC_BYTES, LOG, CrashState, PMStore,
+                                     PMTrace, SubWrite, TraceOp, apply_trace,
+                                     crash_states, torn_variants)
+
+__all__ = [
+    "ATOMIC_BYTES", "LOG", "CrashState", "PMStore", "PMTrace", "SubWrite",
+    "TraceOp", "apply_trace", "crash_states", "torn_variants",
+    "HANDLERS", "trace_batch", "RecoveryReport",
+    "CaseResult", "all_or_nothing_violations", "run_case",
+    "serial_prefix_items",
+    "TraceResult", "recover_store", "trace_store_op",
+]

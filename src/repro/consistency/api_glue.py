@@ -1,0 +1,73 @@
+"""`repro.api` <-> `repro.consistency` glue: traced store ops + recovery.
+
+`HashStore` adapters call these from their ``trace_*`` / ``recover``
+methods (deferred import on the stores side keeps `repro.api` importable
+without this package loaded).  The traced op returns the SAME new table a
+normal op would (semantically identical; byte-identical for the
+non-scrubbing schemes) plus a `TraceResult` carrying the PM store trace
+and a ledger reconciled with the scheme's own `CostLedger` accounting.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import numpy as np
+
+from repro.consistency.recovery import RecoveryReport
+from repro.consistency.schemes import HANDLERS, trace_batch
+from repro.consistency.trace import PMTrace
+from repro.core.pmem import CostLedger
+
+
+class TraceResult(NamedTuple):
+    """Result of a traced store op.
+
+    ``ok``     (B,) numpy bool — per-op success, as the untraced op;
+    ``trace``  the ordered `PMTrace` (records + per-op metadata);
+    ``ledger`` a `CostLedger` built from the trace's Table-I-counted
+    records — equal to the untraced op's ledger whenever every op took a
+    path the scheme's flat per-op cost models (see `schemes`).
+    """
+
+    ok: np.ndarray
+    trace: PMTrace
+    ledger: CostLedger
+
+
+def trace_store_op(store, table, op: str, keys, vals=None, mask=None):
+    """Run ``op`` under PM-write tracing; returns ``(new_table, TraceResult)``.
+
+    The trace order follows the store's `ExecPolicy`: continuity with
+    ``engine="wave"`` emits the wave engine's schedule (per wave: payload
+    stores then one-word commits), everything else the serial batch order.
+    """
+    handler = HANDLERS[store.name]
+    order = ("wave" if store.name == "continuity"
+             and store.policy.engine == "wave" else "serial")
+    state, trace = trace_batch(handler, store.cfg, table, op, keys, vals,
+                               mask, order=order)
+    # rebuild the derived (non-traced) counters — NOT a full recovery: the
+    # final state is uncrashed, so repair actions (log rollback, duplicate
+    # scan) must not run here (level legitimately holds duplicates after a
+    # duplicate-key insert, exactly as the untraced path does)
+    state = handler.rebuild_counts(store.cfg, state)
+    new_table = handler.state_to_table(store.cfg, state)
+    ok = np.array([o.ok for o in trace.ops], bool)
+    active = sum(1 for o in trace.ops if o.path != "masked")
+    ledger = CostLedger.zero().add(pm_writes=trace.pm_writes(), ops=active)
+    return new_table, TraceResult(ok, trace, ledger)
+
+
+def recover_store(store, table_or_state):
+    """Run the scheme's restart procedure; returns ``(table, RecoveryReport)``.
+
+    Accepts a scheme table pytree or a crash-injected numpy state (a
+    `CrashState.state`, which carries the PM log region for the logging
+    schemes).  Recovering a table that was never crashed is a no-op apart
+    from recomputing derived counters — recovery is idempotent.
+    """
+    handler = HANDLERS[store.name]
+    state = handler.init_state(store.cfg, table_or_state)
+    state, report = handler.recover(store.cfg, state)
+    return handler.state_to_table(store.cfg, state), report

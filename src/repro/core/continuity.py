@@ -250,11 +250,11 @@ def lookup(cfg: ContinuityConfig, table: ContinuityTable,
     return LookupResult(found, values, slot, pair, reads)
 
 
-def read_counters(cfg: ContinuityConfig, res: LookupResult) -> pmem.PMCounters:
+def read_counters(cfg: ContinuityConfig, res: LookupResult) -> pmem.CostLedger:
     """Client-side RDMA accounting for a lookup batch."""
     extra = jnp.sum(res.reads - 1)
     n = res.reads.shape[0]
-    return pmem.PMCounters.zero().add(
+    return pmem.CostLedger.zero().add(
         rdma_reads=jnp.sum(res.reads),
         bytes_fetched=n * cfg.segment_bytes + extra * cfg.ext_bytes,
         ops=n)
@@ -390,7 +390,7 @@ def insert_serial(cfg: ContinuityConfig, table: ContinuityTable, keys, vals,
     keys = jnp.asarray(keys, U32).reshape(-1, KEY_LANES)
     vals = jnp.asarray(vals, U32).reshape(-1, VAL_LANES)
     (table, ctr), ok = jax.lax.scan(
-        _scan_op(cfg, _insert_one, 2), (table, pmem.PMCounters.zero()),
+        _scan_op(cfg, _insert_one, 2), (table, pmem.CostLedger.zero()),
         (keys, vals, _active_mask(keys, mask)))
     return table, ok, ctr
 
@@ -401,7 +401,7 @@ def delete_serial(cfg: ContinuityConfig, table: ContinuityTable, keys,
     """Reference ``lax.scan`` delete. 1 PM write/op (indicator bit clear)."""
     keys = jnp.asarray(keys, U32).reshape(-1, KEY_LANES)
     (table, ctr), ok = jax.lax.scan(
-        _scan_op(cfg, _delete_one, 1), (table, pmem.PMCounters.zero()),
+        _scan_op(cfg, _delete_one, 1), (table, pmem.CostLedger.zero()),
         (keys, _active_mask(keys, mask)))
     return table, ok, ctr
 
@@ -413,7 +413,7 @@ def update_serial(cfg: ContinuityConfig, table: ContinuityTable, keys, vals,
     keys = jnp.asarray(keys, U32).reshape(-1, KEY_LANES)
     vals = jnp.asarray(vals, U32).reshape(-1, VAL_LANES)
     (table, ctr), ok = jax.lax.scan(
-        _scan_op(cfg, _update_one, 2), (table, pmem.PMCounters.zero()),
+        _scan_op(cfg, _update_one, 2), (table, pmem.CostLedger.zero()),
         (keys, vals, _active_mask(keys, mask)))
     return table, ok, ctr
 
@@ -807,7 +807,7 @@ def insert(cfg: ContinuityConfig, table: ContinuityTable, keys, vals,
             jnp.any(gpos >= 0),
             lambda t: _reorder_ext_pool(cfg, t, gpos, gidx),
             lambda t: t, table)
-    ctr = pmem.PMCounters.zero().add(pm_writes=2 * jnp.sum(ok),
+    ctr = pmem.CostLedger.zero().add(pm_writes=2 * jnp.sum(ok),
                                      ops=jnp.sum(active))
     return table, ok, ctr
 
@@ -862,7 +862,7 @@ def delete(cfg: ContinuityConfig, table: ContinuityTable, keys, mask=None):
 
     init = (jnp.zeros((), I32), table, jnp.zeros((keys.shape[0],), jnp.bool_))
     _, table, ok = jax.lax.while_loop(lambda c: c[0] < num_waves, body, init)
-    ctr = pmem.PMCounters.zero().add(pm_writes=jnp.sum(ok),
+    ctr = pmem.CostLedger.zero().add(pm_writes=jnp.sum(ok),
                                      ops=jnp.sum(active))
     return table, ok, ctr
 
@@ -904,7 +904,7 @@ def update(cfg: ContinuityConfig, table: ContinuityTable, keys, vals,
 
     init = (jnp.zeros((), I32), table, jnp.zeros((keys.shape[0],), jnp.bool_))
     _, table, ok = jax.lax.while_loop(lambda c: c[0] < num_waves, body, init)
-    ctr = pmem.PMCounters.zero().add(pm_writes=2 * jnp.sum(ok),
+    ctr = pmem.CostLedger.zero().add(pm_writes=2 * jnp.sum(ok),
                                      ops=jnp.sum(active))
     return table, ok, ctr
 

@@ -104,9 +104,9 @@ def lookup(cfg: DenseConfig, t: DenseTable, keys) -> LookupResult:
                         jnp.ones((keys.shape[0],), I32))
 
 
-def read_counters(cfg: DenseConfig, res: LookupResult) -> pmem.PMCounters:
+def read_counters(cfg: DenseConfig, res: LookupResult) -> pmem.CostLedger:
     n = res.reads.shape[0]
-    return pmem.PMCounters.zero().add(
+    return pmem.CostLedger.zero().add(
         rdma_reads=jnp.sum(res.reads),
         bytes_fetched=n * cfg.table_bytes, ops=n)
 
@@ -139,7 +139,7 @@ def insert(cfg: DenseConfig, t: DenseTable, keys, vals, mask=None):
         vals=t.vals.at[w].set(vals, mode="drop"))
     t = t._replace(live=t.live.at[w].set(True, mode="drop"),  # phase 2
                    count=t.count + jnp.sum(ok).astype(I32))
-    ctr = pmem.PMCounters.zero().add(pm_writes=2 * jnp.sum(ok),
+    ctr = pmem.CostLedger.zero().add(pm_writes=2 * jnp.sum(ok),
                                      ops=jnp.sum(active))
     return t, ok, ctr
 
@@ -154,7 +154,7 @@ def update(cfg: DenseConfig, t: DenseTable, keys, vals, mask=None):
     drop = jnp.iinfo(I32).max
     w = jnp.where(ok, slot, drop)
     t = t._replace(vals=t.vals.at[w].set(vals, mode="drop"))
-    ctr = pmem.PMCounters.zero().add(pm_writes=jnp.sum(ok),
+    ctr = pmem.CostLedger.zero().add(pm_writes=jnp.sum(ok),
                                      ops=jnp.sum(active))
     return t, ok, ctr
 
@@ -170,7 +170,7 @@ def delete(cfg: DenseConfig, t: DenseTable, keys, mask=None):
     w = jnp.where(ok, slot, drop)
     t = t._replace(live=t.live.at[w].set(False, mode="drop"),
                    count=t.count - jnp.sum(ok).astype(I32))
-    ctr = pmem.PMCounters.zero().add(pm_writes=jnp.sum(ok),
+    ctr = pmem.CostLedger.zero().add(pm_writes=jnp.sum(ok),
                                      ops=jnp.sum(active))
     return t, ok, ctr
 

@@ -11,9 +11,11 @@ so a remote search costs up to four one-sided reads (negative searches always
 scan all distinct candidates) — this is the access amplification the paper's
 continuity layout removes.
 
-PM-write behaviour (paper Table I): insert 2 (+2 on the rare one-movement
-path => 2–2.01 avg), delete 1, update 2 when an empty slot exists in the same
-bucket (log-free out-of-place) else 4 with logging (paper reports 2–5).
+PM-write behaviour (paper Table I): insert 2 (+3 on the rare one-movement
+path, reordered crash-safe => 2–2.01 avg), delete 1, update 2 when an empty
+slot exists in the same bucket (log-free out-of-place) else 4 with undo
+logging (paper reports 2–5).  Crash semantics of every path are reproduced
+and checked by `repro.consistency` (tests/test_crash_consistency.py).
 """
 
 from __future__ import annotations
@@ -144,8 +146,8 @@ def lookup(cfg: LevelConfig, t: LevelTable, keys) -> LookupResult:
     return LookupResult(found, values, where, reads)
 
 
-def read_counters(cfg: LevelConfig, res: LookupResult) -> pmem.PMCounters:
-    return pmem.PMCounters.zero().add(
+def read_counters(cfg: LevelConfig, res: LookupResult) -> pmem.CostLedger:
+    return pmem.CostLedger.zero().add(
         rdma_reads=jnp.sum(res.reads),
         bytes_fetched=jnp.sum(res.reads) * cfg.bucket_bytes,
         ops=res.reads.shape[0])
@@ -194,7 +196,13 @@ def _insert_one(cfg, t: LevelTable, key, val, active):
     bucket = cand[bsel]
 
     # one-movement path: top[h1]'s slot-0 item moves to ITS alternate top
-    # bucket if that one has space (counts +2 PM writes; rare in practice)
+    # bucket if that one has space.  Crash-safe 5-store order (+3 PM writes;
+    # rare in practice): copy, commit copy, CLEAR the source bit, write the
+    # new item into the freed slot, commit — the freed slot is never
+    # payload-written while its valid bit is set, so a torn store is
+    # invisible; the only crash artifact is a transient duplicate of the
+    # moved item, repaired by recovery's duplicate scan
+    # (repro.consistency.schemes.LevelHandler.recover).
     def try_move(t):
         mkey = t.tkeys[cand[0], 0]
         mval = t.tvals[cand[0], 0]
@@ -208,8 +216,9 @@ def _insert_one(cfg, t: LevelTable, key, val, active):
         tt = jnp.ones((), jnp.bool_)
         t2 = _write_slot(t, tt, alt, aslot, mkey, mval, can)
         t2 = _commit_tok(t2, tt, alt, atok | (U8(1) << aslot.astype(U8)), can)
-        # free the source slot, then place the new item there
+        # clear the source bit BEFORE reusing the slot, then commit the new item
         src_tok = t2.ttok[cand[0]] & ~U8(1)
+        t2 = _commit_tok(t2, tt, cand[0], src_tok, can)
         t2 = _write_slot(t2, tt, cand[0], jnp.zeros((), I32), key, val, can)
         t2 = _commit_tok(t2, tt, cand[0], src_tok | U8(1), can)
         return t2, can
@@ -223,7 +232,7 @@ def _insert_one(cfg, t: LevelTable, key, val, active):
 
     t2, ok = jax.lax.cond(ok_plain, plain, try_move, t)
     moved = ~ok_plain & ok
-    pm = jnp.where(ok, jnp.where(moved, 4, 2), 0).astype(I32)
+    pm = jnp.where(ok, jnp.where(moved, 5, 2), 0).astype(I32)
     return t2._replace(count=t2.count + ok.astype(I32)), ok, pm
 
 
@@ -286,7 +295,7 @@ def insert(cfg, t, keys, vals, mask=None):
     keys = jnp.asarray(keys, U32).reshape(-1, KEY_LANES)
     vals = jnp.asarray(vals, U32).reshape(-1, VAL_LANES)
     (t, ctr), ok = jax.lax.scan(
-        _scan(cfg, _insert_one), (t, pmem.PMCounters.zero()),
+        _scan(cfg, _insert_one), (t, pmem.CostLedger.zero()),
         (keys, vals, _active(keys, mask)))
     return t, ok, ctr
 
@@ -295,7 +304,7 @@ def insert(cfg, t, keys, vals, mask=None):
 def delete(cfg, t, keys, mask=None):
     keys = jnp.asarray(keys, U32).reshape(-1, KEY_LANES)
     (t, ctr), ok = jax.lax.scan(
-        _scan(cfg, _delete_one), (t, pmem.PMCounters.zero()),
+        _scan(cfg, _delete_one), (t, pmem.CostLedger.zero()),
         (keys, _active(keys, mask)))
     return t, ok, ctr
 
@@ -305,6 +314,6 @@ def update(cfg, t, keys, vals, mask=None):
     keys = jnp.asarray(keys, U32).reshape(-1, KEY_LANES)
     vals = jnp.asarray(vals, U32).reshape(-1, VAL_LANES)
     (t, ctr), ok = jax.lax.scan(
-        _scan(cfg, _update_one), (t, pmem.PMCounters.zero()),
+        _scan(cfg, _update_one), (t, pmem.CostLedger.zero()),
         (keys, vals, _active(keys, mask)))
     return t, ok, ctr

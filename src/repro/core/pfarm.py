@@ -157,9 +157,9 @@ def lookup(cfg: PFarmConfig, t: PFarmTable, keys) -> LookupResult:
     return LookupResult(found, vals_out, where, 1 + hops)
 
 
-def read_counters(cfg: PFarmConfig, res: LookupResult) -> pmem.PMCounters:
+def read_counters(cfg: PFarmConfig, res: LookupResult) -> pmem.CostLedger:
     n = res.reads.shape[0]
-    return pmem.PMCounters.zero().add(
+    return pmem.CostLedger.zero().add(
         rdma_reads=jnp.sum(res.reads),
         bytes_fetched=n * cfg.window_bytes
         + jnp.sum(res.reads - 1) * cfg.block_bytes,
@@ -305,7 +305,7 @@ def insert(cfg, t, keys, vals, mask=None):
     keys = jnp.asarray(keys, U32).reshape(-1, KEY_LANES)
     vals = jnp.asarray(vals, U32).reshape(-1, VAL_LANES)
     (t, ctr), ok = jax.lax.scan(
-        _scan(cfg, _insert_one), (t, pmem.PMCounters.zero()),
+        _scan(cfg, _insert_one), (t, pmem.CostLedger.zero()),
         (keys, vals, _active(keys, mask)))
     return t, ok, ctr
 
@@ -314,7 +314,7 @@ def insert(cfg, t, keys, vals, mask=None):
 def delete(cfg, t, keys, mask=None):
     keys = jnp.asarray(keys, U32).reshape(-1, KEY_LANES)
     (t, ctr), ok = jax.lax.scan(
-        _scan(cfg, _delete_one), (t, pmem.PMCounters.zero()),
+        _scan(cfg, _delete_one), (t, pmem.CostLedger.zero()),
         (keys, _active(keys, mask)))
     return t, ok, ctr
 
@@ -324,6 +324,6 @@ def update(cfg, t, keys, vals, mask=None):
     keys = jnp.asarray(keys, U32).reshape(-1, KEY_LANES)
     vals = jnp.asarray(vals, U32).reshape(-1, VAL_LANES)
     (t, ctr), ok = jax.lax.scan(
-        _scan(cfg, _update_one), (t, pmem.PMCounters.zero()),
+        _scan(cfg, _update_one), (t, pmem.CostLedger.zero()),
         (keys, vals, _active(keys, mask)))
     return t, ok, ctr

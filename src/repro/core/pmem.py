@@ -11,11 +11,12 @@ The paper measures:
     collective payload of the sharded lookup, so the same counter feeds the
     roofline collective term.
 
-``CostLedger`` is the ONE counter pytree threaded through every op of every
-scheme (`repro.api` returns it on each `OpResult`); the per-op apples-to-
-apples comparison the paper's Table I makes is just
-``ledger.pm_per_op()`` across schemes.  ``PMCounters`` is a back-compat
-alias — the name the scheme modules grew up with.
+``CostLedger`` is the canonical name of the ONE counter pytree threaded
+through every op of every scheme (`repro.api` returns it on each
+`OpResult`); the per-op apples-to-apples comparison the paper's Table I
+makes is just ``ledger.pm_per_op()`` across schemes.  ``PMCounters`` is a
+DEPRECATED alias kept only for old external call sites (see README.md
+"Migrating to repro.api") — nothing in this repo should use it.
 """
 
 from __future__ import annotations
@@ -73,7 +74,8 @@ class CostLedger(NamedTuple):
         return self._per_op(self.bytes_fetched)
 
 
-# Back-compat name used throughout the scheme modules.
+# DEPRECATED alias (pre-`repro.api` name); kept for external back-compat
+# only — new code and the scheme modules use ``CostLedger``.
 PMCounters = CostLedger
 
 

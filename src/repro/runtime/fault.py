@@ -16,6 +16,9 @@ Components:
     steps/batches to replay;
   * DeterministicSchedule — data order is a pure function of (step, shard),
     so replay after restore is exact (no persisted dataloader state needed);
+  * page_table_recovery_drill — the PM side of restore: replay the hash-
+    store recovery procedure over every shard's crashed page-table image
+    (composes with repro.consistency's crash injector);
   * StragglerPolicy — synchronous-collective straggler mitigation: track
     per-host step latencies (TPU steps are globally synchronized, so the
     slowest host IS the step time), flag persistent outliers for replacement
@@ -119,6 +122,27 @@ class StragglerReport:
     p50_ms: float
     host_p50_ms: float
     severity: float
+
+
+def page_table_recovery_drill(store, shard_states):
+    """Restart drill for a failed serving node: run the page-table store's
+    recovery procedure (`repro.api` ``store.recover``) on every shard's
+    crashed PM image and aggregate the per-shard recovery work.
+
+    ``shard_states`` — one crashed state (or table pytree) per data shard,
+    e.g. `repro.consistency.CrashState.state` images of an interrupted
+    `serving.kvcache.open_new_pages_traced` batch.  Returns ``(tables,
+    merged RecoveryReport)``; the merged report is the restart cost of the
+    node (for continuity page tables: indicator words scanned, ZERO log
+    records — the paper's log-free recovery claim at serving scale).
+    """
+    from repro.consistency import RecoveryReport
+    tables, merged = [], RecoveryReport(store.name)
+    for st in shard_states:
+        table, report = store.recover(st)
+        tables.append(table)
+        merged = merged.merge(report)
+    return tables, merged
 
 
 class StragglerPolicy:

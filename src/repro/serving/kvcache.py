@@ -184,29 +184,63 @@ def lookup_pages(g: PageGeometry, table, seq_ids: jnp.ndarray) -> jnp.ndarray:
     return phys.reshape(DS, Bl, g.max_pages)
 
 
+def _plan_page_allocation(g: PageGeometry, cache: PagedCache,
+                          need: jnp.ndarray):
+    """Shared allocation prologue: physical ids (bump allocator, alloc
+    order, +wrap) and the (seq, page) -> phys mapping batch."""
+    rank = jnp.cumsum(need.astype(I32), axis=1) - 1          # alloc order
+    phys = (cache.next_free[:, None] + rank) % g.pool_pages  # bump (+wrap)
+    logical = cache.seq_lens // g.page_size                  # page being opened
+    keys = page_keys(cache.seq_ids, logical)                 # (DS, Bl, 4)
+    vals = page_values(phys)
+    return phys, keys, vals
+
+
+def _open_pages_epilogue(cache: PagedCache, table, need, phys) -> PagedCache:
+    """Shared epilogue: install the new table and open the pages."""
+    return cache._replace(
+        table=table,
+        next_free=cache.next_free + jnp.sum(need, axis=1).astype(I32),
+        cur_page=jnp.where(need, phys, cache.cur_page),
+        cur_off=jnp.where(need, 0, cache.cur_off),
+    )
+
+
 def open_new_pages(g: PageGeometry, cache: PagedCache,
                    need: jnp.ndarray) -> PagedCache:
     """Allocate a physical page for each sequence with ``need`` set, insert
     the (seq, page) -> phys mapping into the hash table (server-side write:
     payload slots first, ONE atomic indicator commit), and open the page."""
     DS, Bl = need.shape
-    rank = jnp.cumsum(need.astype(I32), axis=1) - 1          # alloc order
-    phys = (cache.next_free[:, None] + rank) % g.pool_pages  # bump (+wrap)
-    logical = cache.seq_lens // g.page_size                  # page being opened
-    keys = page_keys(cache.seq_ids, logical)                 # (DS, Bl, 4)
-    vals = page_values(phys)
+    phys, keys, vals = _plan_page_allocation(g, cache, need)
     # the store's batch engine resolves same-pair cohorts internally
     # (batch-order priority == the paper's lock order; for continuity this
     # is the wave engine, which can also grant extension groups).
     table, _ = jax.vmap(g.store.insert)(
         cache.table, keys.reshape(DS, Bl, 4), vals.reshape(DS, Bl, 4), need)
-    nf = cache.next_free + jnp.sum(need, axis=1).astype(I32)
-    return cache._replace(
-        table=table,
-        next_free=nf,
-        cur_page=jnp.where(need, phys, cache.cur_page),
-        cur_off=jnp.where(need, 0, cache.cur_off),
-    )
+    return _open_pages_epilogue(cache, table, need, phys)
+
+
+def open_new_pages_traced(g: PageGeometry, cache: PagedCache,
+                          need: jnp.ndarray):
+    """Crash-checkable twin of `open_new_pages`: the same page-table insert
+    per data shard, but through ``store.trace_insert`` — returns the updated
+    cache plus one `repro.consistency.TraceResult` per shard, whose PM store
+    trace the crash injector can replay (every prefix of a page-allocation
+    batch must recover to atomically-visible-or-invisible mappings; see
+    tests/test_crash_consistency.py).  Host-level (python loop over shards):
+    a drill/verification path, not the jitted decode hot path."""
+    DS, Bl = need.shape
+    phys, keys, vals = _plan_page_allocation(g, cache, need)
+    tables, traces = [], []
+    for s in range(DS):
+        tbl = jax.tree.map(lambda x: x[s], cache.table)
+        tbl, tres = g.store.trace_insert(
+            tbl, keys[s].reshape(Bl, 4), vals[s].reshape(Bl, 4), need[s])
+        tables.append(tbl)
+        traces.append(tres)
+    table = jax.tree.map(lambda *xs: jnp.stack(xs), *tables)
+    return _open_pages_epilogue(cache, table, need, phys), traces
 
 
 def advance(g: PageGeometry, cache: PagedCache) -> PagedCache:

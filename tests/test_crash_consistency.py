@@ -1,0 +1,332 @@
+"""Crash-consistency subsystem: PM write traces, crash injection, recovery.
+
+The paper's §III-C claim verified operationally (repro.consistency):
+every crash point of every traced batch op — all trace prefixes plus all
+torn splits of non-atomic stores — recovers to a table where each op is
+atomically visible or invisible.  Continuity must do it from the
+indicator words alone (ZERO log records); level/pfarm exercise their
+logging-based reference recoveries; dense's unprotected in-place update
+is the negative control proving the checker detects real torn-write
+corruption.  Plus the property-level guarantees: recovery idempotence
+and serial-vs-wave trace equivalence (same durable states).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:                     # hypothesis is a dev dep (CI installs it); the
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True                    # property tests skip without
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+from repro import api
+from repro.consistency import (crash_states, matrix, run_case, trace_batch)
+from repro.consistency.schemes import HANDLERS
+from repro.consistency.trace import apply_trace
+from repro.data import ycsb
+
+OPS = ("insert", "update", "delete")
+
+
+def _loaded_store(scheme, table_slots=240, n_base=24, seed=7):
+    store = api.make_store(scheme, table_slots=table_slots)
+    rng = np.random.RandomState(seed)
+    K = ycsb.make_key(np.arange(n_base))
+    V = ycsb.make_value(rng, n_base)
+    t = store.create()
+    t, res = store.insert(t, K, V)
+    return store, t, K[np.asarray(res.ok)], rng
+
+
+# ---------------------------------------------------------------------------
+# the crash/scheme matrix (the CI gate, as a test)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("op", OPS)
+@pytest.mark.parametrize("scheme", list(matrix.SHAPES))
+def test_crash_matrix_cell(scheme, op):
+    """Every scheme x op sweeps all crash points and matches its
+    expectation (consistent/log-free per the paper's contrast)."""
+    r = matrix.run_cell(scheme, op)
+    assert r.crash_points > 1
+    assert matrix.cell_ok(r), (scheme, op, r.violations[:5],
+                               r.log_used_points)
+
+
+@pytest.mark.parametrize("op", OPS)
+def test_continuity_every_crash_point_log_free(op):
+    """The headline claim: continuity recovers from EVERY prefix and torn
+    split with zero log records anywhere — none in the trace, none read
+    by recovery — and recovery reads only the indicator words."""
+    r = matrix.run_cell("continuity", op)
+    assert r.consistent, r.violations[:5]
+    assert r.log_records_in_trace == 0
+    assert r.log_used_points == 0
+    assert r.report.log_records_scanned == 0
+    assert r.report.payload_slots_scanned == 0
+    assert r.report.commit_words_scanned > 0
+
+
+def test_pfarm_recovery_requires_log_records():
+    """The RECIPE baseline contrast: every pfarm op logs, and mid-op
+    crashes are only repaired by replaying log records."""
+    r = matrix.run_cell("pfarm", "insert")
+    assert r.consistent
+    assert r.log_records_in_trace > 0
+    assert r.log_used_points > 0
+    assert r.report.log_records_used > 0
+
+
+def test_level_logged_update_fallback_uses_undo_log():
+    """At high load the level update batch must hit a full bucket (the
+    logged in-place path) and recovery must roll entries back."""
+    r = matrix.run_cell("level", "update")
+    assert r.consistent
+    assert "logged" in r.paths
+    assert r.log_used_points > 0
+
+
+def test_dense_inplace_update_torn_hazard_detected():
+    """Negative control / checker mutation test: the unprotected dense
+    in-place update MUST produce detected violations, and only at torn
+    crash points."""
+    r = matrix.run_cell("dense", "update")
+    assert not r.consistent
+    assert all("torn" in v for v in r.violations)
+    assert r.torn_points > 0
+
+
+# ---------------------------------------------------------------------------
+# trace <-> scheme equivalence and ledger reconciliation
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("scheme", list(matrix.SHAPES))
+def test_traced_ops_match_untraced_ops(scheme):
+    """store.trace_* returns the same ok flags, visible items, and
+    Table-I PM-write count as the untraced op."""
+    store, t, live, rng = _loaded_store(scheme)
+    store = store.with_policy(api.ExecPolicy(engine="serial"))
+    h = HANDLERS[scheme]
+    K2 = ycsb.make_key(np.arange(500, 510))
+    V2 = ycsb.make_value(rng, 10)
+    for op, keys, vals in (("insert", K2, V2), ("update", live[:10], V2),
+                           ("delete", live[5:15], None)):
+        if op == "insert":
+            t1, tres = store.trace_insert(t, keys, vals)
+            t2, res = store.insert(t, keys, vals)
+        elif op == "update":
+            t1, tres = store.trace_update(t, keys, vals)
+            t2, res = store.update(t, keys, vals)
+        else:
+            t1, tres = store.trace_delete(t, keys)
+            t2, res = store.delete(t, keys)
+        np.testing.assert_array_equal(tres.ok, np.asarray(res.ok))
+        assert int(tres.ledger.pm_writes) == int(res.ledger.pm_writes)
+        assert int(tres.ledger.ops) == int(res.ledger.ops)
+        v1 = h.visible(store.cfg, h.init_state(store.cfg, t1))
+        v2 = h.visible(store.cfg, h.init_state(store.cfg, t2))
+        assert v1 == v2, (scheme, op)
+        assert int(t1.count) == int(t2.count)
+
+
+def test_trace_respects_exec_policy_order():
+    store, t, live, rng = _loaded_store("continuity")
+    K = ycsb.make_key(np.arange(500, 508))
+    V = ycsb.make_value(rng, 8)
+    _, wres = store.trace_insert(t, K, V)
+    _, sres = store.with_policy(
+        api.ExecPolicy(engine="serial")).trace_insert(t, K, V)
+    assert wres.trace.order == "wave"
+    assert sres.trace.order == "serial"
+
+
+# ---------------------------------------------------------------------------
+# recovery idempotence + serial/wave durable equivalence
+# (deterministic versions always run; hypothesis widens the input space
+# where the dev deps are installed, e.g. the CI tier1 job)
+# ---------------------------------------------------------------------------
+
+def _op_batch(op, live, rng, ids):
+    """Build one batch for ``op`` from id choices (one op per key)."""
+    ids = np.asarray(ids)
+    if op == "insert":
+        return ycsb.make_key(1000 + ids), ycsb.make_value(rng, len(ids))
+    keys = live[ids % live.shape[0]]
+    _, first = np.unique(keys, axis=0, return_index=True)
+    keys = keys[np.sort(first)]
+    vals = ycsb.make_value(rng, keys.shape[0]) if op == "update" else None
+    return keys, vals
+
+
+def _check_recover_idempotent(scheme, ids, op, crash_at):
+    """recover(recover(s)) == recover(s) on arbitrary crash images."""
+    store, t, live, rng = _loaded_store(scheme)
+    h = HANDLERS[scheme]
+    keys, vals = _op_batch(op, live, rng, ids)
+    base = h.init_state(store.cfg, t)
+    _, trace = trace_batch(h, store.cfg, base, op, keys, vals)
+    states = list(crash_states(base, trace))
+    cs = states[crash_at % len(states)]
+    once, _ = h.recover(store.cfg, cs.state)
+    twice, _ = h.recover(store.cfg, once)
+    assert set(once) == set(twice)
+    for f in once:
+        np.testing.assert_array_equal(once[f], twice[f], err_msg=f)
+
+
+def _check_serial_wave_equivalence(ids, op):
+    """The wave engine's trace schedule (per wave: payloads then one-word
+    commits) lands on the SAME durable final state as the serial batch
+    order — the trace-level statement of the engine's byte-identity
+    guarantee — and every wave crash point still recovers all-or-nothing."""
+    store, t, live, rng = _loaded_store("continuity")
+    h = HANDLERS["continuity"]
+    keys, vals = _op_batch(op, live, rng, ids)
+    base = h.init_state(store.cfg, t)
+    st_serial, tr_serial = trace_batch(h, store.cfg, base, op, keys, vals,
+                                       order="serial")
+    _, tr_wave = trace_batch(h, store.cfg, base, op, keys, vals,
+                             order="wave")
+    assert tr_wave.pm_writes() == tr_serial.pm_writes()
+    applied = apply_trace(base, tr_wave)
+    for f in st_serial:
+        np.testing.assert_array_equal(st_serial[f], applied[f], err_msg=f)
+    r = run_case(store, t, op, keys, vals, order="wave")
+    assert r.consistent, r.violations[:5]
+
+
+@pytest.mark.parametrize("op", OPS)
+@pytest.mark.parametrize("scheme", list(matrix.SHAPES))
+def test_recover_idempotent_fixed(scheme, op):
+    for crash_at in (0, 3, 10 ** 6):
+        _check_recover_idempotent(scheme, [0, 3, 5, 7, 11, 13], op, crash_at)
+
+
+@pytest.mark.parametrize("op", OPS)
+def test_serial_and_wave_traces_same_durable_state_fixed(op):
+    _check_serial_wave_equivalence(list(range(14)), op)
+    _check_serial_wave_equivalence([2, 9, 4, 30, 17], op)
+
+
+if HAVE_HYPOTHESIS:
+    key_ids = st.lists(st.integers(min_value=0, max_value=59), min_size=1,
+                       max_size=16, unique=True)
+
+    @pytest.mark.parametrize("scheme", list(matrix.SHAPES))
+    @settings(max_examples=10, deadline=None)
+    @given(ids=key_ids, op_pick=st.integers(min_value=0, max_value=2),
+           crash_at=st.integers(min_value=0, max_value=10 ** 6))
+    def test_recover_idempotent_property(scheme, ids, op_pick, crash_at):
+        _check_recover_idempotent(scheme, ids, OPS[op_pick], crash_at)
+
+    @settings(max_examples=15, deadline=None)
+    @given(ids=key_ids, op_pick=st.integers(min_value=0, max_value=2))
+    def test_serial_and_wave_traces_same_durable_state_property(ids, op_pick):
+        _check_serial_wave_equivalence(ids, OPS[op_pick])
+
+
+# ---------------------------------------------------------------------------
+# level movement: crash-safe 5-store order + duplicate-scan recovery
+# ---------------------------------------------------------------------------
+
+def test_level_movement_crash_safe_and_dedup():
+    """Drive a level insert onto the one-movement path, then crash it at
+    every point: torn stores must be invisible (the freed slot is never
+    written while its bit is set) and the transient duplicate of the
+    moved item must be repaired by recovery's duplicate scan."""
+    store = api.make_store("level", table_slots=48)
+    cfg = store.cfg
+    h = HANDLERS["level"]
+    rng = np.random.RandomState(3)
+    state = h.init_state(cfg, store.create())
+    K = ycsb.make_key(np.array([123]))
+    V = ycsb.make_value(rng, 1)
+    cand = h.route(cfg, K)[0]                    # K's four candidate buckets
+    # mover M: lives in K's first bucket (slot 0) with a DIFFERENT second
+    # top hash whose bucket we leave empty (the movement destination)
+    M = alt = None
+    for i in range(5000):
+        cM = ycsb.make_key(np.array([5000 + i]))
+        from repro.core.hashfn import hash128, hash128_2
+        a1 = int(np.asarray(hash128(jnp.asarray(cM)))[0]) % cfg.num_top
+        a2 = int(np.asarray(hash128_2(jnp.asarray(cM)))[0]) % cfg.num_top
+        if a1 == int(cand[0]) and a2 != a1 and a2 not in set(int(c) for c in cand):
+            M, alt = cM, a2
+            break
+    assert M is not None
+    # fill all four candidate buckets of K (mover in cand[0] slot 0)
+    nxt = iter(range(9000, 9999))
+    for j in range(4):
+        top = j < 2
+        kf = "tkeys" if top else "bkeys"
+        tf = "ttok" if top else "btok"
+        b = int(cand[j])
+        for s in range(cfg.bucket_slots):
+            state[kf][b, s] = ycsb.make_key(np.array([next(nxt)]))[0]
+        state[tf][b] = np.uint8((1 << cfg.bucket_slots) - 1)
+    state["tkeys"][int(cand[0]), 0] = M[0]
+    base_trace = trace_batch(h, cfg, state, "insert", K, V)[1]
+    assert base_trace.ops[0].path == "move", base_trace.ops[0].path
+    r = run_case(store, state, "insert", K, V)
+    assert r.consistent, r.violations[:5]
+    assert "move" in r.paths
+    assert r.log_records_in_trace == 0          # movement is log-free
+    # the mid-move crash points leave a duplicate that recovery clears
+    assert r.report.duplicates_cleared > 0
+
+
+# ---------------------------------------------------------------------------
+# serving page table + runtime restart drill
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("scheme", ["continuity", "dense"])
+def test_serving_page_table_crash_checkable(scheme):
+    from repro.configs.registry import smoke_config
+    from repro.models.config import ShapeConfig
+    from repro.runtime.fault import page_table_recovery_drill
+    from repro.serving import kvcache as KC
+
+    cfg = smoke_config("yi-6b")
+    shape = ShapeConfig("t", seq_len=128, global_batch=4, kind="decode")
+    geom = KC.make_geometry(cfg, shape, shards=2, page_size=16,
+                            scheme=scheme)
+    cache = KC.create_cache(geom)
+    need = (cache.seq_lens % geom.page_size) == 0
+    ref = KC.open_new_pages(geom, cache, need)
+    traced, traces = KC.open_new_pages_traced(geom, cache, need)
+    h = HANDLERS[scheme]
+    for s in range(geom.shards):
+        t_ref = jax.tree.map(lambda x: x[s], ref.table)
+        t_tr = jax.tree.map(lambda x: x[s], traced.table)
+        assert (h.visible(geom.store.cfg, h.init_state(geom.store.cfg, t_ref))
+                == h.visible(geom.store.cfg,
+                             h.init_state(geom.store.cfg, t_tr)))
+    np.testing.assert_array_equal(np.asarray(ref.next_free),
+                                  np.asarray(traced.next_free))
+    # crash shard 0's allocation batch at every point, then run the node
+    # restart drill over the crashed images
+    base = h.init_state(geom.store.cfg,
+                        jax.tree.map(lambda x: x[0], cache.table))
+    images = [cs.state for cs in crash_states(base, traces[0].trace)]
+    prefix_sets = [h.visible(geom.store.cfg, h.init_state(
+        geom.store.cfg, jax.tree.map(lambda x: x[0], cache.table)))]
+    tables, rep = page_table_recovery_drill(geom.store, images)
+    assert rep.log_records_used == 0            # log-free at serving scale
+    for tbl in tables:
+        vis = h.visible(geom.store.cfg, h.init_state(geom.store.cfg, tbl))
+        # each mapping all-or-nothing: values must be exact page ids
+        for k, v in vis.items():
+            assert len(v) == 16
+
+
+def test_store_recover_accepts_tables_and_reports():
+    store, t, live, _ = _loaded_store("continuity")
+    t2, rep = store.recover(t)
+    assert rep.log_free()
+    assert int(t2.count) == int(t.count)
+    t3, _ = store.recover(t2)
+    for a, b in zip(jax.tree.leaves(t2), jax.tree.leaves(t3)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
