@@ -132,6 +132,27 @@ def bench_ycsb(rows, num_records=3000, num_ops=6000, batch=500):
                          f"{nops/dt:.0f} ops/s"))
 
 
+def bench_end_to_end(rows, scale="full"):
+    """The paper's headline end-to-end claim: per-scheme YCSB-A/B/C
+    throughput + p50/p99 latency over the RDMA transport simulation
+    (`repro.rdma.sim`: exact verb plans, doorbell batching, analytical
+    `LinkModel`).  Returns the ``end_to_end`` payload for the BENCH json;
+    ``validate_bench.py`` bands the relative ordering (continuity >= level
+    >= pfarm on read-heavy workloads)."""
+    from repro.rdma import sim
+    kw = (dict(num_records=1200, num_ops=1500, batch=300) if scale == "smoke"
+          else dict(num_records=3000, num_ops=4000, batch=500))
+    e2e = {}
+    for s in SCHEMES:
+        for wl in sim.SIM_WORKLOADS:
+            r = sim.run_ycsb(s, wl, **kw)
+            e2e.setdefault(s, {})[wl] = r
+            rows.append((f"end_to_end_{wl}[{s}]", r["p50_us"],
+                         f"{r['ops_per_s']:.0f} ops/s p99={r['p99_us']:.2f}us "
+                         f"verbs/op={r['verbs_per_op']:.2f}"))
+    return e2e
+
+
 def bench_search_micro(rows, num_records=3000):
     """Figs 6/7 + 13/14: positive and negative search."""
     rng = np.random.RandomState(4)

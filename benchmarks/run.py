@@ -6,7 +6,13 @@ Prints ``name,us_per_call,derived`` CSV. Sections:
   * access_amp    — contiguous fetches + bytes per lookup
   * search        — positive/negative search micro (Figs 6/7 + 13/14)
   * update_micro  — 100% updates (Figs 10/17)
-  * ycsb          — YCSB-A/B/C/D/F throughput + latency (Figs 4–10/11–17)
+  * ycsb          — YCSB-A/B/C/D/F throughput + latency (Figs 4–10/11–17,
+                    CPU wall clock of the jitted ops)
+  * end_to_end    — per-scheme YCSB-A/B/C throughput + p50/p99 latency over
+                    the RDMA transport simulation (repro.rdma: verb plans,
+                    doorbell batching, analytical LinkModel) — the paper's
+                    headline 1.45–2.43x ordering; --e2e-scale smoke shrinks
+                    it for CI
   * load_factor   — load factor at each resize (Fig 18)
   * crash_consistency — recovery work per scheme from the crash/scheme
                     matrix (repro.consistency; EXPERIMENTS.md §Crash)
@@ -28,7 +34,7 @@ import argparse
 import json
 
 HASH_SECTIONS = ("pm_writes", "access_amp", "search", "update_micro",
-                 "ycsb", "load_factor")
+                 "ycsb", "end_to_end", "load_factor")
 SECTIONS = HASH_SECTIONS + ("crash_consistency", "hash", "serving",
                             "roofline")
 
@@ -44,6 +50,8 @@ def main(argv=None) -> None:
     p.add_argument("--sweep-batches", default="64,512,4096",
                    help="batch sizes for the serial-vs-wave sweep "
                         "(smoke CI uses a small subset)")
+    p.add_argument("--e2e-scale", default="full", choices=("full", "smoke"),
+                   help="workload sizes for the end_to_end section")
     args = p.parse_args(argv)
     sections = {s for s in args.sections.split(",") if s}
     unknown = sections - set(SECTIONS)
@@ -55,12 +63,14 @@ def main(argv=None) -> None:
     batches = tuple(int(b) for b in args.sweep_batches.split(",") if b)
 
     rows = []
-    table1 = crash = None
+    table1 = crash = e2e = None
     from benchmarks import bench_crash, bench_hash, bench_serving, roofline
     if "pm_writes" in sections:
         table1 = bench_hash.bench_pm_writes(rows)
     if "crash_consistency" in sections:
         crash = bench_crash.run(rows)
+    if "end_to_end" in sections:
+        e2e = bench_hash.bench_end_to_end(rows, scale=args.e2e_scale)
     if "access_amp" in sections:
         bench_hash.bench_access_amp(rows)
     if "search" in sections:
@@ -80,6 +90,8 @@ def main(argv=None) -> None:
         payload["table1"] = table1
     if crash is not None:
         payload["crash_consistency"] = crash
+    if e2e is not None:
+        payload["end_to_end"] = e2e
     with open(args.bench_json, "w") as f:
         json.dump(payload, f, indent=2, sort_keys=True)
     print("name,us_per_call,derived")

@@ -8,16 +8,23 @@ the container) over the payload ``benchmarks/run.py`` emits:
       "write_batch_sweep": {<op>: {<path>: {<batch>: CELL}}},
       "wave_over_serial_speedup": {"<op>_b<batch>": float},
       "table1": {<scheme>: {"insert"|"update"|"delete": float}},   # optional
-      "crash_consistency": {"<scheme>.<op>": {..., "ok": bool}}     # optional
+      "crash_consistency": {"<scheme>.<op>": {..., "ok": bool}},    # optional
+      "end_to_end": {<scheme>: {<workload>: E2E_CELL}}              # optional
     }
 
     CELL = {"ops_per_s": float > 0, "us_per_op": float > 0,
             "pm_writes": int >= 0, "succeeded": int >= 0}
+    E2E_CELL = {"ops_per_s": float > 0, "p50_us": float > 0,
+                "p99_us": float >= p50_us, ...}
 
 ``--assert-table1`` additionally checks the ``table1`` VALUES against the
 paper (continuity 2/2/1, pfarm 5/5/5, level and dense bands) — the CI
 Table I gate, reading structured JSON instead of grepping CSV rows.
 ``crash_consistency`` cells, when present, must all report ``ok``.
+``end_to_end``, when present, must satisfy the paper's relative-ordering
+band on the read-heavy mixes: continuity throughput >= level >= pfarm on
+BOTH YCSB-C and YCSB-B — the transport model is deterministic, so the
+ordering is a hard gate, not a tolerance check.
 
 Usage: python benchmarks/validate_bench.py [BENCH.json] [--assert-table1]
 Exit 0 on a valid artifact; exits 1 with the offending path else.
@@ -96,6 +103,48 @@ def _check_table1(t1) -> None:
                       f"expected non-negative number, got {v!r}")
 
 
+E2E_SCHEMES = ("continuity", "level", "pfarm")   # the ordering-band trio
+E2E_FIELDS = ("ops_per_s", "p50_us", "p99_us")
+
+
+def _check_end_to_end(e2e) -> None:
+    if not isinstance(e2e, dict) or not e2e:
+        _fail("end_to_end", "must be a non-empty object")
+    for scheme, cells in e2e.items():
+        if not isinstance(cells, dict) or not cells:
+            _fail(f"end_to_end.{scheme}", "must be a non-empty object")
+        for wl, cell in cells.items():
+            here = f"end_to_end.{scheme}.{wl}"
+            if not isinstance(cell, dict):
+                _fail(here, f"expected object, got {type(cell).__name__}")
+            for field in E2E_FIELDS:
+                v = cell.get(field)
+                if not isinstance(v, (int, float)) or isinstance(v, bool) \
+                        or v <= 0:
+                    _fail(f"{here}.{field}",
+                          f"expected positive number, got {v!r}")
+            if cell["p99_us"] < cell["p50_us"]:
+                _fail(here, f"p99 {cell['p99_us']!r} < p50 "
+                            f"{cell['p50_us']!r}")
+    # relative-ordering band (paper Figs 4-10): read-heavy mixes must rank
+    # continuity >= level >= pfarm in simulated throughput
+    missing = set(E2E_SCHEMES) - set(e2e)
+    if missing:
+        _fail("end_to_end", f"ordering-band schemes missing: "
+                            f"{sorted(missing)}")
+    for wl, chain in (("C", E2E_SCHEMES), ("B", E2E_SCHEMES)):
+        tputs = []
+        for s in chain:
+            if wl not in e2e[s]:
+                _fail(f"end_to_end.{s}", f"workload {wl!r} missing")
+            tputs.append(e2e[s][wl]["ops_per_s"])
+        for a, b, sa, sb in zip(tputs, tputs[1:], chain, chain[1:]):
+            if a < b:
+                _fail(f"end_to_end.{sa}.{wl}",
+                      f"ordering band violated: {sa} {a:.0f} ops/s < "
+                      f"{sb} {b:.0f} ops/s")
+
+
 def _check_crash(cc) -> None:
     if not isinstance(cc, dict) or not cc:
         _fail("crash_consistency", "must be a non-empty object")
@@ -138,6 +187,8 @@ def validate(payload: dict) -> None:
         _check_table1(payload["table1"])
     if "crash_consistency" in payload:
         _check_crash(payload["crash_consistency"])
+    if "end_to_end" in payload:
+        _check_end_to_end(payload["end_to_end"])
 
     sweep = payload["write_batch_sweep"]
     if set(sweep) - set(OPS) or not sweep:
@@ -189,7 +240,8 @@ def main(argv=None) -> int:
     except SchemaError as e:
         print(f"INVALID {args.file}: {e}", file=sys.stderr)
         return 1
-    extras = [k for k in ("table1", "crash_consistency") if k in payload]
+    extras = [k for k in ("table1", "crash_consistency", "end_to_end")
+              if k in payload]
     print(f"OK {args.file}: valid write-batch sweep artifact "
           f"({len(payload['write_batch_sweep'])} ops"
           + (f"; + {', '.join(extras)}" if extras else "")

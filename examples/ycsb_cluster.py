@@ -1,19 +1,23 @@
-"""Distributed continuity KV store under YCSB-A on a simulated 8-device mesh.
+"""Distributed continuity KV store under YCSB-A on a simulated 8-device mesh,
+plus the end-to-end RDMA transport comparison (`repro.rdma`).
 
 The paper's deployment: each data shard is a 'server' owning a pair range;
 clients batch reads (one contiguous segment fetch each, via all_to_all
-routing) and route writes to owners. Prints throughput + the consistency
-check that every committed write is visible.
+routing) and route writes to owners.  Wire accounting is verb-plan-derived
+(`DLookupResult.ledger`); the second half drives the same YCSB mixes
+through the analytical transport (`repro.rdma.sim`) and prints the
+per-scheme throughput/latency ordering the paper reports.
 
 NOTE: sets XLA_FLAGS for 8 host devices — run as its own process.
 
-Run: PYTHONPATH=src python examples/ycsb_cluster.py
+Run: PYTHONPATH=src python examples/ycsb_cluster.py [--smoke]
 """
 
 import os
 
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
+import argparse  # noqa: E402
 import time  # noqa: E402
 
 import jax  # noqa: E402
@@ -21,7 +25,7 @@ import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 
 
-def main():
+def run_mesh(smoke: bool) -> None:
     import repro.core.distributed as D
     from repro.core import continuity as ch
     from repro.data import ycsb
@@ -29,7 +33,8 @@ def main():
 
     mesh = make_debug_mesh((8,), ("data",))
     scfg = D.StoreConfig(
-        table=ch.ContinuityConfig(num_buckets=1 << 14, ext_frac=0.0),
+        table=ch.ContinuityConfig(num_buckets=1 << (10 if smoke else 14),
+                                  ext_frac=0.0),
         num_shards=8)
     print(f"store: {scfg.table.num_buckets} buckets over {scfg.num_shards} "
           f"servers ({scfg.pairs_per_shard} pairs each)")
@@ -37,7 +42,9 @@ def main():
     lookup = D.make_lookup(scfg, mesh)
     write = D.make_write(scfg, mesh)
 
-    n = 20_000
+    n = 1536 if smoke else 20_000      # batches must divide the 8-way mesh
+    B = 512 if smoke else 4096
+    rounds = 2 if smoke else 8
     rng = np.random.RandomState(0)
     K = ycsb.make_key(np.arange(n))
     V = ycsb.make_value(rng, n)
@@ -45,8 +52,8 @@ def main():
     with mesh:
         t0 = time.time()
         done = np.zeros(n, bool)
-        for lo in range(0, n, 4096):
-            hi = min(lo + 4096, n)
+        for lo in range(0, n, B):
+            hi = min(lo + B, n)
             table, ok, _ = write(table, jnp.full((hi - lo,), D.OP_INSERT,
                                                  jnp.int32),
                                  jnp.asarray(K[lo:hi]), jnp.asarray(V[lo:hi]))
@@ -56,12 +63,13 @@ def main():
 
         # YCSB-A: 50% reads / 50% updates, zipfian
         zipf = ycsb.Zipf(n)
-        B = 4096
-        rounds = 8
         t0 = time.time()
+        reads = bytes_fetched = 0
         for r in range(rounds):
             rk = ycsb.make_key(zipf.sample(rng, B))
             res = lookup(table, jnp.asarray(rk))
+            reads += int(res.ledger.rdma_reads)
+            bytes_fetched += int(res.ledger.bytes_fetched)
             uk = ycsb.make_key(zipf.sample(rng, B))
             table, uok, _ = write(table, jnp.full((B,), D.OP_UPDATE, jnp.int32),
                                   jnp.asarray(uk), jnp.asarray(
@@ -70,13 +78,49 @@ def main():
         dt = time.time() - t0
         nops = rounds * B * 2
         print(f"YCSB-A: {nops} ops in {dt:.1f}s = {nops/dt:.0f} ops/s "
-              f"(8 simulated devices on one CPU)")
+              f"(8 simulated devices on one CPU); global wire ledger: "
+              f"{reads} one-sided reads, {bytes_fetched} B fetched "
+              f"(verb-plan-derived)")
 
         # consistency: all loaded keys still resolve with correct liveness
-        res = lookup(table, jnp.asarray(K[:4096]))
-        assert bool(np.asarray(res.found)[done[:4096]].all())
+        res = lookup(table, jnp.asarray(K[:B]))
+        assert bool(np.asarray(res.found)[done[:B]].all())
         print("consistency check passed: every committed insert is visible")
 
 
+def run_transport(smoke: bool) -> None:
+    """End-to-end per-scheme YCSB over the one-sided transport simulation:
+    the paper's headline throughput/latency ordering."""
+    from repro.rdma import sim
+
+    kw = (dict(num_records=800, num_ops=1000, batch=250) if smoke
+          else dict(num_records=3000, num_ops=4000, batch=500))
+    print("\nRDMA transport end-to-end (doorbell batching + analytical "
+          "latency model):")
+    print(f"{'scheme':12s} {'wl':2s} {'ops/s':>10s} {'p50 us':>8s} "
+          f"{'p99 us':>8s} {'verbs/op':>9s}")
+    order = {}
+    for s in ("continuity", "level", "pfarm"):
+        for wl in sim.SIM_WORKLOADS:
+            r = sim.run_ycsb(s, wl, **kw)
+            order.setdefault(wl, []).append(r["ops_per_s"])
+            print(f"{s:12s} {wl:2s} {r['ops_per_s']:10.0f} "
+                  f"{r['p50_us']:8.2f} {r['p99_us']:8.2f} "
+                  f"{r['verbs_per_op']:9.2f}")
+    for wl in ("B", "C"):
+        c, l, p = order[wl]
+        assert c >= l >= p, (wl, order[wl])
+    print("ordering check passed: continuity >= level >= pfarm on "
+          "read-heavy workloads")
+
+
+def main(smoke: bool = False):
+    run_mesh(smoke)
+    run_transport(smoke)
+
+
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sizes for the examples smoke test")
+    main(ap.parse_args().smoke)

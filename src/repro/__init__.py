@@ -11,9 +11,9 @@ module-level API; new code should go through ``repro.api`` (see DESIGN.md).
 The lazy ``__getattr__`` keeps ``import repro`` free of jax initialization.
 """
 
-_SUBMODULES = ("api", "core", "kernels", "serving", "data", "configs",
-               "models", "launch", "distribution", "training", "checkpoint",
-               "runtime")
+_SUBMODULES = ("api", "core", "kernels", "rdma", "serving", "data",
+               "configs", "models", "launch", "distribution", "training",
+               "checkpoint", "runtime", "consistency")
 
 
 def __getattr__(name):

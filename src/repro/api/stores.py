@@ -95,10 +95,16 @@ class _ModuleStore:
         return table, OpResult(ok=ok, ledger=ctr)
 
     def lookup(self, table, keys) -> OpResult:
+        # ONE accounting path for every scheme: the lookup emits its verb
+        # plan (continuity: one contiguous segment READ; level: scattered
+        # bucket READs; pfarm: window + chained READs; dense: whole-table
+        # READ) and the ledger is derived from the plan — this replaced
+        # the four per-scheme hand-tallied ``read_counters`` blocks.
+        from repro.rdma import verbs as rv
         res = self._lookup_res(table, keys)
-        ctr = self._mod.read_counters(self.cfg, res)
-        return OpResult(ok=res.found, ledger=ctr, values=res.values,
-                        reads=res.reads)
+        plan = self._mod.lookup_plan(self.cfg, table, keys, res)
+        return OpResult(ok=res.found, ledger=rv.ledger_from_plan(plan),
+                        values=res.values, reads=res.reads, plan=plan)
 
     def resize(self, table, factor: int = 2) -> Tuple["_ModuleStore", Any]:
         """Rehash every live item into a ``factor``x-capacity store.

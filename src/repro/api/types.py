@@ -40,6 +40,7 @@ from repro.core.pmem import CostLedger
 
 ENGINES = ("wave", "serial")
 PROBES = ("gather", "pallas", "reference")
+TRANSPORTS = ("none", "sim")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -58,17 +59,26 @@ class ExecPolicy:
     * ``qblock`` — queries per Pallas grid step (probe kernel only).
     * ``interpret`` — run Pallas kernels in interpreter mode (True on CPU
       containers; set False on real TPU hardware).
+    * ``transport`` — which transport host-side drivers attach to the verb
+      plans ops emit: ``"none"`` (plans price the `CostLedger` only) or
+      ``"sim"`` (a `repro.rdma.RemoteMemory` endpoint with doorbell
+      batching and the analytical latency model;
+      ``RemoteMemory.from_policy(policy)`` builds it).  Lookups ALWAYS
+      carry their plan on `OpResult.plan`; the policy decides whether
+      anything executes/prices it.
     """
 
     engine: str = "wave"
     probe: str = "gather"
     qblock: int = 8
     interpret: bool = True
+    transport: str = "none"
 
     def __post_init__(self):
         assert self.engine in ENGINES, self.engine
         assert self.probe in PROBES, self.probe
         assert self.qblock >= 1
+        assert self.transport in TRANSPORTS, self.transport
 
 
 class OpResult(NamedTuple):
@@ -78,12 +88,17 @@ class OpResult(NamedTuple):
     ``ledger`` accumulated `CostLedger` for the batch.
     ``values`` (B, VAL_LANES) uint32 — lookup payloads (None on writes).
     ``reads``  (B,) int32 — contiguous fetches per lookup (None on writes).
+    ``plan``   `repro.rdma.VerbPlan` — the one-sided verb plan the lookup
+               emitted (None on writes); ``ledger``'s read counters are
+               derived from it, and host-side drivers post it to the
+               transport `ExecPolicy.transport` selects.
     """
 
     ok: jnp.ndarray
     ledger: CostLedger
     values: Optional[jnp.ndarray] = None
     reads: Optional[jnp.ndarray] = None
+    plan: Optional[Any] = None
 
 
 @runtime_checkable

@@ -6,7 +6,9 @@ semantics, not just Table I write counts:
 
   * `trace`    — `PMStore` records (address range, payload, atomicity),
     `PMTrace`, and the crash injector (`crash_states`: every trace
-    prefix + every torn split of non-atomic stores);
+    prefix + every torn split of non-atomic stores; `remote_crash_states`:
+    the RDMA-delivery cut between NIC-visible and PM-persisted under a
+    remote-persist fence schedule — DESIGN.md §8);
   * `schemes`  — instrumented write paths + recovery per registered
     scheme (continuity: pure indicator-word recovery, zero log; level:
     undo log + duplicate scan; pfarm: RECIPE redo-log replay; dense:
@@ -27,13 +29,20 @@ from repro.consistency.checker import (CaseResult, all_or_nothing_violations,
                                        run_case, serial_prefix_items)
 from repro.consistency.recovery import RecoveryReport
 from repro.consistency.schemes import HANDLERS, trace_batch
-from repro.consistency.trace import (ATOMIC_BYTES, LOG, CrashState, PMStore,
-                                     PMTrace, SubWrite, TraceOp, apply_trace,
-                                     crash_states, torn_variants)
+from repro.consistency.trace import (ATOMIC_BYTES, COMMIT_KINDS, LOG,
+                                     CrashState, PMStore, PMTrace,
+                                     RemoteCrashState, SubWrite, TraceOp,
+                                     apply_trace, crash_states,
+                                     fence_after_commits, fence_every_store,
+                                     remote_crash_states, torn_variants,
+                                     unpersisted_commits)
 
 __all__ = [
-    "ATOMIC_BYTES", "LOG", "CrashState", "PMStore", "PMTrace", "SubWrite",
+    "ATOMIC_BYTES", "COMMIT_KINDS", "LOG", "CrashState", "PMStore", "PMTrace",
+    "RemoteCrashState", "SubWrite",
     "TraceOp", "apply_trace", "crash_states", "torn_variants",
+    "fence_after_commits", "fence_every_store", "remote_crash_states",
+    "unpersisted_commits",
     "HANDLERS", "trace_batch", "RecoveryReport",
     "CaseResult", "all_or_nothing_violations", "run_case",
     "serial_prefix_items",

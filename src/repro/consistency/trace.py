@@ -198,3 +198,84 @@ def crash_states(base: State, trace: PMTrace,
                 yield CrashState(f"torn:{i}.{j}", torn, i, True)
         apply_store(cur, rec)
         yield CrashState(f"prefix:{i + 1}", copy_state(cur), i + 1, False)
+
+
+# ---------------------------------------------------------------------------
+# remote persistence (RDMA writes over the transport layer — DESIGN.md §8)
+# ---------------------------------------------------------------------------
+# When the stores of a trace arrive as one-sided RDMA WRITEs, a store is
+# VISIBLE to concurrent readers as soon as the remote NIC ACKs it (it landed
+# in the target's cache hierarchy / DDIO buffer) but only PERSISTED once a
+# remote-persist fence — the read-after-WRITE flush of Kashyap et al.,
+# "Correct, Fast Remote Persistence" — has drained it to the PM media.  A
+# power loss on the server therefore cuts BETWEEN the two: readers may have
+# observed state the restarted node no longer has.  ``remote_crash_states``
+# materializes exactly that cut for every store boundary.
+
+COMMIT_KINDS = ("indicator", "token", "log_commit", "log_free")
+
+
+@dataclasses.dataclass(frozen=True)
+class RemoteCrashState:
+    """One remote power-loss point under RDMA-write delivery.
+
+    ``visible``   what concurrent clients could have observed (all stores
+                  the NIC ACKed up to the cut);
+    ``persisted`` what the restarted server actually has (stores up to the
+                  last remote-persist fence) — recovery MUST run on this
+                  image, not the visible one.
+    """
+
+    label: str
+    visible: State
+    persisted: State
+    records_done: int     # stores NIC-visible at the cut
+    fenced_done: int      # stores durably persisted at the cut
+
+
+def fence_every_store(trace: PMTrace) -> Tuple[int, ...]:
+    """The strict discipline: a remote-persist fence after EVERY store
+    (each WRITE is flushed before the next issues) — visible == persisted
+    at every cut, at one dependent round trip per store."""
+    return tuple(range(len(trace.records)))
+
+
+def fence_after_commits(trace: PMTrace) -> Tuple[int, ...]:
+    """The schemes' correctness-minimal discipline: fence after every
+    commit-word store (and log commit/free).  Payload stores may be lost
+    on power failure — harmless, their commit bit never persisted — but no
+    COMMITTED op can be observed and then lost."""
+    return tuple(i for i, r in enumerate(trace.records)
+                 if r.kind in COMMIT_KINDS)
+
+
+def remote_crash_states(base: State, trace: PMTrace,
+                        fences: Optional[Tuple[int, ...]] = None
+                        ) -> Iterator[RemoteCrashState]:
+    """Cut the remote node's power after each store's NIC ACK: yield the
+    (visible, persisted) image pair per cut.  ``fences`` lists record
+    indices AFTER which a remote-persist fence completed (default: the
+    commit-fence discipline, `fence_after_commits`)."""
+    fset = set(fence_after_commits(trace) if fences is None else fences)
+    cur = copy_state(base)
+    persisted = copy_state(base)
+    fenced = 0
+    yield RemoteCrashState("remote:0", copy_state(cur), copy_state(persisted),
+                           0, 0)
+    for i, rec in enumerate(trace.records):
+        apply_store(cur, rec)
+        if i in fset:
+            persisted = copy_state(cur)
+            fenced = i + 1
+        yield RemoteCrashState(f"remote:{i + 1}", copy_state(cur),
+                               copy_state(persisted), i + 1, fenced)
+
+
+def unpersisted_commits(trace: PMTrace, cs: RemoteCrashState) -> int:
+    """Commit-kind stores a client could have OBSERVED at this cut that the
+    restarted server lost — the durability violations an unfenced (write-
+    combined) delivery admits.  Zero at every cut under the
+    `fence_after_commits` discipline."""
+    return sum(1 for i, r in enumerate(trace.records)
+               if cs.fenced_done <= i < cs.records_done
+               and r.kind in COMMIT_KINDS)

@@ -250,14 +250,31 @@ def lookup(cfg: ContinuityConfig, table: ContinuityTable,
     return LookupResult(found, values, slot, pair, reads)
 
 
-def read_counters(cfg: ContinuityConfig, res: LookupResult) -> pmem.CostLedger:
-    """Client-side RDMA accounting for a lookup batch."""
-    extra = jnp.sum(res.reads - 1)
-    n = res.reads.shape[0]
-    return pmem.CostLedger.zero().add(
-        rdma_reads=jnp.sum(res.reads),
-        bytes_fetched=n * cfg.segment_bytes + extra * cfg.ext_bytes,
-        ops=n)
+def lookup_plan(cfg: ContinuityConfig, table: ContinuityTable, keys,
+                res: LookupResult):
+    """Verb plan of a lookup batch (paper §III-B): ONE contiguous segment
+    READ per key — home bucket + neighbouring SBuckets in a single
+    one-sided fetch, misses included — plus one DEPENDENT extension-group
+    READ iff the pair has added SBuckets and the main segment missed
+    (``res.reads > 1``).  The `CostLedger` every caller sees is derived
+    from this plan (`repro.rdma.verbs.ledger_from_plan`)."""
+    from repro.rdma import verbs as rv
+    keys = jnp.asarray(keys, U32).reshape(-1, KEY_LANES)
+    pair, parity = locate(cfg, keys)
+    # modeled row layout: [B_even | indicator | SBuckets | B_odd] — the
+    # indicator word sits in the two segments' OVERLAP, so BOTH parities'
+    # fetches are genuinely contiguous ranges that include it: even =
+    # [row, row + segment_bytes), odd = [row + bucket_slots*SLOT_BYTES,
+    # row_end); a plan replay against a linear memory image stays valid
+    row_bytes = INDICATOR_BYTES + cfg.slots_per_pair * SLOT_BYTES
+    seg_off = pair * row_bytes + parity * (cfg.bucket_slots * SLOT_BYTES)
+    ext = res.reads > 1
+    eidx = jnp.maximum(table.ext_map[pair], 0)
+    return rv.pack(keys.shape[0], [
+        (rv.READ, rv.REGION_TABLE, seg_off, cfg.segment_bytes, 0, False),
+        (jnp.where(ext, rv.READ, rv.NOOP), rv.REGION_EXT,
+         eidx * cfg.ext_bytes, cfg.ext_bytes, 1, False),
+    ])
 
 
 # ---------------------------------------------------------------------------

@@ -104,11 +104,14 @@ def lookup(cfg: DenseConfig, t: DenseTable, keys) -> LookupResult:
                         jnp.ones((keys.shape[0],), I32))
 
 
-def read_counters(cfg: DenseConfig, res: LookupResult) -> pmem.CostLedger:
-    n = res.reads.shape[0]
-    return pmem.CostLedger.zero().add(
-        rdma_reads=jnp.sum(res.reads),
-        bytes_fetched=n * cfg.table_bytes, ops=n)
+def lookup_plan(cfg: DenseConfig, t: DenseTable, keys, res: LookupResult):
+    """Verb plan of a lookup batch: the degenerate worst case — one READ of
+    the ENTIRE table region per key (dense tables are only viable local;
+    remote they are what the paper's schemes exist to avoid)."""
+    from repro.rdma import verbs as rv
+    keys = jnp.asarray(keys, U32).reshape(-1, KEY_LANES)
+    return rv.pack(keys.shape[0], [
+        (rv.READ, rv.REGION_TABLE, 0, cfg.table_bytes, 0, False)])
 
 
 def _batch(keys, vals, mask):

@@ -33,10 +33,13 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.core import continuity as ch
-from repro.core.continuity import (KEY_LANES, VAL_LANES, ContinuityConfig,
+from repro.core import pmem
+from repro.core.continuity import (INDICATOR_BYTES, KEY_LANES, SLOT_BYTES,
+                                   VAL_LANES, ContinuityConfig,
                                    ContinuityTable, _commit_indicator,
                                    _gather_candidates, _scatter_payload,
                                    locate)
+from repro.rdma import verbs as rv
 
 U32 = jnp.uint32
 I32 = jnp.int32
@@ -128,7 +131,8 @@ class DLookupResult(NamedTuple):
     found: jnp.ndarray     # (B,) bool
     values: jnp.ndarray    # (B, VAL_LANES)
     routed: jnp.ndarray    # (B,) bool — False = routing overflow, retry
-    segment_bytes: jnp.ndarray  # () payload bytes fetched on this shard
+    ledger: pmem.CostLedger  # GLOBAL client-batch wire ledger (verb-plan-
+    #                          derived, psum-replicated over the mesh)
 
 
 def _client_probe(cfg: ContinuityConfig, seg_keys, seg_vals, indicator,
@@ -180,18 +184,32 @@ def make_lookup(cfg: StoreConfig, mesh):
 
         # client side: local probe of the fetched segment
         B = keys.shape[0]
-        rk = out[:, :SL * KEY_LANES].reshape(B, SL, KEY_LANES)
-        rv = out[:, SL * KEY_LANES:SL * (KEY_LANES + VAL_LANES)] \
+        rkeys = out[:, :SL * KEY_LANES].reshape(B, SL, KEY_LANES)
+        rvals = out[:, SL * KEY_LANES:SL * (KEY_LANES + VAL_LANES)] \
             .reshape(B, SL, VAL_LANES)
         rind = out[:, -1]
-        found, vals = _client_probe(cfg.table, rk, rv, rind, parity, keys, ok)
-        seg_bytes = jnp.sum(ok) * (SL * (KEY_LANES + VAL_LANES) * 4 + 8)
-        return DLookupResult(found, vals, ok, seg_bytes)
+        found, vals = _client_probe(cfg.table, rkeys, rvals, rind, parity,
+                                    keys, ok)
+        # wire accounting via the verb plan (one whole-row READ per routed
+        # key, addressed by GLOBAL pair), same helper as the local stores;
+        # unrouted/masked rows count neither reads nor ops (the CostLedger
+        # contract), and psum makes the ledger genuinely replicated (its
+        # out-spec is P())
+        row_bytes = INDICATOR_BYTES + SL * SLOT_BYTES
+        plan = rv.pack(B, [(jnp.where(ok, rv.READ, rv.NOOP), rv.REGION_TABLE,
+                            pair * row_bytes, row_bytes, 0, False)])
+        ledger = rv.ledger_from_plan(plan)._replace(
+            ops=jnp.sum(ok.astype(jnp.int32)))
+        ledger = jax.tree.map(
+            lambda x: jax.lax.psum(x, cfg.axis_names), ledger)
+        return DLookupResult(found, vals, ok, ledger)
 
     ax = P(cfg.axis_names)
     sm = shard_map(impl, mesh=mesh,
                    in_specs=(table_pspec(cfg.axis_names), ax, ax),
-                   out_specs=DLookupResult(ax, ax, ax, P()),
+                   out_specs=DLookupResult(
+                       ax, ax, ax,
+                       pmem.CostLedger(P(), P(), P(), P())),
                    check_rep=False)
     jitted = jax.jit(sm)
 

@@ -146,11 +146,30 @@ def lookup(cfg: LevelConfig, t: LevelTable, keys) -> LookupResult:
     return LookupResult(found, values, where, reads)
 
 
-def read_counters(cfg: LevelConfig, res: LookupResult) -> pmem.CostLedger:
-    return pmem.CostLedger.zero().add(
-        rdma_reads=jnp.sum(res.reads),
-        bytes_fetched=jnp.sum(res.reads) * cfg.bucket_bytes,
-        ops=res.reads.shape[0])
+def lookup_plan(cfg: LevelConfig, t: LevelTable, keys, res: LookupResult):
+    """Verb plan of a lookup batch (paper §II-C2): up to FOUR scattered
+    one-sided bucket READs per key — the candidates are non-contiguous, so
+    each distinct bucket is its own verb, probed sequentially (depth =
+    probe rank: the client stops at the bucket that holds the key, so a
+    negative search walks all four rounds).  This is the access
+    amplification continuity's contiguous layout removes."""
+    from repro.rdma import verbs as rv
+    keys = jnp.asarray(keys, U32).reshape(-1, KEY_LANES)
+    cand = _cand_buckets(cfg, keys)                        # (B, 4)
+    distinct = jnp.stack([
+        jnp.ones(keys.shape[0], jnp.bool_),
+        cand[:, 1] != cand[:, 0],
+        jnp.ones(keys.shape[0], jnp.bool_),
+        cand[:, 3] != cand[:, 2]], -1)
+    upto = jnp.where(res.found, res.where[:, 0], 3)
+    act = distinct & (jnp.arange(4)[None, :] <= upto[:, None])
+    rank = jnp.cumsum(act.astype(I32), axis=1) - act.astype(I32)
+    off = jnp.where(jnp.arange(4)[None, :] < 2, cand,
+                    cfg.num_top + cand) * cfg.bucket_bytes
+    return rv.pack(keys.shape[0], [
+        (jnp.where(act[:, j], rv.READ, rv.NOOP), rv.REGION_TABLE,
+         off[:, j], cfg.bucket_bytes, rank[:, j], False)
+        for j in range(4)])
 
 
 # -- server-side ops (scan-serialized like the other schemes) ----------------

@@ -157,13 +157,26 @@ def lookup(cfg: PFarmConfig, t: PFarmTable, keys) -> LookupResult:
     return LookupResult(found, vals_out, where, 1 + hops)
 
 
-def read_counters(cfg: PFarmConfig, res: LookupResult) -> pmem.CostLedger:
-    n = res.reads.shape[0]
-    return pmem.CostLedger.zero().add(
-        rdma_reads=jnp.sum(res.reads),
-        bytes_fetched=n * cfg.window_bytes
-        + jnp.sum(res.reads - 1) * cfg.block_bytes,
-        ops=n)
+def lookup_plan(cfg: PFarmConfig, t: PFarmTable, keys, res: LookupResult):
+    """Verb plan of a lookup batch: one hopscotch-window READ (the whole
+    contiguous H-bucket neighbourhood) plus CHAINED dependent block READs —
+    each overflow hop needs the previous block's next-pointer, so hop k is
+    a depth-k verb: an extra full round trip per hop, the chain-walk cost
+    the paper charges P-FaRM-KV."""
+    from repro.rdma import verbs as rv
+    keys = jnp.asarray(keys, U32).reshape(-1, KEY_LANES)
+    home = _home(cfg, keys)
+    bucket_stride = cfg.bucket_slots * SLOT_BYTES + 8      # slots + token
+    lanes = [(rv.READ, rv.REGION_TABLE, home * bucket_stride,
+              cfg.window_bytes, 0, False)]
+    cur = t.head[home]
+    for k in range(1, cfg.max_chain + 1):
+        blk = jnp.maximum(cur, 0)
+        act = k < res.reads
+        lanes.append((jnp.where(act, rv.READ, rv.NOOP), rv.REGION_EXT,
+                      blk * cfg.block_bytes, cfg.block_bytes, k, False))
+        cur = t.onext[blk]
+    return rv.pack(keys.shape[0], lanes)
 
 
 # -- server-side ops ---------------------------------------------------------

@@ -1,0 +1,34 @@
+"""`repro.rdma` — the one-sided transport layer (DESIGN.md §8).
+
+Three pieces:
+
+  * `verbs`     — `VerbPlan` (the (B, M) verb grid a scheme's lookup
+    emits: READ/WRITE/CAS over symbolic region descriptors, with
+    dependency depths and remote-persist fences) and the shared
+    `ledger_from_plan` accounting helper that replaced the four
+    per-scheme hand-tallied ``read_counters`` blocks;
+  * `transport` — `RemoteMemory` (doorbell batching: one round trip per
+    dependency depth) + `LinkModel` (every calibrated latency constant
+    in one place);
+  * `sim`       — the end-to-end YCSB client/server simulation producing
+    per-scheme throughput and p50/p99 latency
+    (``benchmarks/run.py --sections end_to_end``).
+
+Schemes emit plans from inside jit (`OpResult.plan` is a pure pytree);
+the transport executes host-side.  `api.ExecPolicy(transport="sim")`
+selects the endpoint (`RemoteMemory.from_policy`).
+"""
+
+from repro.rdma.transport import Completion, LinkModel, RemoteMemory
+from repro.rdma.verbs import (CAS, NOOP, READ, REGION_EXT, REGION_LOG,
+                              REGION_TABLE, WRITE, VerbPlan, flatten,
+                              ledger_from_plan, pack, reads_per_op,
+                              round_trips)
+
+__all__ = [
+    "Completion", "LinkModel", "RemoteMemory",
+    "NOOP", "READ", "WRITE", "CAS",
+    "REGION_TABLE", "REGION_EXT", "REGION_LOG",
+    "VerbPlan", "flatten", "ledger_from_plan", "pack", "reads_per_op",
+    "round_trips",
+]

@@ -1,0 +1,153 @@
+"""End-to-end YCSB client/server simulation over the RDMA transport.
+
+The paper's headline numbers (1.45x–2.43x throughput, ~1.7x latency) are
+end-to-end: a client runs a YCSB mix against a remote PM server, and the
+scheme decides what every op puts on the wire.  This module closes that
+loop: the scheme executes (jitted, exact), its `OpResult.plan` is posted
+through one `RemoteMemory` endpoint with doorbell batching, and the
+analytical `LinkModel` prices the batch — yielding per-scheme throughput
+and p50/p99 latency whose RELATIVE ordering is the reproducible claim
+(continuity > level > pfarm on read-heavy mixes; absolutes depend on the
+calibration constants, all in `LinkModel`).
+
+Reads are priced from the scheme's exact verb plan.  Writes are priced
+from a plan SYNTHESIZED from the scheme's own `CostLedger`: one ordered
+remote WRITE (+ remote-persist fence, Kashyap et al.) per PM write the op
+charges — payload stores as slot-sized WRITEs, the final 8-byte commit
+word last.  That reproduces the write-side round-trip asymmetry exactly
+where the paper locates it (continuity 2 fenced writes vs P-FaRM-KV's 5
+RECIPE-logged writes).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.core.continuity import SLOT_BYTES
+from repro.data import ycsb
+from repro.rdma import verbs as rv
+from repro.rdma.transport import LinkModel, RemoteMemory
+
+COMMIT_BYTES = 8        # the 8-byte atomic indicator/token commit word
+
+# read-heavy YCSB mixes the simulation drives (paper §V-A)
+SIM_WORKLOADS = ("A", "B", "C")
+
+
+def write_plan(B: int, pm_per_op: int, extra_ops: int = 0,
+               payload_bytes: int = SLOT_BYTES) -> rv.VerbPlan:
+    """Synthesize the remote-write verb plan for B ops: each op issues its
+    PM-write count as ordered slot-sized WRITEs ending in the 8-byte
+    commit WRITE, every store followed by a remote-persist fence (each
+    fenced store is a dependent round — DESIGN.md §8's ordering rule for
+    correct remote persistence).
+
+    The last ``extra_ops`` rows charge ``pm_per_op + 1`` writes (the
+    scheme's fallback/logged path), the rest ``pm_per_op`` — so a batch
+    whose ledger mixes paths keeps its EXACT PM-write total and a
+    distinct latency tail, instead of a rounded uniform mean."""
+    import jax.numpy as jnp
+    pm = max(1, int(pm_per_op))
+    extra_ops = min(max(0, int(extra_ops)), B)
+    counts = jnp.where(jnp.arange(B) >= B - extra_ops, pm + 1, pm)
+    lanes = []
+    for d in range(pm + (1 if extra_ops else 0)):
+        active = d < counts
+        lanes.append((jnp.where(active, rv.WRITE, rv.NOOP), rv.REGION_TABLE,
+                      0, jnp.where(d == counts - 1, COMMIT_BYTES,
+                                   payload_bytes), d, True))
+    return rv.pack(B, lanes)
+
+
+def _mix_counts(workload: str, batch: int):
+    mix = dict(ycsb.WORKLOADS[workload])
+    n_read = int(batch * (mix.get(ycsb.OP_READ, 0)
+                          + mix.get(ycsb.OP_RMW, 0)))
+    n_upd = int(batch * (mix.get(ycsb.OP_UPDATE, 0)
+                         + mix.get(ycsb.OP_RMW, 0)))
+    return n_read, n_upd
+
+
+def run_ycsb(scheme: str, workload: str, *, num_records: int = 3000,
+             num_ops: int = 4000, batch: int = 500,
+             load_factor: float = 0.7, link: Optional[LinkModel] = None,
+             seed: int = 0) -> Dict[str, float]:
+    """One scheme x workload cell: load ``num_records``, run ``num_ops`` of
+    the mix in doorbell-batched rounds, return simulated throughput and
+    latency percentiles.  Deterministic given the seed (the transport
+    model has no noise terms), so CI can band the relative ordering.
+    """
+    from repro import api
+    assert workload in SIM_WORKLOADS, workload
+    slots = int(np.ceil(num_records / load_factor))
+    store = api.make_store(scheme, table_slots=slots,
+                           policy=api.ExecPolicy(transport="sim"))
+    mem = RemoteMemory.from_policy(store.policy, link)
+    assert mem is not None
+
+    rng = np.random.RandomState(seed)
+    K = ycsb.make_key(np.arange(num_records))
+    V = ycsb.make_value(rng, num_records)
+    table, res = store.insert(store.create(), K, V)
+    loaded = np.flatnonzero(np.asarray(res.ok))     # read only resident keys
+    zipf = ycsb.Zipf(len(loaded))
+    # YCSB scrambles zipfian ranks over the keyspace: popularity must be
+    # independent of insertion order (rank==id would make the hottest keys
+    # the FIRST inserted, i.e. the best-placed, flattering the multi-probe
+    # baselines with an empty-table placement no aged store has)
+    scramble = rng.permutation(len(loaded))
+
+    n_read, n_upd = _mix_counts(workload, batch)
+    read_lat, write_lat = [], []
+    ops_done = 0
+    while ops_done < num_ops:
+        if n_read:
+            ids = loaded[scramble[zipf.sample(rng, n_read)]]
+            hits = store.lookup(table, ycsb.make_key(ids))
+            comp = mem.post(hits.plan)
+            read_lat.append(comp.op_us)
+        if n_upd:
+            ids = loaded[scramble[zipf.sample(rng, n_upd)]]
+            table, ures = store.update(table, ycsb.make_key(ids),
+                                       ycsb.make_value(rng, n_upd))
+            # exact-total write pricing: floor(total/ops) writes per op,
+            # with the remainder ops charging one more (the scheme's
+            # logged/fallback-path tail) — Σ per-op counts == the ledger
+            n_ok = int(np.asarray(ures.ok).sum())
+            total_pm = int(ures.ledger.pm_writes)
+            if n_ok and total_pm:
+                lo = max(1, total_pm // n_ok)
+                comp = mem.post(write_plan(n_ok, lo,
+                                           extra_ops=total_pm - lo * n_ok))
+                write_lat.append(comp.op_us)
+        ops_done += n_read + n_upd
+    jax.block_until_ready(table)
+
+    lat = np.concatenate(read_lat + write_lat)
+    out = {
+        "ops_per_s": ops_done / mem.total_us * 1e6,
+        "p50_us": float(np.percentile(lat, 50)),
+        "p99_us": float(np.percentile(lat, 99)),
+        "doorbells": float(mem.doorbells),
+        "verbs_per_op": mem.total_verbs / ops_done,
+        "bytes_per_op": mem.total_bytes / ops_done,
+    }
+    if read_lat:
+        out["read_p50_us"] = float(np.percentile(np.concatenate(read_lat), 50))
+    if write_lat:
+        out["write_p50_us"] = float(
+            np.percentile(np.concatenate(write_lat), 50))
+    return out
+
+
+def run_all(schemes=None, workloads=SIM_WORKLOADS, **kw) -> Dict[str, dict]:
+    """{scheme: {workload: cell}} over the registered schemes."""
+    from repro import api
+    out: Dict[str, dict] = {}
+    for s in (schemes or api.available_schemes()):
+        for wl in workloads:
+            out.setdefault(s, {})[wl] = run_ycsb(s, wl, **kw)
+    return out

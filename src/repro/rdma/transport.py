@@ -1,0 +1,149 @@
+"""`RemoteMemory`: the simulated one-sided transport endpoint.
+
+Executes `VerbPlan`s with doorbell batching against an analytical latency
+model and accumulates wire counters — the substrate the YCSB end-to-end
+simulation, the serving scheduler's per-step flush, and the benchmarks
+drive.  There is no real NIC here: correctness results come from the
+schemes' own jitted lookups; the transport prices WHAT the scheme put on
+the wire (the verb plan), which is exactly the quantity the paper's
+throughput/latency comparison is about.
+
+Doorbell batching: all verbs of one ``post()`` that share a dependency
+depth coalesce into ONE doorbell ring = one round trip; depth k+1 issues
+only after depth k completes (chained reads, ordered persist sequences).
+A batch of B independent lookups therefore costs ONE RTT regardless of B —
+per-op cost is dominated by per-verb NIC processing and payload movement,
+which is what separates the schemes.
+
+`LinkModel` holds every calibrated constant in one place (DESIGN.md §8
+documents the calibration): RTT, NIC line rate, PM media bandwidth
+(asymmetric read/write — Optane), per-WQE processing, and the
+remote-persist fence cost (the read-after-WRITE flush of Kashyap et al.,
+"Correct, Fast Remote Persistence").
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import numpy as np
+
+from repro.rdma import verbs as rv
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkModel:
+    """Analytical RDMA + PM cost constants (microseconds / bytes-per-us).
+
+    Defaults are calibrated to the paper's testbed class (ConnectX-class
+    RNIC + Optane DCPMM): ~2 us one-sided RTT, 12 GB/s NIC line rate,
+    asymmetric PM media bandwidth, sub-us WQE processing, and a
+    remote-persist fence priced as a small dependent flush."""
+
+    rtt_us: float = 2.0              # doorbell ring -> completion, one round
+    nic_bytes_per_us: float = 12_000.0   # NIC line rate (12 GB/s)
+    pm_read_bytes_per_us: float = 2_500.0    # PM media random read (2.5 GB/s
+    #                                          — DCPMM 256 B access granule)
+    pm_write_bytes_per_us: float = 2_000.0   # PM media write (2 GB/s)
+    verb_us: float = 0.4             # per-WQE NIC/doorbell processing
+    fence_us: float = 0.5            # remote-persist flush (RAW read)
+
+    def verb_cost_us(self, verb: np.ndarray, nbytes: np.ndarray,
+                     fence: np.ndarray) -> np.ndarray:
+        """Element-wise service cost of each verb (RTT excluded — that is
+        per round, not per verb)."""
+        nbytes = nbytes.astype(np.float64)
+        is_read = verb == rv.READ
+        is_write = (verb == rv.WRITE) | (verb == rv.CAS)
+        active = verb != rv.NOOP
+        media = np.where(is_read, nbytes / self.pm_read_bytes_per_us,
+                         np.where(is_write,
+                                  nbytes / self.pm_write_bytes_per_us, 0.0))
+        wire = np.where(active, nbytes / self.nic_bytes_per_us, 0.0)
+        return (active * self.verb_us + wire + media
+                + (fence & is_write) * self.fence_us)
+
+
+class Completion(NamedTuple):
+    """Result of one ``post()`` (one client batch through the transport).
+
+    ``batch_us``   simulated wall time of the whole doorbell-batched post;
+    ``op_us``      (B,) unloaded per-op latency (the op alone on the wire:
+                   one RTT per dependent round plus its own verb costs —
+                   the paper's latency-figure quantity);
+    ``rounds``     dependent round trips (doorbells rung);
+    ``verbs``      active verbs posted;
+    ``bytes``      wire payload moved.
+    """
+
+    batch_us: float
+    op_us: np.ndarray
+    rounds: int
+    verbs: int
+    bytes: int
+
+
+class RemoteMemory:
+    """One simulated RNIC endpoint + remote PM region set.
+
+    Host-side and stateful (aggregate counters) — drive it OUTSIDE jit with
+    the plans jitted code returns (`OpResult.plan` is a pure pytree).
+    """
+
+    def __init__(self, link: Optional[LinkModel] = None):
+        self.link = link or LinkModel()
+        self.total_us = 0.0
+        self.doorbells = 0
+        self.posts = 0
+        self.total_verbs = 0
+        self.total_bytes = 0
+
+    @classmethod
+    def from_policy(cls, policy,
+                    link: Optional[LinkModel] = None) -> Optional["RemoteMemory"]:
+        """Transport selection threaded through `api.ExecPolicy`: returns an
+        endpoint for ``transport="sim"``, None for ``transport="none"``."""
+        if getattr(policy, "transport", "none") == "none":
+            return None
+        return cls(link)
+
+    def post(self, plan: rv.VerbPlan) -> Completion:
+        """Execute one doorbell-batched verb plan; returns its `Completion`
+        and folds it into the endpoint's aggregate counters."""
+        verb = np.asarray(plan.verb)
+        nbytes = np.asarray(plan.nbytes)
+        depth = np.asarray(plan.depth)
+        fence = np.asarray(plan.fence)
+        active = verb != rv.NOOP
+        cost = self.link.verb_cost_us(verb, nbytes, fence)    # (B, M)
+
+        rounds = int((depth + 1)[active].max()) if active.any() else 0
+        batch_us = 0.0
+        for d in range(rounds):
+            sel = active & (depth == d)
+            if sel.any():
+                batch_us += self.link.rtt_us + float(cost[sel].sum())
+
+        # unloaded per-op latency: each op pays one RTT per round it
+        # participates in, plus its own verb service costs
+        op_rounds = np.where(active, depth + 1, 0).max(axis=1)
+        op_us = op_rounds * self.link.rtt_us + (cost * active).sum(axis=1)
+
+        nverbs = int(active.sum())
+        nb = int(nbytes[active].sum())
+        self.total_us += batch_us
+        self.doorbells += rounds
+        self.posts += 1
+        self.total_verbs += nverbs
+        self.total_bytes += nb
+        return Completion(batch_us, op_us, rounds, nverbs, nb)
+
+    def stats(self) -> dict:
+        return {
+            "posts": self.posts,
+            "doorbells": self.doorbells,
+            "verbs": self.total_verbs,
+            "bytes": self.total_bytes,
+            "simulated_us": self.total_us,
+        }

@@ -1,0 +1,119 @@
+"""One-sided verb plans: the typed unit of remote access every scheme emits.
+
+The paper's comparative claims are about WHAT a lookup puts on the wire —
+continuity: ONE contiguous segment READ; level hashing: up to four
+scattered bucket READs; P-FaRM-KV: a window READ plus chained dependent
+block READs; a dense table: one degenerate whole-region READ.  A
+`VerbPlan` makes that explicit and machine-checkable: a batch of B ops
+compiles to a (B, M) lane grid of verbs (lane m of row b = the m-th verb
+op b would post to its QP), and everything downstream — the `CostLedger`
+the benchmarks and Table-I-style gates read, the doorbell batching the
+transport applies, the analytical latency model — is DERIVED from the
+plan instead of hand-tallied per scheme.
+
+Address model: a verb targets ``(region, offset, nbytes)`` where region is
+a symbolic remote MR id (`REGION_TABLE` = the scheme's main table rows /
+buckets / windows, `REGION_EXT` = its extension / overflow pool,
+`REGION_LOG` = the PM log area the logging schemes write).  Offsets are
+byte offsets within the region, derived from the scheme's own geometry —
+the plan is exactly the scatter/gather list an RDMA client would build.
+
+Dependency model: ``depth`` is the round-trip the verb can issue in.  All
+depth-0 verbs of a batch coalesce into ONE doorbell (the transport's
+doorbell batching); a verb at depth k depends on a depth-(k-1) completion
+(continuity's rare extension probe, pfarm's chain walk, an ordered
+remote-persist WRITE sequence) and costs an extra round trip.  ``fence``
+marks WRITE verbs that must be remotely PERSISTED (not merely NIC-visible)
+before the next depth may issue — see `repro.consistency`'s
+remote-persistence injector and DESIGN.md §8.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Sequence, Tuple
+
+import jax.numpy as jnp
+
+from repro.core.pmem import CostLedger
+
+I32 = jnp.int32
+
+# verb opcodes
+NOOP, READ, WRITE, CAS = 0, 1, 2, 3
+VERB_NAMES = {NOOP: "noop", READ: "read", WRITE: "write", CAS: "cas"}
+
+# symbolic remote memory regions
+REGION_TABLE, REGION_EXT, REGION_LOG = 0, 1, 2
+REGION_NAMES = {REGION_TABLE: "table", REGION_EXT: "ext", REGION_LOG: "log"}
+
+
+class VerbPlan(NamedTuple):
+    """Batched verb grid: every field is (B, M) — B ops, M verb lanes.
+
+    Inactive lanes carry ``verb == NOOP`` and are ignored by every
+    consumer; a row's active lanes, ordered by ``depth``, are the one-sided
+    operations that op posts.
+    """
+
+    verb: jnp.ndarray    # (B, M) int32 — NOOP/READ/WRITE/CAS
+    region: jnp.ndarray  # (B, M) int32 — symbolic MR id
+    offset: jnp.ndarray  # (B, M) int32 — byte offset within the region
+    nbytes: jnp.ndarray  # (B, M) int32 — wire payload of the verb
+    depth: jnp.ndarray   # (B, M) int32 — round-trip dependency depth
+    fence: jnp.ndarray   # (B, M) bool  — remote-persist fence after (writes)
+
+    @property
+    def batch(self) -> int:
+        return self.verb.shape[0]
+
+    @property
+    def lanes(self) -> int:
+        return self.verb.shape[1]
+
+
+Lane = Tuple  # (verb, region, offset, nbytes, depth, fence) — (B,)-broadcastable
+
+
+def pack(B: int, lane_list: Sequence[Lane]) -> VerbPlan:
+    """Stack per-lane column tuples into a (B, M) `VerbPlan`.
+
+    Each lane is ``(verb, region, offset, nbytes, depth, fence)`` with
+    every element either a scalar or a (B,) array.
+    """
+    cols = []
+    for i, dtype in enumerate((I32, I32, I32, I32, I32, jnp.bool_)):
+        cols.append(jnp.stack(
+            [jnp.broadcast_to(jnp.asarray(lane[i], dtype), (B,))
+             for lane in lane_list], axis=1))
+    return VerbPlan(*cols)
+
+
+def flatten(plan: VerbPlan) -> VerbPlan:
+    """Collapse leading batch dims (e.g. a vmapped (S, B, M) plan) to (B', M)."""
+    return VerbPlan(*(leaf.reshape(-1, leaf.shape[-1]) for leaf in plan))
+
+
+def ledger_from_plan(plan: VerbPlan) -> CostLedger:
+    """The shared lookup-accounting helper: one `CostLedger` derived from a
+    read plan, replacing the per-scheme hand-tallied ``read_counters``
+    blocks.  One READ verb == one one-sided contiguous fetch; bytes are the
+    summed wire payloads; ops is the batch size (masked-off rows are
+    all-NOOP and count no reads, matching the old per-scheme accounting)."""
+    is_read = plan.verb == READ
+    return CostLedger.zero().add(
+        rdma_reads=jnp.sum(is_read.astype(I32)),
+        bytes_fetched=jnp.sum(jnp.where(is_read, plan.nbytes, 0)),
+        ops=plan.batch)
+
+
+def reads_per_op(plan: VerbPlan) -> jnp.ndarray:
+    """(B,) one-sided READ count per op — the access-amplification trace,
+    read off the plan instead of a scheme-internal counter."""
+    return jnp.sum((plan.verb == READ).astype(I32), axis=1)
+
+
+def round_trips(plan: VerbPlan) -> jnp.ndarray:
+    """() dependent round trips the batch needs under doorbell batching:
+    1 + the maximum depth of any active verb (0 for an empty plan)."""
+    active = plan.verb != NOOP
+    return jnp.max(jnp.where(active, plan.depth + 1, 0))

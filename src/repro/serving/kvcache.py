@@ -169,19 +169,48 @@ def page_values(phys: jnp.ndarray) -> jnp.ndarray:
 
 # -- the paper's ops on the decode path --------------------------------------
 
-def lookup_pages(g: PageGeometry, table, seq_ids: jnp.ndarray) -> jnp.ndarray:
-    """Translate every (sequence, logical page) via a store lookup — the
-    paper's client read (for continuity: one contiguous segment fetch per
-    translation). Returns (DS, Bl, MAXP) physical ids, -1 where unmapped."""
+def _translation_keys(g: PageGeometry, seq_ids: jnp.ndarray) -> jnp.ndarray:
+    """(DS, Bl*MAXP, 4) page-table keys for every (sequence, logical page)
+    candidate translation of one decode step."""
     DS, Bl = seq_ids.shape
     pages = jnp.broadcast_to(jnp.arange(g.max_pages, dtype=U32),
                              (Bl, g.max_pages))
     keys = jax.vmap(lambda s: page_keys(
         jnp.repeat(s, g.max_pages).reshape(Bl, g.max_pages), pages))(seq_ids)
-    flat = keys.reshape(DS, Bl * g.max_pages, 4)
-    res = jax.vmap(g.store.lookup)(table, flat)
+    return keys.reshape(DS, Bl * g.max_pages, 4)
+
+
+def lookup_pages(g: PageGeometry, table, seq_ids: jnp.ndarray) -> jnp.ndarray:
+    """Translate every (sequence, logical page) via a store lookup — the
+    paper's client read (for continuity: one contiguous segment fetch per
+    translation). Returns (DS, Bl, MAXP) physical ids, -1 where unmapped."""
+    DS, Bl = seq_ids.shape
+    res = jax.vmap(g.store.lookup)(table, _translation_keys(g, seq_ids))
     phys = jnp.where(res.ok, res.values[..., 0].astype(I32), -1)
     return phys.reshape(DS, Bl, g.max_pages)
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def _step_read_plan(g: PageGeometry, table, seq_ids):
+    from repro.rdma import verbs as rv
+    res = jax.vmap(g.store.lookup)(table, _translation_keys(g, seq_ids))
+    return rv.flatten(res.plan)
+
+
+def step_read_plan(g: PageGeometry, cache: PagedCache):
+    """One decode step's page-translation verb plan, all shards flattened:
+    one one-sided READ per (sequence, logical page) candidate translation —
+    the same keys `lookup_pages` resolves inside the jitted step.  This is
+    the accounting twin the serving scheduler posts to its transport with
+    ONE doorbell per step (the flush boundary): the whole step's
+    translations coalesce into a single round trip for continuity, and the
+    per-scheme amplification shows up as extra verbs/rounds.  The
+    post-step cache is the right input: its table is exactly the
+    post-``advance`` table the step's reads resolved against
+    (``commit_token`` only bumps ``seq_lens``).  Jitted per geometry;
+    still one extra (plan-only) lookup per step, so it is opt-in via the
+    transport, not part of the decode dependency chain."""
+    return _step_read_plan(g, cache.table, cache.seq_ids)
 
 
 def _plan_page_allocation(g: PageGeometry, cache: PagedCache,

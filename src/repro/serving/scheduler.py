@@ -39,7 +39,7 @@ class Request:
 
 class ContinuousBatcher:
     def __init__(self, cfg: ModelConfig, geom: KC.PageGeometry, params,
-                 pad_id: int = 0):
+                 pad_id: int = 0, transport=None):
         self.cfg = cfg
         self.geom = geom
         self.params = params
@@ -52,6 +52,15 @@ class ContinuousBatcher:
         self._step = jax.jit(
             lambda p, t, c: E.serve_step(cfg, geom, p, t, c))
         self._logits = None
+        # one-sided transport the page-table traffic is accounted against
+        # (None, or a repro.rdma.RemoteMemory — see RemoteMemory.from_policy
+        # with the store's ExecPolicy).  The scheduler step is the doorbell
+        # FLUSH BOUNDARY: every page translation of one decode step posts
+        # as one doorbell-batched round.
+        if transport is None:
+            from repro.rdma import RemoteMemory
+            transport = RemoteMemory.from_policy(geom.store.policy)
+        self.transport = transport
 
     # -- request API ---------------------------------------------------------
 
@@ -102,6 +111,9 @@ class ContinuousBatcher:
         logits, self.cache = self._step(self.params, jnp.asarray(toks),
                                         self.cache)
         self._logits = np.asarray(logits)
+        if self.transport is not None:
+            # flush boundary: the step's page translations, ONE doorbell
+            self.transport.post(KC.step_read_plan(self.geom, self.cache))
         live = 0
         for b, req in enumerate(self.slots):
             if req is None:

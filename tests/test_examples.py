@@ -1,0 +1,44 @@
+"""Examples smoke: every example at least compiles, and the two cheap ones
+actually RUN end-to-end (so examples can't silently rot against API
+changes — exactly what happened to ycsb_cluster before the transport
+refactor)."""
+
+import os
+import pathlib
+import py_compile
+import subprocess
+import sys
+
+import pytest
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+EXAMPLES = sorted((ROOT / "examples").glob("*.py"))
+
+
+@pytest.mark.parametrize("path", EXAMPLES, ids=lambda p: p.name)
+def test_example_compiles(path):
+    py_compile.compile(str(path), doraise=True)
+
+
+def _run(script, *args, timeout):
+    env = dict(os.environ, PYTHONPATH=f"{ROOT}/src")
+    env.pop("XLA_FLAGS", None)     # ycsb_cluster sets its own device count
+    return subprocess.run(
+        [sys.executable, str(ROOT / "examples" / script), *args],
+        capture_output=True, text=True, timeout=timeout, env=env)
+
+
+def test_quickstart_runs():
+    proc = _run("quickstart.py", timeout=300)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "Table I" in proc.stdout
+
+
+@pytest.mark.slow
+def test_ycsb_cluster_smoke_runs():
+    # 8 simulated host devices + the RDMA transport comparison; the script
+    # asserts routing consistency and the read-heavy ordering itself
+    proc = _run("ycsb_cluster.py", "--smoke", timeout=540)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "consistency check passed" in proc.stdout
+    assert "ordering check passed" in proc.stdout
