@@ -1,0 +1,54 @@
+"""Cluster benchmark section: N-node YCSB with elastic membership.
+
+Each cell is one `repro.cluster.sim.run_cluster` drill — an N-node
+replicated cluster under a skewed YCSB mix with a mid-run node JOIN
+(live migration, dual-read window) and a mid-run primary KILL
+(heartbeat detection -> replica promotion) — plus the two trace-level
+drills (fenced replicated durability with its unfenced negative
+control, and the migration crash sweep).  The payload lands in the
+BENCH json under ``cluster`` and `validate_bench.py` gates the ISSUE's
+acceptance criteria on it: zero committed-op loss, rebalance within
+1/N + 5%, failover detected, fenced lossless + unfenced caught.
+"""
+
+from __future__ import annotations
+
+from repro.cluster import sim as csim
+
+SMOKE_SCHEMES = ("continuity",)
+FULL_SCHEMES = ("continuity", "level", "pfarm")
+WORKLOADS = ("A",)          # the update-heavy mix exercises replication most
+
+
+def run(rows, scale: str = "full") -> dict:
+    schemes = SMOKE_SCHEMES if scale == "smoke" else FULL_SCHEMES
+    kw = (dict(num_records=600, num_ops=1200, batch=240) if scale == "smoke"
+          else dict(num_records=1500, num_ops=3000, batch=300))
+    cells = {}
+    for s in schemes:
+        for wl in WORKLOADS:
+            events = (("join", kw["num_ops"] // 3, "pmJ"),
+                      ("kill", 2 * kw["num_ops"] // 3, "primary"))
+            cell = csim.run_cluster(s, wl, nodes=4, replicas=2,
+                                    events=events, **kw)
+            cells.setdefault(s, {})[wl] = {
+                k: cell[k] for k in
+                ("ops_per_s", "p50_us", "p99_us", "committed",
+                 "committed_lost", "rebalance_within_bound",
+                 "failover_detected", "nodes_initial", "nodes_final")}
+            rows.append((f"cluster_{wl}[{s}]", cell["p50_us"],
+                         f"{cell['ops_per_s']:.0f} ops/s "
+                         f"p99={cell['p99_us']:.2f}us "
+                         f"lost={cell['committed_lost']}"))
+    payload = {
+        "cells": cells,
+        "durability": csim.durability_drill(schemes[0]),
+        "migration": csim.migration_drill(schemes[0]),
+    }
+    d = payload["durability"]
+    rows.append(("cluster_durability_fenced_lost", 0.0,
+                 f"{d['fenced']['lost_committed']} over "
+                 f"{d['fenced']['cuts']} cuts"))
+    rows.append(("cluster_durability_unfenced_lost", 0.0,
+                 f"{d['unfenced']['lost_committed']} (negative control)"))
+    return payload

@@ -186,8 +186,13 @@ def bench_update_micro(rows, num_records=2000):
 
 
 def bench_load_factor(rows):
-    """Fig 18: load factor at each resize trigger; 3 extension policies."""
+    """Fig 18: load factor at each resize trigger; 3 extension policies.
+
+    Returns the ``load_factor`` payload for the BENCH json ({policy
+    label: [lf at each resize trigger]}), which ``validate_bench.py``
+    bands against the paper's ~70% continuity load-factor claim."""
     rng = np.random.RandomState(6)
+    payload = {}
     for frac, label in ((0.0, "none"), (1 / 20, "1/20"), (1 / 10, "1/10")):
         store = api.make_store("continuity", table_slots=200, ext_frac=frac)
         table = store.create()
@@ -204,8 +209,10 @@ def bench_load_factor(rows):
                     break
             lfs.append(float(store.load_factor(table)))
             store, table = store.resize(table)
+        payload[label] = lfs
         rows.append((f"load_factor[{label}]", 0.0,
                      " ".join(f"{x:.2f}" for x in lfs)))
+    return payload
 
 
 def bench_write_batch_sweep(rows, batches=(64, 512, 4096), iters=3):

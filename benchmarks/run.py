@@ -13,7 +13,13 @@ Prints ``name,us_per_call,derived`` CSV. Sections:
                     doorbell batching, analytical LinkModel) — the paper's
                     headline 1.45–2.43x ordering; --e2e-scale smoke shrinks
                     it for CI
-  * load_factor   — load factor at each resize (Fig 18)
+  * load_factor   — load factor at each resize (Fig 18; emitted to the
+                    BENCH json and banded against the paper's ~70% claim
+                    by validate_bench.py)
+  * cluster       — N-node replicated cluster YCSB with a mid-run join
+                    (live migration) and primary kill (failover), plus
+                    the replicated-durability and migration crash drills
+                    (repro.cluster; --e2e-scale smoke shrinks it for CI)
   * crash_consistency — recovery work per scheme from the crash/scheme
                     matrix (repro.consistency; EXPERIMENTS.md §Crash)
   * bench_serving — technique-on-the-hot-path serving numbers
@@ -35,8 +41,8 @@ import json
 
 HASH_SECTIONS = ("pm_writes", "access_amp", "search", "update_micro",
                  "ycsb", "end_to_end", "load_factor")
-SECTIONS = HASH_SECTIONS + ("crash_consistency", "hash", "serving",
-                            "roofline")
+SECTIONS = HASH_SECTIONS + ("cluster", "crash_consistency", "hash",
+                            "serving", "roofline")
 
 
 def main(argv=None) -> None:
@@ -63,14 +69,17 @@ def main(argv=None) -> None:
     batches = tuple(int(b) for b in args.sweep_batches.split(",") if b)
 
     rows = []
-    table1 = crash = e2e = None
-    from benchmarks import bench_crash, bench_hash, bench_serving, roofline
+    table1 = crash = e2e = lf = cluster = None
+    from benchmarks import (bench_cluster, bench_crash, bench_hash,
+                            bench_serving, roofline)
     if "pm_writes" in sections:
         table1 = bench_hash.bench_pm_writes(rows)
     if "crash_consistency" in sections:
         crash = bench_crash.run(rows)
     if "end_to_end" in sections:
         e2e = bench_hash.bench_end_to_end(rows, scale=args.e2e_scale)
+    if "cluster" in sections:
+        cluster = bench_cluster.run(rows, scale=args.e2e_scale)
     if "access_amp" in sections:
         bench_hash.bench_access_amp(rows)
     if "search" in sections:
@@ -80,7 +89,7 @@ def main(argv=None) -> None:
     if "ycsb" in sections:
         bench_hash.bench_ycsb(rows)
     if "load_factor" in sections:
-        bench_hash.bench_load_factor(rows)
+        lf = bench_hash.bench_load_factor(rows)
     if "serving" in sections:
         bench_serving.run(rows)
     if "roofline" in sections:
@@ -92,6 +101,10 @@ def main(argv=None) -> None:
         payload["crash_consistency"] = crash
     if e2e is not None:
         payload["end_to_end"] = e2e
+    if lf is not None:
+        payload["load_factor"] = lf
+    if cluster is not None:
+        payload["cluster"] = cluster
     with open(args.bench_json, "w") as f:
         json.dump(payload, f, indent=2, sort_keys=True)
     print("name,us_per_call,derived")

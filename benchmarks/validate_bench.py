@@ -9,7 +9,9 @@ the container) over the payload ``benchmarks/run.py`` emits:
       "wave_over_serial_speedup": {"<op>_b<batch>": float},
       "table1": {<scheme>: {"insert"|"update"|"delete": float}},   # optional
       "crash_consistency": {"<scheme>.<op>": {..., "ok": bool}},    # optional
-      "end_to_end": {<scheme>: {<workload>: E2E_CELL}}              # optional
+      "end_to_end": {<scheme>: {<workload>: E2E_CELL}},             # optional
+      "load_factor": {<policy>: [float, ...]},                      # optional
+      "cluster": {"cells": ..., "durability": ..., "migration": ...} # optional
     }
 
     CELL = {"ops_per_s": float > 0, "us_per_op": float > 0,
@@ -25,6 +27,14 @@ Table I gate, reading structured JSON instead of grepping CSV rows.
 band on the read-heavy mixes: continuity throughput >= level >= pfarm on
 BOTH YCSB-C and YCSB-B — the transport model is deterministic, so the
 ordering is a hard gate, not a tolerance check.
+``load_factor``, when present, is banded against the paper's ~70%
+continuity load-factor claim: every policy triggers its FIRST resize at
+>= 70% occupancy, and the paper's 1/10-extension policy keeps min >= 62%
+/ mean >= 68% across all resize rounds.
+``cluster``, when present, gates the cluster acceptance criteria: zero
+committed-op loss per cell, rebalance within 1/N + 5%, failover
+detected, the fenced durability drill lossless AND its unfenced negative
+control caught losing acked ops, the migration crash sweep clean.
 
 Usage: python benchmarks/validate_bench.py [BENCH.json] [--assert-table1]
 Exit 0 on a valid artifact; exits 1 with the offending path else.
@@ -145,6 +155,78 @@ def _check_end_to_end(e2e) -> None:
                       f"{sb} {b:.0f} ops/s")
 
 
+# paper Fig 18 / §V: continuity sustains ~70% occupancy before resizing
+LF_FIRST_TRIGGER_MIN = 0.70
+LF_BEST_POLICY = "1/10"
+LF_BEST_MIN, LF_BEST_MEAN = 0.62, 0.68
+
+
+def _check_load_factor(lf) -> None:
+    if not isinstance(lf, dict) or not lf:
+        _fail("load_factor", "must be a non-empty object")
+    for policy, lfs in lf.items():
+        here = f"load_factor.{policy}"
+        if not isinstance(lfs, list) or not lfs:
+            _fail(here, "must be a non-empty list")
+        for i, v in enumerate(lfs):
+            if not isinstance(v, (int, float)) or isinstance(v, bool) \
+                    or not 0.0 < v <= 1.0:
+                _fail(f"{here}[{i}]", f"expected load factor in (0, 1], "
+                                      f"got {v!r}")
+        if lfs[0] < LF_FIRST_TRIGGER_MIN:
+            _fail(here, f"first resize triggered at {lfs[0]:.2f} < "
+                        f"{LF_FIRST_TRIGGER_MIN} — the paper's ~70% "
+                        f"load-factor claim")
+    if LF_BEST_POLICY in lf:
+        lfs = lf[LF_BEST_POLICY]
+        if min(lfs) < LF_BEST_MIN or sum(lfs) / len(lfs) < LF_BEST_MEAN:
+            _fail(f"load_factor.{LF_BEST_POLICY}",
+                  f"min {min(lfs):.2f} / mean {sum(lfs)/len(lfs):.2f} "
+                  f"below the [{LF_BEST_MIN}, {LF_BEST_MEAN}] band")
+
+
+def _check_cluster(cl) -> None:
+    if not isinstance(cl, dict):
+        _fail("cluster", f"expected object, got {type(cl).__name__}")
+    for part in ("cells", "durability", "migration"):
+        if not isinstance(cl.get(part), dict):
+            _fail("cluster", f"missing or non-object {part!r}")
+    for scheme, by_wl in cl["cells"].items():
+        if not isinstance(by_wl, dict):
+            _fail(f"cluster.cells.{scheme}",
+                  f"expected object, got {type(by_wl).__name__}")
+        for wl, cell in by_wl.items():
+            here = f"cluster.cells.{scheme}.{wl}"
+            if not isinstance(cell, dict):
+                _fail(here, f"expected object, got {type(cell).__name__}")
+            for field in ("ops_per_s", "p50_us", "p99_us"):
+                v = cell.get(field)
+                if not isinstance(v, (int, float)) or isinstance(v, bool) \
+                        or v <= 0:
+                    _fail(f"{here}.{field}",
+                          f"expected positive number, got {v!r}")
+            if cell.get("committed_lost") != 0:
+                _fail(here, f"lost {cell.get('committed_lost')!r} committed "
+                            f"ops across failover (must be 0)")
+            if cell.get("rebalance_within_bound") is not True:
+                _fail(here, "join rebalance moved more than 1/N + 5% "
+                            "of resident keys")
+            if cell.get("failover_detected") is not True:
+                _fail(here, "primary kill was never detected/promoted")
+    d = cl["durability"]
+    if d.get("fenced", {}).get("lost_committed") != 0:
+        _fail("cluster.durability.fenced",
+              "commit-fenced replication lost acked ops")
+    if not d.get("unfenced", {}).get("lost_committed"):
+        _fail("cluster.durability.unfenced",
+              "negative control lost nothing — the checker cannot see loss")
+    if d.get("ok") is not True:
+        _fail("cluster.durability", "drill reported not ok")
+    if cl["migration"].get("ok") is not True:
+        _fail("cluster.migration", "migration crash sweep reported "
+                                   "violations")
+
+
 def _check_crash(cc) -> None:
     if not isinstance(cc, dict) or not cc:
         _fail("crash_consistency", "must be a non-empty object")
@@ -189,6 +271,10 @@ def validate(payload: dict) -> None:
         _check_crash(payload["crash_consistency"])
     if "end_to_end" in payload:
         _check_end_to_end(payload["end_to_end"])
+    if "load_factor" in payload:
+        _check_load_factor(payload["load_factor"])
+    if "cluster" in payload:
+        _check_cluster(payload["cluster"])
 
     sweep = payload["write_batch_sweep"]
     if set(sweep) - set(OPS) or not sweep:
@@ -240,7 +326,8 @@ def main(argv=None) -> int:
     except SchemaError as e:
         print(f"INVALID {args.file}: {e}", file=sys.stderr)
         return 1
-    extras = [k for k in ("table1", "crash_consistency", "end_to_end")
+    extras = [k for k in ("table1", "crash_consistency", "end_to_end",
+                          "load_factor", "cluster")
               if k in payload]
     print(f"OK {args.file}: valid write-batch sweep artifact "
           f"({len(payload['write_batch_sweep'])} ops"

@@ -1,16 +1,22 @@
 """Distributed continuity KV store under YCSB-A on a simulated 8-device mesh,
-plus the end-to-end RDMA transport comparison (`repro.rdma`).
+the end-to-end RDMA transport comparison (`repro.rdma`), and the N-node
+replicated cluster with live failover (`repro.cluster`).
 
 The paper's deployment: each data shard is a 'server' owning a pair range;
 clients batch reads (one contiguous segment fetch each, via all_to_all
 routing) and route writes to owners.  Wire accounting is verb-plan-derived
-(`DLookupResult.ledger`); the second half drives the same YCSB mixes
+(`DLookupResult.ledger`); the second section drives the same YCSB mixes
 through the analytical transport (`repro.rdma.sim`) and prints the
-per-scheme throughput/latency ordering the paper reports.
+per-scheme throughput/latency ordering the paper reports; the third runs
+an elastic `ClusterStore` — rendezvous-sharded, replica-fenced writes —
+and (with ``--kill-primary``) crashes a primary mid-run to exercise
+heartbeat detection, replica promotion with indicator-based recovery,
+and the zero-committed-loss audit.
 
 NOTE: sets XLA_FLAGS for 8 host devices — run as its own process.
 
-Run: PYTHONPATH=src python examples/ycsb_cluster.py [--smoke]
+Run: PYTHONPATH=src python examples/ycsb_cluster.py \
+        [--smoke] [--nodes N] [--kill-primary]
 """
 
 import os
@@ -114,13 +120,91 @@ def run_transport(smoke: bool) -> None:
           "read-heavy workloads")
 
 
-def main(smoke: bool = False):
+def run_failover(smoke: bool, nodes: int, kill_primary: bool) -> None:
+    """The N-node replicated cluster: rendezvous routing, fenced replica
+    writes, heartbeat-driven failover with indicator-based recovery."""
+    from repro.cluster import ClusterStore, FailoverController
+    from repro.data import ycsb
+
+    n = 400 if smoke else 2000
+    B = 100 if smoke else 400
+    rounds = 4 if smoke else 10
+    cluster = ClusterStore("continuity", nodes=nodes, replicas=2,
+                           node_slots=max(512, 3 * 2 * n // nodes))
+    clock = [0.0]
+    ctl = FailoverController(cluster, timeout_s=3.0,
+                             clock=lambda: clock[0])
+
+    print(f"\nN-node cluster ({nodes} PM nodes, R=2, rendezvous "
+          f"directory, fenced replica writes):")
+    rng = np.random.RandomState(0)
+    acked = {}
+    for lo in range(0, n, B):
+        ids = np.arange(lo, min(lo + B, n))
+        vals = ycsb.make_value(rng, len(ids))
+        res = cluster.insert(ycsb.make_key(ids), vals)
+        for i, v in zip(ids[np.asarray(res.ok)], vals[np.asarray(res.ok)]):
+            acked[int(i)] = v
+    print(f"load: {len(acked)}/{n} committed (primary + replica fenced)")
+
+    zipf = ycsb.Zipf(n)
+    victim = None
+    for r in range(rounds):
+        clock[0] += 1.0
+        ctl.beat(r)
+        for rep in ctl.tick():
+            print(f"failover: {rep.dead} promoted away "
+                  f"({rep.promoted_keys} keys re-primaried, "
+                  f"{rep.recopied} copies restored, recovery log-free="
+                  f"{rep.recovery_log_free()})")
+        if kill_primary and r == rounds // 2:
+            hot = ycsb.make_key(np.array([0]))
+            victim = str(cluster.directory.replica_names(hot)[0, 0])
+            cluster.kill(victim)
+            print(f"killed {victim} (primary of the hottest key) mid-run")
+        ids = zipf.sample(rng, B)
+        vals = ycsb.make_value(rng, B)
+        res = cluster.update(ycsb.make_key(ids), vals)
+        okn = np.asarray(res.ok)
+        for i, v in zip(ids[okn], vals[okn]):
+            acked[int(i)] = v
+    for extra in range(5):          # let detection + promotion drain
+        clock[0] += 1.0
+        ctl.beat(rounds + extra)
+        for rep in ctl.tick():
+            print(f"failover: {rep.dead} promoted away "
+                  f"({rep.promoted_keys} keys re-primaried, "
+                  f"{rep.recopied} copies restored, recovery log-free="
+                  f"{rep.recovery_log_free()})")
+
+    ids = np.array(sorted(acked))
+    lost = 0
+    for lo in range(0, len(ids), B):
+        sub = ids[lo:lo + B]
+        res = cluster.lookup(ycsb.make_key(sub))
+        want = np.stack([acked[int(i)] for i in sub])
+        good = np.asarray(res.found) & (res.values == want).all(axis=1)
+        lost += int((~good).sum())
+    assert lost == 0, f"{lost} committed ops lost"
+    if kill_primary:
+        assert victim is not None and victim not in cluster.node_names()
+    print(f"failover check passed: {len(acked)} committed ops, 0 lost "
+          f"(nodes: {', '.join(cluster.node_names())})")
+
+
+def main(smoke: bool = False, nodes: int = 4, kill_primary: bool = False):
     run_mesh(smoke)
     run_transport(smoke)
+    run_failover(smoke, nodes, kill_primary)
 
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="small sizes for the examples smoke test")
-    main(ap.parse_args().smoke)
+    ap.add_argument("--nodes", type=int, default=4,
+                    help="PM nodes in the replicated cluster section")
+    ap.add_argument("--kill-primary", action="store_true",
+                    help="crash a primary mid-run and exercise failover")
+    args = ap.parse_args()
+    main(args.smoke, args.nodes, args.kill_primary)

@@ -38,4 +38,16 @@ __all__ = [
     "available_schemes", "get_scheme", "make_store", "register_scheme",
     "ContinuityStore", "DenseStore", "LevelStore", "PFarmStore",
     "CostLedger", "ExecPolicy", "HashStore", "OpResult", "store_shard_axes",
+    "ClusterStore",
 ]
+
+
+def __getattr__(name):
+    # `ClusterStore` (the sharded/replicated multi-node front end over any
+    # registered scheme — DESIGN.md §9) lives in `repro.cluster`, which
+    # itself programs against this package; the deferred import keeps the
+    # layering acyclic while `api.ClusterStore` stays the documented entry.
+    if name == "ClusterStore":
+        from repro.cluster.store import ClusterStore
+        return ClusterStore
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

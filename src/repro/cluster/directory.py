@@ -1,0 +1,134 @@
+"""Shard directory: rendezvous (highest-random-weight) key -> node routing.
+
+The cluster serves ONE keyspace from N PM nodes.  The directory is the
+pure routing function every client and every server agrees on: for a
+16-byte key and a node name, a deterministic 64-bit weight; the key's
+replica set is the R highest-weighted nodes, its primary the highest.
+
+Rendezvous hashing gives the minimal-movement property the elastic
+cluster needs without a ring or a central table: when a node JOINS, the
+only keys that move are those whose new weight ranks it into their
+replica set (~R/N of the keyspace for the primary role, ~1/N per role);
+when a node LEAVES, only the keys it owned move, and they scatter evenly
+over the survivors.  `tests/test_cluster.py` asserts the bound the
+ISSUE/CI gate uses: a join moves <= 1/N + 5% of resident keys.
+
+Weights mix the key's 128-bit lanes with a per-node salt derived ONLY
+from the node name — membership changes never perturb other nodes'
+weights (that is where minimal movement comes from).  All routing is
+vectorized numpy over (B, 4) uint32 key batches; the directory is a
+frozen value object, so replacing it (join/leave/failover) is an atomic
+host-side swap, mirroring the one-word cutover discipline the PM side
+uses.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Dict, Tuple
+
+import numpy as np
+
+U64 = np.uint64
+
+
+def _node_salt(name: str) -> np.uint64:
+    """Stable 64-bit salt of a node name (membership-independent)."""
+    return U64(int.from_bytes(
+        hashlib.blake2b(name.encode(), digest_size=8).digest(), "little"))
+
+
+def _mix64(x: np.ndarray) -> np.ndarray:
+    """splitmix64 finalizer: full-avalanche 64-bit mixer (numpy wraps)."""
+    x = x.astype(U64)
+    x = (x ^ (x >> U64(30))) * U64(0xBF58476D1CE4E5B9)
+    x = (x ^ (x >> U64(27))) * U64(0x94D049BB133111EB)
+    return x ^ (x >> U64(31))
+
+
+def key_hash64(keys: np.ndarray) -> np.ndarray:
+    """(B, 4) uint32 key lanes -> (B,) uint64 full-width key hash."""
+    k = np.asarray(keys, np.uint32).reshape(-1, 4).astype(U64)
+    h = (k[:, 0] | (k[:, 1] << U64(32)))
+    h = _mix64(h ^ _mix64(k[:, 2] | (k[:, 3] << U64(32))))
+    return h
+
+
+@dataclasses.dataclass(frozen=True)
+class Directory:
+    """Frozen rendezvous routing table over the current membership.
+
+    ``nodes`` is kept sorted so equal memberships compare equal regardless
+    of join order; ``replicas`` is the replica-set size R (primary
+    included).  R > live node count is clamped at routing time, so a
+    cluster can lose nodes below R without the router failing.
+    """
+
+    nodes: Tuple[str, ...]
+    replicas: int = 2
+
+    def __post_init__(self):
+        assert self.nodes, "directory needs at least one node"
+        assert len(set(self.nodes)) == len(self.nodes), "duplicate node"
+        assert self.replicas >= 1
+        object.__setattr__(self, "nodes", tuple(sorted(self.nodes)))
+
+    # -- membership (returns a NEW directory: host-side atomic swap) --------
+    def with_node(self, name: str) -> "Directory":
+        assert name not in self.nodes, name
+        return dataclasses.replace(self, nodes=self.nodes + (name,))
+
+    def without_node(self, name: str) -> "Directory":
+        assert name in self.nodes, name
+        assert len(self.nodes) > 1, "cannot remove the last node"
+        return dataclasses.replace(
+            self, nodes=tuple(n for n in self.nodes if n != name))
+
+    # -- routing ------------------------------------------------------------
+    def weights(self, keys: np.ndarray) -> np.ndarray:
+        """(B, N) rendezvous weight of every key on every node."""
+        h = key_hash64(keys)[:, None]                       # (B, 1)
+        salts = np.array([_node_salt(n) for n in self.nodes])[None]  # (1, N)
+        return _mix64(h ^ salts)
+
+    def replica_sets(self, keys: np.ndarray) -> np.ndarray:
+        """(B, R) node indices, weight-descending: column 0 is the primary.
+
+        Indices point into ``self.nodes``; use `replica_names` when the
+        caller holds nodes by name (indices shift across membership
+        changes, names do not)."""
+        w = self.weights(keys)
+        r = min(self.replicas, len(self.nodes))
+        top = np.argpartition(-w, r - 1, axis=1)[:, :r] if r < w.shape[1] \
+            else np.broadcast_to(np.arange(w.shape[1]), w.shape).copy()
+        order = np.argsort(-np.take_along_axis(w, top, axis=1), axis=1,
+                           kind="stable")
+        return np.take_along_axis(top, order, axis=1)
+
+    def primaries(self, keys: np.ndarray) -> np.ndarray:
+        """(B,) primary node index per key (= replica_sets column 0)."""
+        return np.argmax(self.weights(keys), axis=1)
+
+    def replica_names(self, keys: np.ndarray) -> np.ndarray:
+        """(B, R) node NAMES (object array) — the stable form of
+        `replica_sets`."""
+        return np.asarray(self.nodes, object)[self.replica_sets(keys)]
+
+    def owned_mask(self, keys: np.ndarray, name: str,
+                   role: str = "any") -> np.ndarray:
+        """(B,) bool — keys this node serves as ``primary`` / ``replica`` /
+        ``any`` member of the replica set."""
+        sets = self.replica_names(keys)
+        if role == "primary":
+            return sets[:, 0] == name
+        hit = (sets == name).any(axis=1)
+        if role == "replica":
+            return hit & (sets[:, 0] != name)
+        assert role == "any", role
+        return hit
+
+    def placement(self, keys: np.ndarray) -> Dict[str, np.ndarray]:
+        """{node name: (B,) primary-ownership mask} over the whole batch."""
+        prim = self.primaries(keys)
+        return {n: prim == i for i, n in enumerate(self.nodes)}

@@ -1,0 +1,349 @@
+"""N-node YCSB cluster simulation: skewed streams, elastic membership,
+mid-run failures — `rdma.sim` scaled from one server to a cluster.
+
+Drives a `ClusterStore` (any registered scheme) with YCSB mixes under a
+zipfian or hotspot request stream, firing membership EVENTS at op
+thresholds mid-run:
+
+    ("join",  at_op, name)   live migration in (begin -> dual-read
+                             window -> cutover at the next round)
+    ("leave", at_op, name)   graceful decommission
+    ("kill",  at_op, name)   crash (name or "primary" = the node owning
+                             the hottest key); heartbeats stop, the
+                             `FailoverController` detects and promotes
+
+and checks the two cluster invariants the ISSUE gates:
+
+  * zero committed-op loss: every op acked before the crash is readable
+    with its exact value after failover;
+  * rebalance minimality: a join moves <= 1/N + 5% of resident keys.
+
+``python -m repro.cluster.sim --smoke --json OUT.json`` runs the CI
+drill: the N-node mixed-workload run with one join and one
+primary-kill, PLUS the store-trace-level durability sweep
+(`replication.check_replicated_durability` — fenced must be lossless,
+UNFENCED must be caught losing acked ops) and the migration crash sweep.
+Exit status 0 iff every invariant holds.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.cluster.failover import FailoverController
+from repro.cluster.store import ClusterStore
+from repro.data import ycsb
+
+Event = Tuple[str, int, str]
+
+
+class _FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self) -> float:
+        return self.t
+
+
+def _stream(dist: str, n: int):
+    if dist == "zipf":
+        return ycsb.Zipf(n)
+    assert dist == "hotspot", dist
+    return ycsb.Hotspot(n)
+
+
+def run_cluster(scheme: str = "continuity", workload: str = "A", *,
+                nodes: int = 4, replicas: int = 2,
+                num_records: int = 1200, num_ops: int = 2400,
+                batch: int = 240, dist: str = "zipf",
+                events: Sequence[Event] = (), node_slots: Optional[int] = None,
+                seed: int = 0, heartbeat_timeout: float = 5.0) -> Dict:
+    """One cluster cell; deterministic given the seed.  Returns the
+    aggregate payload the bench/CI artifact stores (throughput, latency
+    percentiles, wire counters, per-event reports, invariant flags)."""
+    assert workload in ycsb.WORKLOADS, workload
+    mix = dict(ycsb.WORKLOADS[workload])
+    n_read = int(batch * (mix.get(ycsb.OP_READ, 0) + mix.get(ycsb.OP_RMW, 0)))
+    n_upd = int(batch * (mix.get(ycsb.OP_UPDATE, 0)
+                         + mix.get(ycsb.OP_RMW, 0)))
+    n_ins = int(batch * mix.get(ycsb.OP_INSERT, 0))
+
+    # size each node for its replicated share plus rebalance headroom
+    if node_slots is None:
+        per = (num_records + n_ins * (num_ops // batch)) * replicas / nodes
+        node_slots = int(per * 3) + 256
+    cluster = ClusterStore(scheme, nodes=nodes, replicas=replicas,
+                           node_slots=node_slots)
+    clock = _FakeClock()
+    ctl = FailoverController(cluster, timeout_s=heartbeat_timeout,
+                             clock=clock)
+
+    rng = np.random.RandomState(seed)
+    acked: Dict[int, np.ndarray] = {}       # record id -> committed value
+    order: List[int] = []                   # insertion order (for D reads)
+
+    def load(ids: np.ndarray, vals: np.ndarray,
+             record: bool = False) -> np.ndarray:
+        nonlocal wall_us
+        res = cluster.insert(ycsb.make_key(ids), vals)
+        okn = np.asarray(res.ok)
+        if record:              # mid-run inserts count toward the metrics
+            wall_us += res.round_us
+            write_lat.append(res.op_us[okn])
+        for i, v in zip(ids[okn], vals[okn]):
+            acked[int(i)] = v
+            order.append(int(i))
+        return okn
+
+    read_lat, write_lat = [], []
+    wall_us = 0.0
+    for lo in range(0, num_records, batch):
+        ids = np.arange(lo, min(lo + batch, num_records))
+        load(ids, ycsb.make_value(rng, len(ids)))
+    stream = _stream(dist, len(order))
+    scramble = rng.permutation(len(order))
+
+    pending = sorted(events, key=lambda e: e[1])
+    pending_complete_join = False
+    reports: List[dict] = []
+    rebalance_ok = failover_seen = True
+    ops_done = step = 0
+    killed: List[str] = []
+
+    def hottest_primary() -> str:
+        hot = ycsb.make_key(np.array([order[scramble[0] % len(order)]]))
+        names = cluster.directory.replica_names(hot)
+        return str(names[0, 0])
+
+    while ops_done < num_ops:
+        step += 1
+        clock.t += 1.0
+        ctl.beat(step)
+        for rep in ctl.tick():
+            reports.append({"event": "failover", "dead": rep.dead,
+                            "promoted_keys": rep.promoted_keys,
+                            "recopied": rep.recopied,
+                            "recovery_log_free": rep.recovery_log_free()})
+        if pending_complete_join and not cluster.migrating:
+            pending_complete_join = False   # the joiner died mid-window
+        if pending_complete_join:       # cutover one full round after COPY:
+            rb = cluster.complete_join()    # the dual-read window was live
+            pending_complete_join = False
+            rebalance_ok &= rb.within_bound
+            reports.append({"event": "join", "node": rb.node,
+                            "resident": rb.resident,
+                            "moved_primary": rb.moved_primary,
+                            "moved_frac": rb.moved_frac, "bound": rb.bound,
+                            "copied": rb.copied, "cleaned": rb.cleaned,
+                            "within_bound": rb.within_bound})
+        while pending and pending[0][1] <= ops_done:
+            kind, _, name = pending.pop(0)
+            if kind == "join":
+                cluster.begin_join(name, node_slots)
+                ctl.monitor.register(name)
+                pending_complete_join = True
+            elif kind == "leave":
+                rb = cluster.leave(name)
+                reports.append({"event": "leave", "node": rb.node,
+                                "moved_frac": rb.moved_frac,
+                                "copied": rb.copied})
+                ctl.monitor.hosts.pop(name, None)
+            else:
+                assert kind == "kill", kind
+                name = hottest_primary() if name == "primary" else name
+                cluster.kill(name)
+                killed.append(name)
+
+        if n_read:
+            ranks = stream.sample(rng, n_read) % len(order)
+            ids = np.array(order)[scramble[ranks] % len(order)] \
+                if workload != "D" else \
+                np.array(order)[len(order) - 1 - ranks]
+            res = cluster.lookup(ycsb.make_key(ids))
+            read_lat.append(res.op_us[np.asarray(res.found)])
+            wall_us += res.round_us
+        if n_upd:
+            ranks = stream.sample(rng, n_upd) % len(order)
+            ids = np.array(order)[scramble[ranks] % len(order)]
+            vals = ycsb.make_value(rng, n_upd)
+            res = cluster.update(ycsb.make_key(ids), vals)
+            okn = np.asarray(res.ok)
+            for i, v in zip(ids[okn], vals[okn]):
+                acked[int(i)] = v
+            write_lat.append(res.op_us[okn])
+            wall_us += res.round_us
+        if n_ins:
+            base = max(order) + 1
+            ids = np.arange(base, base + n_ins)
+            load(ids, ycsb.make_value(rng, n_ins), record=True)
+            stream = _stream(dist, len(order))
+        ops_done += n_read + n_upd + n_ins
+
+    # let a terminal kill drain through detection before the audit
+    for _ in range(int(heartbeat_timeout) + 2):
+        step += 1
+        clock.t += 1.0
+        ctl.beat(step)
+        for rep in ctl.tick():
+            reports.append({"event": "failover", "dead": rep.dead,
+                            "promoted_keys": rep.promoted_keys,
+                            "recopied": rep.recopied,
+                            "recovery_log_free": rep.recovery_log_free()})
+    failover_seen = (not killed
+                     or any(r["event"] == "failover" for r in reports))
+
+    # the zero-committed-loss audit: EVERY acked (id, value) must read
+    # back exactly after all failures and rebalances
+    audit_ids = np.array(sorted(acked))
+    lost = 0
+    for lo in range(0, len(audit_ids), batch):
+        ids = audit_ids[lo:lo + batch]
+        res = cluster.lookup(ycsb.make_key(ids))
+        vals = np.stack([acked[int(i)] for i in ids])
+        good = np.asarray(res.found) & (res.values == vals).all(axis=1)
+        lost += int((~good).sum())
+
+    lat = (np.concatenate(read_lat + write_lat)
+           if read_lat or write_lat else np.zeros(1))
+    return {
+        "scheme": scheme, "workload": workload, "dist": dist,
+        "nodes_initial": nodes, "nodes_final": len(cluster.node_names()),
+        "replicas": replicas, "ops": ops_done,
+        "ops_per_s": ops_done / max(wall_us, 1e-9) * 1e6,
+        "p50_us": float(np.percentile(lat, 50)),
+        "p99_us": float(np.percentile(lat, 99)),
+        "committed": len(acked), "committed_lost": lost,
+        "rebalance_within_bound": bool(rebalance_ok),
+        "failover_detected": bool(failover_seen),
+        "events": reports, "killed": killed,
+        "stats": cluster.stats(),
+    }
+
+
+def durability_drill(scheme: str = "continuity", n_base: int = 24,
+                     n_ops: int = 8) -> Dict:
+    """Store-trace-level replicated-durability sweep for the CI artifact:
+    the fenced discipline must lose ZERO acked ops over every primary-
+    crash prefix; the unfenced delivery MUST be caught losing some (the
+    negative control proving the checker sees real loss)."""
+    from repro import api
+    from repro.cluster.replication import check_replicated_durability
+    store = api.make_store(scheme, table_slots=max(240, n_base * 10))
+    rng = np.random.RandomState(11)
+    K = ycsb.make_key(np.arange(n_base))
+    table, res = store.insert(store.create(), K,
+                              ycsb.make_value(rng, n_base))
+    live = K[np.asarray(res.ok)][:n_ops]
+    fenced = check_replicated_durability(
+        store, table, "update", live, ycsb.make_value(rng, len(live)),
+        fenced=True)
+    unfenced = check_replicated_durability(
+        store, table, "update", live, ycsb.make_value(rng, len(live)),
+        fenced=False)
+    return {
+        "scheme": scheme,
+        "fenced": {"cuts": fenced.cuts, "acked": fenced.acked_total,
+                   "lost_committed": fenced.lost_committed,
+                   "zero_loss": fenced.zero_loss},
+        "unfenced": {"cuts": unfenced.cuts, "acked": unfenced.acked_total,
+                     "lost_committed": unfenced.lost_committed,
+                     "loss_detected": unfenced.lost_committed > 0},
+        "ok": fenced.zero_loss and unfenced.lost_committed > 0,
+    }
+
+
+def migration_drill(scheme: str = "continuity", n_base: int = 18,
+                    n_move: int = 6) -> Dict:
+    """Migration crash sweep for the CI artifact (the matrix cell's twin)."""
+    from repro import api
+    from repro.cluster.migration import migration_crash_sweep
+    store = api.make_store(scheme, table_slots=max(240, n_base * 10))
+    rng = np.random.RandomState(13)
+    K = ycsb.make_key(np.arange(n_base))
+    V = ycsb.make_value(rng, n_base)
+    src, res = store.insert(store.create(), K, V)
+    okn = np.asarray(res.ok)
+    sweep = migration_crash_sweep(store, src, store.create(),
+                                  K[okn][:n_move], V[okn][:n_move])
+    return {
+        "scheme": scheme, "moved": sweep.moved,
+        "crash_points": sweep.crash_points,
+        "torn_points": sweep.torn_points,
+        "violations": len(sweep.violations),
+        "log_free": sweep.log_free, "ok": sweep.consistent,
+    }
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--scheme", default="continuity")
+    p.add_argument("--workload", default="A")
+    p.add_argument("--nodes", type=int, default=4)
+    p.add_argument("--replicas", type=int, default=2)
+    p.add_argument("--dist", default="zipf", choices=("zipf", "hotspot"))
+    p.add_argument("--smoke", action="store_true",
+                   help="CI sizes: small run + join + primary kill + the "
+                        "durability and migration drills")
+    p.add_argument("--json", default=None, help="write the payload here")
+    args = p.parse_args(argv)
+
+    kw = (dict(num_records=600, num_ops=1200, batch=240) if args.smoke
+          else dict(num_records=2000, num_ops=4000, batch=400))
+    events: Tuple[Event, ...] = (
+        ("join", kw["num_ops"] // 3, "pmJ"),
+        ("kill", 2 * kw["num_ops"] // 3, "primary"),
+    )
+    cell = run_cluster(args.scheme, args.workload, nodes=args.nodes,
+                       replicas=args.replicas, dist=args.dist,
+                       events=events, **kw)
+    payload = {
+        "cluster": cell,
+        "durability": durability_drill(args.scheme),
+        "migration": migration_drill(args.scheme),
+    }
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True, default=str)
+
+    print(f"cluster {args.scheme}/{args.workload} x{args.nodes} "
+          f"(R={args.replicas}, {args.dist}): "
+          f"{cell['ops_per_s']:.0f} ops/s p50={cell['p50_us']:.2f}us "
+          f"p99={cell['p99_us']:.2f}us nodes {cell['nodes_initial']}->"
+          f"{cell['nodes_final']}")
+    for r in cell["events"]:
+        print(f"  event: {r}")
+    print(f"committed={cell['committed']} lost={cell['committed_lost']} "
+          f"rebalance_within_bound={cell['rebalance_within_bound']} "
+          f"failover_detected={cell['failover_detected']}")
+    d, m = payload["durability"], payload["migration"]
+    print(f"durability drill: fenced lost={d['fenced']['lost_committed']} "
+          f"over {d['fenced']['cuts']} cuts; unfenced lost="
+          f"{d['unfenced']['lost_committed']} (must be >0) -> "
+          f"{'PASS' if d['ok'] else 'FAIL'}")
+    print(f"migration drill: {m['crash_points']} crash points "
+          f"({m['torn_points']} torn), {m['violations']} violations, "
+          f"log_free={m['log_free']} -> {'PASS' if m['ok'] else 'FAIL'}")
+
+    bad = []
+    if cell["committed_lost"]:
+        bad.append("committed ops lost across failover")
+    if not cell["rebalance_within_bound"]:
+        bad.append("join moved more than 1/N + 5% of resident keys")
+    if not cell["failover_detected"]:
+        bad.append("kill was never detected/promoted")
+    if not d["ok"]:
+        bad.append("replicated-durability drill failed")
+    if not m["ok"]:
+        bad.append("migration crash sweep failed")
+    for b in bad:
+        print(f"FAIL: {b}", file=sys.stderr)
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

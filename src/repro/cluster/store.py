@@ -1,0 +1,445 @@
+"""`ClusterStore`: one keyspace served by N PM nodes, any registered scheme.
+
+The cluster composes the existing subsystems into the deployment the
+ROADMAP's north star describes: every node runs ONE `repro.api` store
+(any registered scheme — the cluster is scheme-agnostic by construction)
+as its PM shard image, the rendezvous `Directory` routes every key to an
+R-node replica set, and each node owns a simulated RNIC endpoint
+(`rdma.RemoteMemory`) that prices what the cluster puts on its wire.
+
+Semantics:
+
+  * **writes** apply to every live replica-set member and post the
+    fenced replication `VerbPlan` (synthesized from the member's own
+    `CostLedger`, exactly like `rdma.sim`) to that member's endpoint.
+    An op is acked iff every live member committed it; per-op latency
+    is the chain sum (primary applies, forwards, acks after the last
+    replica's commit fence — the discipline
+    `cluster.replication.check_replicated_durability` proves lossless).
+  * **reads** route to the key's primary (first ALIVE member — a dead,
+    not-yet-promoted primary degrades to replica reads instead of
+    failing) and post the scheme's exact lookup verb plan.  During a
+    migration window reads run DUAL: misses retry against the other
+    directory's owner (`cluster.migration` proves the union is always
+    correct).
+  * **join/leave** are live migrations: copy (from old primaries only —
+    one source per key), ONE host-atomic directory cutover (the PM
+    token twin is swept in `migration.py`), then cleanup.  The
+    `RebalanceReport` carries the moved-key fraction the CI gate bounds
+    at 1/N + 5%.
+  * **kill/failover**: a killed node goes silent (its image frozen);
+    `failover` removes it from the directory — rendezvous re-ranks the
+    surviving replicas to primary for exactly its keys — runs every
+    survivor's restart procedure (indicator-based for continuity), and
+    re-replicates to restore R.
+
+Batch sub-routing pads per-node sub-batches to a fixed quantum so the
+jitted scheme ops compile once per node instead of once per arrival
+pattern; padded rows are masked writes / ignored reads.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, NamedTuple, Optional, Tuple
+
+import numpy as np
+
+from repro import api
+from repro.cluster.directory import Directory
+from repro.cluster.failover import FailoverReport
+from repro.rdma.sim import post_ledger_writes
+from repro.rdma.transport import LinkModel, RemoteMemory
+
+U32 = np.uint32
+PAD_QUANTUM = 64
+
+
+@dataclasses.dataclass
+class _Node:
+    name: str
+    store: Any
+    table: Any
+    mem: Optional[RemoteMemory]
+    alive: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class _Migration:
+    new_dir: Directory
+    resident: int
+    copied: int
+    moved_primary: int
+
+
+class ClusterWriteResult(NamedTuple):
+    ok: np.ndarray          # (B,) acked per op (all live members committed)
+    op_us: np.ndarray       # (B,) simulated chain latency per acked op
+    round_us: float         # wall time of the round (busiest node)
+
+
+class ClusterReadResult(NamedTuple):
+    values: np.ndarray      # (B, 4) uint32
+    found: np.ndarray       # (B,) bool
+    op_us: np.ndarray       # (B,) unloaded per-op latency
+    round_us: float
+
+
+@dataclasses.dataclass(frozen=True)
+class RebalanceReport:
+    """One join/leave rebalance; ``moved_frac <= bound`` is the CI gate."""
+
+    kind: str               # join | leave
+    node: str
+    resident: int           # distinct keys resident before the change
+    moved_primary: int      # keys whose PRIMARY changed
+    copied: int             # replica copies shipped
+    cleaned: int            # stale copies deleted at cleanup
+    bound: float            # 1/N + 5% for the new membership
+
+    @property
+    def moved_frac(self) -> float:
+        return self.moved_primary / max(1, self.resident)
+
+    @property
+    def within_bound(self) -> bool:
+        return self.moved_frac <= self.bound
+
+
+def _pad(n: int) -> int:
+    return -(-max(n, 1) // PAD_QUANTUM) * PAD_QUANTUM
+
+
+class ClusterStore:
+    """Sharded, replicated KV store over N simulated PM nodes."""
+
+    def __init__(self, scheme: str = "continuity", nodes: int = 4,
+                 replicas: int = 2, node_slots: int = 2048,
+                 policy: Optional[api.ExecPolicy] = None,
+                 link: Optional[LinkModel] = None):
+        names = tuple(f"pm{i}" for i in range(nodes))
+        self.scheme = scheme
+        self._node_slots = node_slots
+        self._policy = policy or api.ExecPolicy(transport="sim")
+        self._link = link
+        self.directory = Directory(names, replicas=replicas)
+        self._nodes: Dict[str, _Node] = {n: self._make_node(n)
+                                         for n in names}
+        self._mig: Optional[_Migration] = None
+
+    # -- membership plumbing ------------------------------------------------
+    def _make_node(self, name: str, slots: Optional[int] = None) -> _Node:
+        store = api.make_store(self.scheme,
+                               table_slots=slots or self._node_slots,
+                               policy=self._policy)
+        return _Node(name, store, store.create(),
+                     RemoteMemory.from_policy(store.policy, self._link))
+
+    def node_names(self) -> Tuple[str, ...]:
+        return tuple(self._nodes)
+
+    def is_alive(self, name: str) -> bool:
+        return name in self._nodes and self._nodes[name].alive
+
+    @property
+    def migrating(self) -> bool:
+        """True while a begin_join window is open (a mid-window failover
+        of the joiner itself closes it — see `failover`)."""
+        return self._mig is not None
+
+    def node(self, name: str) -> _Node:
+        return self._nodes[name]
+
+    def _resident(self, node: _Node) -> Tuple[np.ndarray, np.ndarray]:
+        keys, vals, live = node.store._extract(node.table)
+        liven = np.asarray(live)
+        return (np.asarray(keys, U32)[liven], np.asarray(vals, U32)[liven])
+
+    def _distinct_resident(self) -> Tuple[np.ndarray, np.ndarray]:
+        """(K, V) of every distinct key on any live node (replica dedup)."""
+        seen: Dict[bytes, np.ndarray] = {}
+        order: List[np.ndarray] = []
+        for node in self._nodes.values():
+            if not node.alive:
+                continue
+            K, V = self._resident(node)
+            for k, v in zip(K, V):
+                kb = k.tobytes()
+                if kb not in seen:
+                    seen[kb] = v
+                    order.append(k)
+        if not order:
+            return np.zeros((0, 4), U32), np.zeros((0, 4), U32)
+        return np.stack(order), np.stack([seen[k.tobytes()] for k in order])
+
+    # -- padded per-node sub-batches ---------------------------------------
+    def _padded_write(self, op: str, node: _Node, keys: np.ndarray,
+                      vals: Optional[np.ndarray]):
+        n = keys.shape[0]
+        P = _pad(n)
+        pk = np.zeros((P, 4), U32)
+        pk[:n] = keys
+        mask = np.zeros((P,), bool)
+        mask[:n] = True
+        if vals is None:
+            node.table, res = getattr(node.store, op)(node.table, pk, mask)
+        else:
+            pv = np.zeros((P, 4), U32)
+            pv[:n] = vals
+            node.table, res = getattr(node.store, op)(node.table, pk, pv,
+                                                      mask)
+        return np.asarray(res.ok)[:n], res
+
+    def _padded_lookup(self, node: _Node, keys: np.ndarray):
+        n = keys.shape[0]
+        pk = np.zeros((_pad(n), 4), U32)
+        pk[:n] = keys
+        res = node.store.lookup(node.table, pk)
+        return (np.asarray(res.values)[:n], np.asarray(res.ok)[:n], res)
+
+    # -- writes -------------------------------------------------------------
+    def insert(self, keys, vals) -> ClusterWriteResult:
+        return self._write("insert", keys, vals)
+
+    def update(self, keys, vals) -> ClusterWriteResult:
+        return self._write("update", keys, vals)
+
+    def delete(self, keys) -> ClusterWriteResult:
+        return self._write("delete", keys, None)
+
+    def _write(self, op: str, keys, vals) -> ClusterWriteResult:
+        keys = np.asarray(keys, U32).reshape(-1, 4)
+        B = keys.shape[0]
+        vals = None if vals is None else np.asarray(vals, U32).reshape(-1, 4)
+        ok = np.ones((B,), bool)
+        touched = np.zeros((B,), bool)
+        lat = np.zeros((B,))
+        round_us = 0.0
+        dirs = [self.directory] + ([self._mig.new_dir] if self._mig else [])
+        # one routing pass per directory (not per node): the weight
+        # matrix is the cluster's hottest computation
+        sets_by_dir = [d.replica_names(keys) for d in dirs]
+        for node in list(self._nodes.values()):
+            if not node.alive:
+                continue
+            m = np.zeros((B,), bool)
+            for d, sets in zip(dirs, sets_by_dir):
+                if node.name in d.nodes:
+                    m |= (sets == node.name).any(axis=1)
+            if not m.any():
+                continue
+            okn, res = self._padded_write(
+                op, node, keys[m], None if vals is None else vals[m])
+            ok[m] &= okn
+            touched |= m
+            if node.mem is not None:
+                comp = post_ledger_writes(node.mem, int(okn.sum()),
+                                          int(res.ledger.pm_writes))
+                if comp is not None:
+                    lat[np.flatnonzero(m)[okn]] += comp.op_us   # chain sum
+                    round_us = max(round_us, comp.batch_us)
+        ok &= touched           # no live member -> not acked
+        return ClusterWriteResult(ok, lat, round_us)
+
+    # -- reads --------------------------------------------------------------
+    def lookup(self, keys) -> ClusterReadResult:
+        keys = np.asarray(keys, U32).reshape(-1, 4)
+        B = keys.shape[0]
+        values = np.zeros((B, 4), U32)
+        found = np.zeros((B,), bool)
+        lat = np.zeros((B,))
+        round_us = 0.0
+        round_us = max(round_us, self._lookup_via(
+            self.directory, keys, np.ones((B,), bool), values, found, lat))
+        if self._mig is not None and not found.all():
+            # dual-read window: misses retry on the new directory's owner
+            round_us = max(round_us, self._lookup_via(
+                self._mig.new_dir, keys, ~found, values, found, lat))
+        return ClusterReadResult(values, found, lat, round_us)
+
+    def _lookup_via(self, d: Directory, keys, mask, values, found,
+                    lat) -> float:
+        sets = d.replica_names(keys)                       # (B, R) names
+        # serve from the first ALIVE member: a dead primary degrades to
+        # replica reads until failover promotes
+        alive = np.vectorize(self.is_alive)(sets)
+        has = alive.any(axis=1)
+        first = np.argmax(alive, axis=1)
+        target = np.where(has, sets[np.arange(len(first)), first], "")
+        round_us = 0.0
+        for name in np.unique(target[mask & has]):
+            node = self._nodes[name]
+            m = mask & has & (target == name)
+            vs, fs, res = self._padded_lookup(node, keys[m])
+            values[m] = np.where(fs[:, None], vs, values[m])
+            found[m] |= fs
+            if node.mem is not None and res.plan is not None:
+                comp = node.mem.post(res.plan)
+                lat[m] = np.maximum(lat[m],
+                                    comp.op_us[: int(m.sum())])
+                round_us = max(round_us, comp.batch_us)
+        return round_us
+
+    # -- rebalance: live join / leave ---------------------------------------
+    def begin_join(self, name: str,
+                   node_slots: Optional[int] = None) -> _Migration:
+        """COPY phase: add the node, ship it every key it will own.  Reads
+        keep routing through the OLD directory (dual-read covers the
+        window); `complete_join` is the cutover."""
+        assert self._mig is None, "a migration is already in flight"
+        new_dir = self.directory.with_node(name)
+        self._nodes[name] = self._make_node(name, node_slots)
+        K, V = self._distinct_resident()
+        if len(K):
+            new_sets = new_dir.replica_names(K)
+            to_new = (new_sets == name).any(axis=1)
+            moved_primary = int((new_sets[:, 0] == name).sum())
+            copied = int(to_new.sum())
+            if copied:
+                okn, _ = self._padded_write("insert", self._nodes[name],
+                                            K[to_new], V[to_new])
+                assert okn.all(), "join target too small for its shard"
+        else:
+            moved_primary = copied = 0
+        self._mig = _Migration(new_dir, len(K), copied, moved_primary)
+        return self._mig
+
+    def complete_join(self) -> RebalanceReport:
+        """CUTOVER (one host-atomic directory swap — the PM token twin is
+        `migration.token_record`) + CLEANUP (drop un-owned copies)."""
+        assert self._mig is not None, "no migration in flight"
+        mig = self._mig
+        joined = set(mig.new_dir.nodes) - set(self.directory.nodes)
+        self.directory = mig.new_dir
+        self._mig = None
+        cleaned = self._cleanup()
+        return RebalanceReport(
+            kind="join", node=next(iter(joined)), resident=mig.resident,
+            moved_primary=mig.moved_primary, copied=mig.copied,
+            cleaned=cleaned, bound=1.0 / len(self.directory.nodes) + 0.05)
+
+    def join(self, name: str,
+             node_slots: Optional[int] = None) -> RebalanceReport:
+        self.begin_join(name, node_slots)
+        return self.complete_join()
+
+    def leave(self, name: str) -> RebalanceReport:
+        """Graceful decommission: re-home the leaving node's keys, cut
+        over, drop the node."""
+        assert self._mig is None, "complete the in-flight migration first"
+        assert self.is_alive(name), name
+        new_dir = self.directory.without_node(name)
+        K, V = self._distinct_resident()
+        copied = 0
+        if len(K):
+            old_sets = self.directory.replica_names(K)
+            new_sets = new_dir.replica_names(K)
+            moved_primary = int(
+                (old_sets[:, 0] != new_sets[:, 0]).sum())
+            for node in self._nodes.values():
+                if node.name == name or not node.alive:
+                    continue
+                gains = ((new_sets == node.name).any(axis=1)
+                         & ~(old_sets == node.name).any(axis=1))
+                if gains.any():
+                    okn, _ = self._padded_write("insert", node, K[gains],
+                                                V[gains])
+                    copied += int(okn.sum())
+        else:
+            moved_primary = 0
+        self.directory = new_dir
+        del self._nodes[name]
+        return RebalanceReport(
+            kind="leave", node=name, resident=len(K),
+            moved_primary=moved_primary, copied=copied, cleaned=0,
+            bound=1.0 / (len(new_dir.nodes) + 1) + 0.05)
+
+    def _cleanup(self) -> int:
+        cleaned = 0
+        for node in self._nodes.values():
+            if not node.alive:
+                continue
+            K, _ = self._resident(node)
+            if not len(K):
+                continue
+            drop = ~self.directory.owned_mask(K, node.name)
+            if drop.any():
+                okn, _ = self._padded_write("delete", node, K[drop], None)
+                cleaned += int(okn.sum())
+        return cleaned
+
+    # -- failure ------------------------------------------------------------
+    def kill(self, name: str) -> None:
+        """Crash a node: it goes silent, its PM image frozen as-is.
+        Detection (heartbeat timeout) and promotion are the
+        `FailoverController`'s job."""
+        self._nodes[name].alive = False
+
+    def failover(self, dead: str) -> FailoverReport:
+        """Promote the dead node's replicas: directory removal re-ranks
+        them to primary, every survivor runs its scheme's restart
+        procedure on its (possibly mid-write) image, and the lost
+        replica count is restored from the new primaries."""
+        assert dead in self._nodes and not self._nodes[dead].alive, dead
+        old_dir = self.directory
+        if dead not in old_dir.nodes:
+            # a joiner died inside its own migration window: it owned
+            # nothing yet (the source is still authoritative), so the
+            # join is void — drop the node and its copies, promote nobody
+            assert self._mig is not None and dead in self._mig.new_dir.nodes
+            self._mig = None
+            del self._nodes[dead]
+            return FailoverReport(dead=dead, promoted_keys=0, recopied=0,
+                                  recovery={})
+        new_dir = old_dir.without_node(dead)
+        if self._mig is not None:
+            # a primary died inside a migration window: the PENDING
+            # cutover must target the post-failover membership, or
+            # complete_join would resurrect the dead node (and is moot
+            # when the dead node IS the joiner)
+            nd = (self._mig.new_dir.without_node(dead)
+                  if dead in self._mig.new_dir.nodes else self._mig.new_dir)
+            if set(nd.nodes) == set(new_dir.nodes):
+                self._mig = None
+            else:
+                self._mig = dataclasses.replace(self._mig, new_dir=nd)
+        recovery = {}
+        for node in self._nodes.values():
+            if not node.alive:
+                continue
+            node.table, report = node.store.recover(node.table)
+            recovery[node.name] = report
+        del self._nodes[dead]
+        self.directory = new_dir
+        K, V = self._distinct_resident()
+        promoted = recopied = 0
+        if len(K):
+            promoted = int((old_dir.replica_names(K)[:, 0] == dead).sum())
+            new_sets = new_dir.replica_names(K)
+            for node in self._nodes.values():
+                need = (new_sets == node.name).any(axis=1)
+                if not need.any():
+                    continue
+                _, have, _ = self._padded_lookup(node, K[need])
+                miss = np.flatnonzero(need)[~have]
+                if len(miss):
+                    okn, _ = self._padded_write("insert", node, K[miss],
+                                                V[miss])
+                    recopied += int(okn.sum())
+        return FailoverReport(dead=dead, promoted_keys=promoted,
+                              recopied=recopied, recovery=recovery)
+
+    # -- diagnostics --------------------------------------------------------
+    def total_resident(self) -> int:
+        return len(self._distinct_resident()[0])
+
+    def stats(self) -> dict:
+        out = {"scheme": self.scheme, "nodes": {}, "replicas":
+               self.directory.replicas, "migrating": self._mig is not None}
+        for node in self._nodes.values():
+            st = {"alive": node.alive,
+                  "resident": int(len(self._resident(node)[0]))}
+            if node.mem is not None:
+                st["wire"] = node.mem.stats()
+            out["nodes"][node.name] = st
+        return out

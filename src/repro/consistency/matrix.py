@@ -1,10 +1,15 @@
-"""The crash/scheme matrix: every scheme x insert/update/delete, swept
-through every crash point — the CI gate for the consistency subsystem.
+"""The crash/scheme matrix: every scheme x insert/update/delete (plus the
+cluster's live-migration cell), swept through every crash point — the CI
+gate for the consistency subsystem.
 
 Each cell traces a small batch against a pre-loaded store, injects a crash
 at every PM-store boundary (plus every torn split of non-atomic stores),
 runs the scheme's recovery, and checks atomic per-op visibility
-(`repro.consistency.checker`).  Expectations encode the paper's contrast:
+(`repro.consistency.checker`).  The ``migrate`` cell sweeps a live shard
+migration (dest copies -> token cutover -> source deletes,
+`repro.cluster.migration`) the same way: dual-read resolution must equal
+the original item set at EVERY crash prefix, with zero migration log.
+Expectations encode the paper's contrast:
 
   * ``continuity`` — consistent at every crash point with ZERO log
     records (trace contains none, recovery reads none);
@@ -36,9 +41,11 @@ from repro.consistency.checker import CaseResult, run_case
 from repro.data import ycsb
 
 OPS = ("insert", "update", "delete")
+MIGRATE_SCHEMES = ("continuity",)   # schemes the migrate cell sweeps
 
 # (consistent, log_free) expected per cell; None = don't-care
 EXPECT: Dict[Tuple[str, str], Tuple[bool, bool]] = {
+    ("continuity", "migrate"): (True, True),
     ("continuity", "insert"): (True, True),
     ("continuity", "update"): (True, True),
     ("continuity", "delete"): (True, True),
@@ -89,8 +96,57 @@ def run_cell(scheme: str, op: str, order: str = "serial") -> CaseResult:
 
 def run_matrix(schemes=None, ops=OPS, order: str = "serial"
                ) -> List[CaseResult]:
+    """The scheme x write-op cells.  The migrate cell has a different
+    result shape (a summary dict, not a `CaseResult`) — ask for it via
+    `run_migration_cell` / `run_rows`, not here."""
+    if "migrate" in ops:
+        raise ValueError("run_matrix sweeps write ops only; use "
+                         "run_migration_cell (or run_rows) for migrate")
     schemes = schemes or [s for s in api.available_schemes() if s in SHAPES]
     return [run_cell(s, op, order) for s in schemes for op in ops]
+
+
+def run_rows(schemes=None, ops=OPS + ("migrate",),
+             order: str = "serial") -> List[dict]:
+    """Summary rows for every requested cell, migrate included — the ONE
+    inventory the CLI, CI artifact, and library callers share."""
+    rows = [summarize(r) for r in
+            run_matrix(schemes, tuple(o for o in ops if o != "migrate"),
+                       order)]
+    if "migrate" in ops:
+        rows += [run_migration_cell(s) for s in MIGRATE_SCHEMES
+                 if schemes is None or s in schemes]
+    return rows
+
+
+def run_migration_cell(scheme: str, n_move: int = 6) -> dict:
+    """The cluster's live-migration crash cell: sweep every crash prefix
+    of dest-copy -> token-cutover -> source-delete and require the
+    dual-read-resolved item set to equal the original at every point
+    (`repro.cluster.migration.migration_crash_sweep`)."""
+    from repro.cluster.migration import migration_crash_sweep
+    store, src_table, _, _, _ = _load(scheme)
+    keys, vals, live = store._extract(src_table)
+    liven = np.asarray(live)
+    K = np.asarray(keys, np.uint32)[liven][:n_move]
+    V = np.asarray(vals, np.uint32)[liven][:n_move]
+    sweep = migration_crash_sweep(store, src_table, store.create(), K, V)
+    want = EXPECT.get((scheme, "migrate"), (None, None))
+    ok = ((want[0] is None or want[0] == sweep.consistent)
+          and (want[1] is None or want[1] == sweep.log_free))
+    return {
+        "scheme": scheme, "op": "migrate", "order": "serial",
+        "paths": ["migrate"],
+        "crash_points": sweep.crash_points,
+        "torn_points": sweep.torn_points,
+        "violations": len(sweep.violations),
+        "consistent": sweep.consistent, "log_free": sweep.log_free,
+        "trace_log_records": sweep.log_records_in_trace,
+        "log_used_points": int(sweep.report.log_records_used > 0),
+        "recovery": dataclasses.asdict(sweep.report),
+        "expected": list(want),
+        "ok": ok,
+    }
 
 
 def cell_ok(r: CaseResult) -> bool:
@@ -126,13 +182,12 @@ def main(argv=None) -> int:
     p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("--schemes", default=None,
                    help="comma-separated subset (default: all registered)")
-    p.add_argument("--ops", default=",".join(OPS))
+    p.add_argument("--ops", default=",".join(OPS + ("migrate",)))
     p.add_argument("--json", default=None, help="write cell summaries here")
     p.add_argument("--quiet", action="store_true")
     args = p.parse_args(argv)
     schemes = args.schemes.split(",") if args.schemes else None
-    results = run_matrix(schemes, tuple(args.ops.split(",")))
-    rows = [summarize(r) for r in results]
+    rows = run_rows(schemes, tuple(args.ops.split(",")))
     if args.json:
         with open(args.json, "w") as f:
             json.dump(rows, f, indent=2)

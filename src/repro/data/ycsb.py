@@ -69,6 +69,26 @@ class Zipf:
         return np.clip(out, 0, self.n - 1)
 
 
+class Hotspot:
+    """YCSB hotspot distribution: ``hot_op_frac`` of requests hit the
+    first ``hot_frac`` of the keyspace uniformly, the rest hit the cold
+    remainder uniformly (the cluster sim's shard-imbalance stressor)."""
+
+    def __init__(self, n: int, hot_frac: float = 0.2,
+                 hot_op_frac: float = 0.8):
+        assert 0.0 < hot_frac < 1.0 and 0.0 < hot_op_frac < 1.0
+        self.n = n
+        self.hot = max(1, int(n * hot_frac))
+        self.hot_op_frac = hot_op_frac
+
+    def sample(self, rng: np.random.RandomState, size: int) -> np.ndarray:
+        is_hot = rng.random_sample(size) < self.hot_op_frac
+        hot_ids = rng.randint(0, self.hot, size=size)
+        cold_ids = (rng.randint(0, max(1, self.n - self.hot), size=size)
+                    + self.hot) % self.n
+        return np.where(is_hot, hot_ids, cold_ids)
+
+
 @dataclasses.dataclass
 class OpBatch:
     ops: np.ndarray     # (B,) int32 op codes

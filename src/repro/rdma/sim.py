@@ -33,8 +33,9 @@ from repro.rdma.transport import LinkModel, RemoteMemory
 
 COMMIT_BYTES = 8        # the 8-byte atomic indicator/token commit word
 
-# read-heavy YCSB mixes the simulation drives (paper §V-A)
-SIM_WORKLOADS = ("A", "B", "C")
+# read-heavy YCSB mixes the simulation drives (paper §V-A); D is the
+# read-latest mix (95% read / 5% insert, reads skewed to newest keys)
+SIM_WORKLOADS = ("A", "B", "C", "D")
 
 
 def write_plan(B: int, pm_per_op: int, extra_ops: int = 0,
@@ -62,13 +63,28 @@ def write_plan(B: int, pm_per_op: int, extra_ops: int = 0,
     return rv.pack(B, lanes)
 
 
+def post_ledger_writes(mem: RemoteMemory, n_ok: int, total_pm: int):
+    """Post the exact-total fenced write plan a batch's `CostLedger`
+    implies: ``floor(total_pm / n_ok)`` writes per op with the remainder
+    ops charging one more (the scheme's logged/fallback-path tail), so
+    Σ per-op counts == the ledger.  The ONE apportioning rule every
+    driver (this sim's update/insert paths, the cluster store's replica
+    fan-out) shares.  Returns the `Completion`, or None for an empty or
+    write-free batch."""
+    if not (n_ok and total_pm):
+        return None
+    lo = max(1, total_pm // n_ok)
+    return mem.post(write_plan(n_ok, lo, extra_ops=total_pm - lo * n_ok))
+
+
 def _mix_counts(workload: str, batch: int):
     mix = dict(ycsb.WORKLOADS[workload])
     n_read = int(batch * (mix.get(ycsb.OP_READ, 0)
                           + mix.get(ycsb.OP_RMW, 0)))
     n_upd = int(batch * (mix.get(ycsb.OP_UPDATE, 0)
                          + mix.get(ycsb.OP_RMW, 0)))
-    return n_read, n_upd
+    n_ins = int(batch * mix.get(ycsb.OP_INSERT, 0))
+    return n_read, n_upd, n_ins
 
 
 def run_ycsb(scheme: str, workload: str, *, num_records: int = 3000,
@@ -82,7 +98,9 @@ def run_ycsb(scheme: str, workload: str, *, num_records: int = 3000,
     """
     from repro import api
     assert workload in SIM_WORKLOADS, workload
-    slots = int(np.ceil(num_records / load_factor))
+    n_read, n_upd, n_ins = _mix_counts(workload, batch)
+    rounds = -(-num_ops // max(1, n_read + n_upd + n_ins))
+    slots = int(np.ceil((num_records + n_ins * rounds) / load_factor))
     store = api.make_store(scheme, table_slots=slots,
                            policy=api.ExecPolicy(transport="sim"))
     mem = RemoteMemory.from_policy(store.policy, link)
@@ -99,31 +117,44 @@ def run_ycsb(scheme: str, workload: str, *, num_records: int = 3000,
     # the FIRST inserted, i.e. the best-placed, flattering the multi-probe
     # baselines with an empty-table placement no aged store has)
     scramble = rng.permutation(len(loaded))
+    order_ids = list(loaded)      # insertion order (D's read-latest axis)
+    next_id = num_records
 
-    n_read, n_upd = _mix_counts(workload, batch)
     read_lat, write_lat = [], []
     ops_done = 0
     while ops_done < num_ops:
-        if n_read:
+        if workload == "D":
+            # read-latest: popularity IS recency, so the zipf ranks index
+            # the insertion order from the newest end (no scramble)
+            zipf_d = ycsb.Zipf(len(order_ids))
+            ids = np.asarray(order_ids)[len(order_ids) - 1
+                                        - zipf_d.sample(rng, n_read)]
+        elif n_read:
             ids = loaded[scramble[zipf.sample(rng, n_read)]]
+        if n_read:
             hits = store.lookup(table, ycsb.make_key(ids))
             comp = mem.post(hits.plan)
             read_lat.append(comp.op_us)
+        if n_ins:
+            ins_ids = np.arange(next_id, next_id + n_ins)
+            next_id += n_ins
+            table, ires = store.insert(table, ycsb.make_key(ins_ids),
+                                       ycsb.make_value(rng, n_ins))
+            iok = np.asarray(ires.ok)
+            order_ids.extend(int(i) for i in ins_ids[iok])
+            comp = post_ledger_writes(mem, int(iok.sum()),
+                                      int(ires.ledger.pm_writes))
+            if comp is not None:
+                write_lat.append(comp.op_us)
         if n_upd:
             ids = loaded[scramble[zipf.sample(rng, n_upd)]]
             table, ures = store.update(table, ycsb.make_key(ids),
                                        ycsb.make_value(rng, n_upd))
-            # exact-total write pricing: floor(total/ops) writes per op,
-            # with the remainder ops charging one more (the scheme's
-            # logged/fallback-path tail) — Σ per-op counts == the ledger
-            n_ok = int(np.asarray(ures.ok).sum())
-            total_pm = int(ures.ledger.pm_writes)
-            if n_ok and total_pm:
-                lo = max(1, total_pm // n_ok)
-                comp = mem.post(write_plan(n_ok, lo,
-                                           extra_ops=total_pm - lo * n_ok))
+            comp = post_ledger_writes(mem, int(np.asarray(ures.ok).sum()),
+                                      int(ures.ledger.pm_writes))
+            if comp is not None:
                 write_lat.append(comp.op_us)
-        ops_done += n_read + n_upd
+        ops_done += n_read + n_upd + n_ins
     jax.block_until_ready(table)
 
     lat = np.concatenate(read_lat + write_lat)

@@ -1,0 +1,359 @@
+"""Cluster subsystem tests: rendezvous routing stability, replicated
+fenced-write durability (with its unfenced negative control), live
+migration crash consistency, heartbeat failover, and the end-to-end
+`ClusterStore` / N-node sim invariants the ISSUE gates:
+
+  * replicated commit-fenced writes lose ZERO committed ops across every
+    primary-crash prefix (every scheme the matrix covers);
+  * a node join remaps <= 1/N + 5% of resident keys (fixed cases here,
+    a hypothesis property over random memberships when available).
+"""
+
+import numpy as np
+import pytest
+
+from repro import api
+from repro.cluster import (ClusterStore, Directory, FailoverController,
+                           check_replicated_durability,
+                           migration_crash_sweep, replication_plan)
+from repro.cluster.store import RebalanceReport
+from repro.consistency.schemes import HANDLERS, trace_batch
+from repro.data import ycsb
+from repro.rdma import verbs as rv
+
+NAMES4 = ("pm0", "pm1", "pm2", "pm3")
+
+
+def keys_of(n, base=0):
+    return ycsb.make_key(np.arange(base, base + n))
+
+
+# ---------------------------------------------------------------------------
+# directory / router
+# ---------------------------------------------------------------------------
+
+class TestDirectory:
+    def test_deterministic_and_replicas_distinct(self):
+        d = Directory(NAMES4, replicas=2)
+        K = keys_of(512)
+        s1, s2 = d.replica_names(K), d.replica_names(K)
+        assert (s1 == s2).all()
+        assert (s1[:, 0] != s1[:, 1]).all()
+        # primary is the top-weighted member
+        assert (np.asarray(d.nodes, object)[d.primaries(K)] == s1[:, 0]).all()
+
+    def test_membership_order_irrelevant(self):
+        K = keys_of(256)
+        a = Directory(("b", "a", "c")).replica_names(K)
+        b = Directory(("c", "a", "b")).replica_names(K)
+        assert (a == b).all()
+
+    def test_balance_roughly_even(self):
+        d = Directory(NAMES4)
+        prim = d.primaries(keys_of(4000))
+        counts = np.bincount(prim, minlength=4)
+        assert counts.min() > 4000 / 4 * 0.7, counts
+
+    def test_join_moves_at_most_one_nth_plus_slack(self):
+        K = keys_of(4000)
+        d = Directory(NAMES4, replicas=2)
+        d2 = d.with_node("pm4")
+        p1 = np.asarray(d.nodes, object)[d.primaries(K)]
+        p2 = np.asarray(d2.nodes, object)[d2.primaries(K)]
+        moved = p1 != p2
+        assert moved.mean() <= 1 / len(d2.nodes) + 0.05
+        # minimality: every moved key moved TO the joiner, none elsewhere
+        assert (p2[moved] == "pm4").all()
+
+    def test_leave_moves_only_the_leavers_keys(self):
+        K = keys_of(4000)
+        d = Directory(NAMES4, replicas=2)
+        d2 = d.without_node("pm2")
+        p1 = np.asarray(d.nodes, object)[d.primaries(K)]
+        p2 = np.asarray(d2.nodes, object)[d2.primaries(K)]
+        assert ((p1 != p2) == (p1 == "pm2")).all()
+
+    def test_owned_mask_roles(self):
+        d = Directory(NAMES4, replicas=2)
+        K = keys_of(300)
+        sets = d.replica_names(K)
+        for n in NAMES4:
+            assert (d.owned_mask(K, n, "primary") == (sets[:, 0] == n)).all()
+            assert (d.owned_mask(K, n, "any")
+                    == (sets == n).any(axis=1)).all()
+
+
+def test_join_stability_property():
+    """Hypothesis property: for random memberships and replica counts, a
+    join remaps <= 1/N + 5% of keys and a leave remaps only the leaver's."""
+    hypothesis = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=25, deadline=None)
+    @given(n_nodes=st.integers(min_value=2, max_value=12),
+           replicas=st.integers(min_value=1, max_value=3),
+           seed=st.integers(min_value=0, max_value=2 ** 20))
+    def prop(n_nodes, replicas, seed):
+        names = tuple(f"host{seed}-{i}" for i in range(n_nodes))
+        d = Directory(names, replicas=min(replicas, n_nodes))
+        K = ycsb.make_key(np.arange(seed, seed + 1500))
+        p1 = np.asarray(d.nodes, object)[d.primaries(K)]
+        d2 = d.with_node(f"joiner{seed}")
+        p2 = np.asarray(d2.nodes, object)[d2.primaries(K)]
+        moved = p1 != p2
+        assert moved.mean() <= 1 / (n_nodes + 1) + 0.05
+        assert (p2[moved] == f"joiner{seed}").all()
+        d3 = d2.without_node(f"joiner{seed}")
+        p3 = np.asarray(d3.nodes, object)[d3.primaries(K)]
+        assert (p3 == p1).all()      # leave is the exact inverse of join
+
+    prop()
+
+
+# ---------------------------------------------------------------------------
+# replicated fenced writes
+# ---------------------------------------------------------------------------
+
+def _loaded_store(scheme, slots=240, n=24):
+    store = api.make_store(scheme, table_slots=slots)
+    rng = np.random.RandomState(0)
+    K = keys_of(n)
+    table, res = store.insert(store.create(), K, ycsb.make_value(rng, n))
+    return store, table, K[np.asarray(res.ok)], rng
+
+
+@pytest.mark.parametrize("scheme", ["continuity", "level", "pfarm"])
+@pytest.mark.parametrize("op", ["insert", "update", "delete"])
+def test_fenced_replication_zero_committed_loss(scheme, op):
+    """The acceptance criterion: across EVERY primary-crash prefix of the
+    replica delivery, recovery of the persisted image retains every
+    acked op exactly (and per-op atomicity holds throughout)."""
+    store, table, live, rng = _loaded_store(scheme)
+    n = min(8, live.shape[0])
+    keys = keys_of(n, base=1000) if op == "insert" else live[:n]
+    vals = None if op == "delete" else ycsb.make_value(rng, n)
+    chk = check_replicated_durability(store, table, op, keys, vals,
+                                      fenced=True)
+    assert chk.acked_total > 0
+    assert chk.lost_committed == 0 and not chk.violations, chk.violations[:5]
+
+
+@pytest.mark.parametrize("scheme", ["continuity", "pfarm"])
+def test_unfenced_replication_detected_losing_acks(scheme):
+    """Negative control: ACK on NIC visibility without fences MUST be
+    caught losing committed ops — proving the checker can see real loss."""
+    store, table, live, rng = _loaded_store(scheme)
+    chk = check_replicated_durability(store, table, "update", live[:8],
+                                      ycsb.make_value(rng, 8), fenced=False)
+    assert chk.lost_committed > 0
+
+
+def test_wave_order_fenced_replication_lossless():
+    store, table, live, rng = _loaded_store("continuity")
+    chk = check_replicated_durability(store, table, "update", live[:8],
+                                      ycsb.make_value(rng, 8), fenced=True,
+                                      order="wave")
+    assert chk.zero_loss
+
+
+def test_replication_plan_shape_and_fences():
+    store, table, live, rng = _loaded_store("continuity")
+    h = HANDLERS["continuity"]
+    st = h.init_state(store.cfg, table)
+    _, trace = trace_batch(h, store.cfg, st, "update", live[:6],
+                           ycsb.make_value(rng, 6))
+    plan = replication_plan(trace)
+    assert plan.batch == 6
+    verb = np.asarray(plan.verb)
+    fence = np.asarray(plan.fence)
+    # every op: payload WRITE then commit WRITE in the SAME QP-ordered
+    # round, closed by the commit fence — continuity's 1-round write
+    assert (verb[:, 0] == rv.WRITE).all() and (verb[:, 1] == rv.WRITE).all()
+    assert not fence[:, 0].any() and fence[:, 1].all()
+    assert int(np.asarray(rv.round_trips(plan))) == 1
+
+    # the logged baseline pays extra dependent rounds: each mid-op fence
+    # (log commit, log free) closes a round before the next store may
+    # issue — the write-side round-trip asymmetry at replication time
+    pstore, ptable, plive, prng = _loaded_store("pfarm")
+    ph = HANDLERS["pfarm"]
+    pst = ph.init_state(pstore.cfg, ptable)
+    _, ptrace = trace_batch(ph, pstore.cfg, pst, "update", plive[:6],
+                            ycsb.make_value(prng, 6))
+    pplan = replication_plan(ptrace)
+    assert int(np.asarray(rv.round_trips(pplan))) > 1
+
+
+# ---------------------------------------------------------------------------
+# live migration
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("scheme", ["continuity", "level"])
+def test_migration_crash_sweep_consistent(scheme):
+    store, table, live, rng = _loaded_store(scheme, n=18)
+    keys, vals, mask = store._extract(table)
+    kn = np.asarray(keys, np.uint32)[np.asarray(mask)][:6]
+    vn = np.asarray(vals, np.uint32)[np.asarray(mask)][:6]
+    sweep = migration_crash_sweep(store, table, store.create(), kn, vn)
+    assert sweep.consistent, sweep.violations[:5]
+    assert sweep.torn_points > 0          # torn payload splits were swept
+    if scheme == "continuity":
+        assert sweep.log_free             # zero migration log
+
+
+def test_migration_rejects_non_resident_items():
+    store, table, live, rng = _loaded_store("continuity")
+    with pytest.raises(AssertionError):
+        migration_crash_sweep(store, table, store.create(), live[:2],
+                              ycsb.make_value(rng, 2))   # wrong values
+
+
+def test_matrix_migrate_cell_passes():
+    from repro.consistency import matrix
+    row = matrix.run_migration_cell("continuity")
+    assert row["ok"] and row["consistent"] and row["log_free"]
+    assert row["crash_points"] > row["torn_points"] > 0
+
+
+# ---------------------------------------------------------------------------
+# ClusterStore end to end
+# ---------------------------------------------------------------------------
+
+def _cluster(scheme="continuity", nodes=3, n=180, replicas=2):
+    cluster = ClusterStore(scheme, nodes=nodes, replicas=replicas,
+                           node_slots=640, policy=api.ExecPolicy())
+    rng = np.random.RandomState(1)
+    K = keys_of(n)
+    V = ycsb.make_value(rng, n)
+    res = cluster.insert(K, V)
+    assert np.asarray(res.ok).all()
+    return cluster, K, V, rng
+
+
+@pytest.mark.parametrize("scheme", ["continuity", "level"])
+def test_cluster_roundtrip_any_scheme(scheme):
+    cluster, K, V, rng = _cluster(scheme)
+    res = cluster.lookup(K)
+    assert np.asarray(res.found).all()
+    assert (np.asarray(res.values) == V).all()
+    # every key is resident on exactly R nodes
+    assert cluster.total_resident() == K.shape[0]
+    per_node = [cluster.stats()["nodes"][n]["resident"]
+                for n in cluster.node_names()]
+    assert sum(per_node) == 2 * K.shape[0]
+
+
+def test_cluster_update_delete_roundtrip():
+    cluster, K, V, rng = _cluster()
+    V2 = ycsb.make_value(rng, 40)
+    res = cluster.update(K[:40], V2)
+    assert np.asarray(res.ok).all()
+    res = cluster.delete(K[40:60])
+    assert np.asarray(res.ok).all()
+    out = cluster.lookup(K[:60])
+    f = np.asarray(out.found)
+    assert f[:40].all() and not f[40:].any()
+    assert (np.asarray(out.values)[:40] == V2).all()
+
+
+def test_cluster_join_rebalance_bound_and_dual_read():
+    cluster, K, V, rng = _cluster(nodes=3)
+    cluster.begin_join("pmX", 640)
+    # dual-read window: everything still readable BEFORE cutover
+    mid = cluster.lookup(K)
+    assert np.asarray(mid.found).all()
+    rb = cluster.complete_join()
+    assert isinstance(rb, RebalanceReport)
+    assert rb.within_bound, (rb.moved_frac, rb.bound)
+    assert rb.moved_primary > 0 and rb.copied >= rb.moved_primary
+    post = cluster.lookup(K)
+    assert np.asarray(post.found).all()
+    assert (np.asarray(post.values) == V).all()
+    assert cluster.total_resident() == K.shape[0]
+
+
+def test_cluster_leave_graceful():
+    cluster, K, V, rng = _cluster(nodes=4)
+    rb = cluster.leave("pm1")
+    assert "pm1" not in cluster.node_names()
+    res = cluster.lookup(K)
+    assert np.asarray(res.found).all()
+    assert (np.asarray(res.values) == V).all()
+
+
+def test_cluster_kill_primary_failover_zero_committed_loss():
+    """The end-to-end ISSUE criterion: kill a primary, promote via the
+    heartbeat controller, and every committed (replica-fenced) op must
+    read back exactly — with log-free (indicator-only) recovery."""
+    cluster, K, V, rng = _cluster(nodes=3)
+    clock = [0.0]
+    ctl = FailoverController(cluster, timeout_s=2.0, clock=lambda: clock[0])
+    victim = str(cluster.directory.replica_names(K[:1])[0, 0])
+    cluster.kill(victim)
+    # degraded reads: dead primary serves from the surviving replica
+    res = cluster.lookup(K)
+    assert np.asarray(res.found).all()
+    reports = []
+    for step in range(4):
+        clock[0] += 1.0
+        ctl.beat(step)
+        reports += ctl.tick()
+    assert [r.dead for r in reports] == [victim]
+    assert reports[0].recovery_log_free()     # indicator-based promotion
+    assert victim not in cluster.node_names()
+    res = cluster.lookup(K)
+    assert np.asarray(res.found).all()
+    assert (np.asarray(res.values) == V).all()
+    # replica count restored: every key on R nodes again
+    per_node = [cluster.stats()["nodes"][n]["resident"]
+                for n in cluster.node_names()]
+    assert sum(per_node) == 2 * K.shape[0]
+
+
+def test_cluster_failover_inside_migration_window():
+    """A primary dying mid-join must not let the later cutover resurrect
+    it; the joiner dying mid-join must void the migration entirely."""
+    cluster, K, V, rng = _cluster(nodes=3)
+    cluster.begin_join("pmX", 640)
+    victim = next(n for n in cluster.node_names() if n != "pmX")
+    cluster.kill(victim)
+    cluster.failover(victim)
+    assert cluster.migrating
+    rb = cluster.complete_join()
+    assert victim not in cluster.directory.nodes
+    assert "pmX" in cluster.directory.nodes and rb.node == "pmX"
+    res = cluster.lookup(K)
+    assert np.asarray(res.found).all()
+    assert (np.asarray(res.values) == V).all()
+
+    cluster.begin_join("pmY", 640)
+    cluster.kill("pmY")
+    cluster.failover("pmY")
+    assert not cluster.migrating          # the join is moot
+    res = cluster.lookup(K)
+    assert np.asarray(res.found).all()
+
+
+def test_cluster_sim_smoke_invariants():
+    from repro.cluster import sim
+    cell = sim.run_cluster(
+        "continuity", "A", nodes=3, replicas=2, num_records=240,
+        num_ops=480, batch=120, node_slots=768,
+        events=(("join", 160, "pmJ"), ("kill", 320, "primary")))
+    assert cell["committed_lost"] == 0
+    assert cell["rebalance_within_bound"] and cell["failover_detected"]
+    assert cell["ops_per_s"] > 0
+    kinds = [e["event"] for e in cell["events"]]
+    assert "join" in kinds and "failover" in kinds
+
+
+def test_cluster_hotspot_stream():
+    h = ycsb.Hotspot(1000)
+    ids = h.sample(np.random.RandomState(0), 20000)
+    hot = (ids < h.hot).mean()
+    assert 0.7 < hot < 0.9
+    assert ids.min() >= 0 and ids.max() < 1000
+
+
+def test_api_exports_cluster_store():
+    assert api.ClusterStore is ClusterStore

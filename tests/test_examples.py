@@ -36,9 +36,13 @@ def test_quickstart_runs():
 
 @pytest.mark.slow
 def test_ycsb_cluster_smoke_runs():
-    # 8 simulated host devices + the RDMA transport comparison; the script
-    # asserts routing consistency and the read-heavy ordering itself
-    proc = _run("ycsb_cluster.py", "--smoke", timeout=540)
+    # 8 simulated host devices + the RDMA transport comparison + the
+    # replicated cluster with a mid-run primary kill; the script asserts
+    # routing consistency, the read-heavy ordering, and zero committed-op
+    # loss across the failover itself
+    proc = _run("ycsb_cluster.py", "--smoke", "--nodes", "3",
+                "--kill-primary", timeout=540)
     assert proc.returncode == 0, proc.stderr[-2000:]
     assert "consistency check passed" in proc.stdout
     assert "ordering check passed" in proc.stdout
+    assert "failover check passed" in proc.stdout
