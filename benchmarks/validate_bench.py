@@ -36,6 +36,12 @@ committed-op loss per cell, rebalance within 1/N + 5%, failover
 detected, the fenced durability drill lossless AND its unfenced negative
 control caught losing acked ops, the migration crash sweep clean.
 
+The script also recognises a ``repro.chaos.matrix --json`` artifact
+(top-level ``cells``/``totals``/``gates``) and gates it on the chaos
+invariants: every cell ok, ``committed_lost == 0`` grid-wide, fencing
+completeness (``stale_acks_detected == stale_acks_injected``), every
+transport retry path exercised, and both degradation paths observed.
+
 Usage: python benchmarks/validate_bench.py [BENCH.json] [--assert-table1]
 Exit 0 on a valid artifact; exits 1 with the offending path else.
 """
@@ -227,6 +233,77 @@ def _check_cluster(cl) -> None:
                                    "violations")
 
 
+# the chaos gates that must hold on EVERY matrix run (repro.chaos.matrix):
+# zero committed loss anywhere, and fencing completeness — every stale
+# ack a partitioned ex-primary took was detected and discarded
+CHAOS_GATES = ("all_cells_ok", "zero_committed_loss",
+               "stale_acks_all_detected", "retry_path_drop",
+               "retry_path_backoff", "retry_path_duplicate",
+               "retry_path_reorder", "retry_path_give_up",
+               "degradation_read_only", "degradation_lag_redirect")
+CHAOS_CELL_FIELDS = ("scenario", "scheme", "workload", "seed", "checks",
+                     "ok", "committed_lost", "chaos", "wire")
+
+
+def is_chaos_artifact(payload) -> bool:
+    """A `repro.chaos.matrix --json` artifact (vs a BENCH sweep)."""
+    return isinstance(payload, dict) and "gates" in payload \
+        and "cells" in payload and "write_batch_sweep" not in payload
+
+
+def _check_chaos(payload) -> None:
+    """Schema + gate check of the seeded chaos-matrix artifact."""
+    for field in ("seed", "scheme", "profile", "grid_cells", "cells",
+                  "totals", "gates", "ok"):
+        if field not in payload:
+            _fail("$", f"chaos artifact missing {field!r}")
+    cells = payload["cells"]
+    if not isinstance(cells, list) or not cells:
+        _fail("cells", "must be a non-empty list")
+    if payload["grid_cells"] != len(cells):
+        _fail("grid_cells", f"{payload['grid_cells']!r} != {len(cells)} "
+                            f"cells present")
+    for i, cell in enumerate(cells):
+        here = f"cells[{i}]"
+        if not isinstance(cell, dict):
+            _fail(here, f"expected object, got {type(cell).__name__}")
+        for field in CHAOS_CELL_FIELDS:
+            if field not in cell:
+                _fail(here, f"missing field {field!r}")
+        if not isinstance(cell["checks"], dict) or not cell["checks"]:
+            _fail(f"{here}.checks", "must be a non-empty object")
+        for name, v in cell["checks"].items():
+            if not isinstance(v, bool):
+                _fail(f"{here}.checks.{name}", f"expected bool, got {v!r}")
+        if cell["ok"] is not all(cell["checks"].values()):
+            _fail(f"{here}.ok", "inconsistent with the cell's checks")
+        if not cell["ok"]:
+            bad = [k for k, v in cell["checks"].items() if not v]
+            _fail(here, f"{cell['scenario']} x {cell['workload']} "
+                        f"(seed {cell['seed']}) failed {bad}")
+        if cell["committed_lost"] != 0:
+            _fail(f"{here}.committed_lost",
+                  f"lost {cell['committed_lost']!r} acked ops (must be 0)")
+    totals, gates = payload["totals"], payload["gates"]
+    missing = set(CHAOS_GATES) - set(gates)
+    if missing:
+        _fail("gates", f"missing gates {sorted(missing)}")
+    if totals.get("committed_lost") != 0:
+        _fail("totals.committed_lost",
+              f"{totals.get('committed_lost')!r} acked ops lost across the "
+              f"grid (must be 0)")
+    inj = totals.get("stale_acks_injected")
+    det = totals.get("stale_acks_detected")
+    if not (isinstance(inj, int) and inj > 0 and det == inj):
+        _fail("totals", f"fencing incomplete: detected {det!r} of "
+                        f"{inj!r} injected stale acks")
+    for gate in CHAOS_GATES:
+        if gates[gate] is not True:
+            _fail(f"gates.{gate}", "gate did not hold")
+    if payload["ok"] is not True:
+        _fail("ok", "artifact reports not ok")
+
+
 def _check_crash(cc) -> None:
     if not isinstance(cc, dict) or not cc:
         _fail("crash_consistency", "must be a non-empty object")
@@ -320,6 +397,12 @@ def main(argv=None) -> int:
     with open(args.file) as f:
         payload = json.load(f)
     try:
+        if is_chaos_artifact(payload):
+            _check_chaos(payload)
+            print(f"OK {args.file}: valid chaos-matrix artifact "
+                  f"({payload['grid_cells']} cells, seed {payload['seed']}, "
+                  f"all {len(CHAOS_GATES)} gates hold)")
+            return 0
         validate(payload)
         if args.assert_table1:
             assert_table1(payload)

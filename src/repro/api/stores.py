@@ -106,6 +106,14 @@ class _ModuleStore:
         return OpResult(ok=res.found, ledger=rv.ledger_from_plan(plan),
                         values=res.values, reads=res.reads, plan=plan)
 
+    def scan_plan(self, table, keys, spans):
+        """Verb plan of a YCSB-E short-scan batch: ``spans[i]`` records
+        read starting from ``keys[i]``'s position.  Continuity emits ONE
+        contiguous multi-segment READ per scan (its SBuckets are linear
+        in PM); the scattered baselines degenerate to one READ per
+        record — the asymmetry YCSB-E measures."""
+        return self._mod.scan_plan(self.cfg, table, keys, spans)
+
     def resize(self, table, factor: int = 2) -> Tuple["_ModuleStore", Any]:
         """Rehash every live item into a ``factor``x-capacity store.
 

@@ -49,18 +49,25 @@ class FailoverController:
     """
 
     def __init__(self, cluster, timeout_s: float = 5.0,
-                 clock: Optional[Callable[[], float]] = None):
+                 clock: Optional[Callable[[], float]] = None,
+                 grace_s: float = 0.0):
         self.cluster = cluster
         kw = {"clock": clock} if clock is not None else {}
-        self.monitor = HeartbeatMonitor(timeout_s=timeout_s, **kw)
+        self.monitor = HeartbeatMonitor(timeout_s=timeout_s,
+                                        grace_s=grace_s, **kw)
         for name in cluster.node_names():
             self.monitor.register(name)
 
     def beat(self, step: int) -> None:
-        """Heartbeat every node that is actually alive (a killed node
-        goes silent — that is the failure signal)."""
+        """Heartbeat every node that is actually alive AND reachable (a
+        killed node goes silent — that is the failure signal; a
+        partitioned node is alive but its beats don't get through, which
+        is exactly what the monitor's suspect/grace window exists to
+        tell apart from death)."""
         for name in self.cluster.node_names():
-            if self.cluster.is_alive(name):
+            if (self.cluster.is_alive(name)
+                    and getattr(self.cluster, "is_reachable",
+                                lambda n: True)(name)):
                 self.monitor.heartbeat(name, step)
 
     def tick(self) -> List[FailoverReport]:

@@ -11,12 +11,25 @@ thresholds mid-run:
     ("kill",  at_op, name)   crash (name or "primary" = the node owning
                              the hottest key); heartbeats stop, the
                              `FailoverController` detects and promotes
+    ("partition", at, name)  network partition: the node stays alive but
+                             unreachable — the epoch bump fences it; the
+                             monitor's suspect/grace window decides
+                             whether it is promoted away or survives
+    ("stale", at, name)      clients that missed the partition write
+                             THROUGH the stale ex-primary (unfenced
+                             acks, all of which MUST be detected)
+    ("heal",  at, name)      the partition heals: reachable again but
+                             fenced (replica-lag reads) until resync
+    ("resync", at, name)     detect the stale acks, rebuild the shard
+                             from the current primaries, re-admit
 
-and checks the two cluster invariants the ISSUE gates:
+and checks the cluster invariants the ISSUE gates:
 
   * zero committed-op loss: every op acked before the crash is readable
     with its exact value after failover;
-  * rebalance minimality: a join moves <= 1/N + 5% of resident keys.
+  * rebalance minimality: a join moves <= 1/N + 5% of resident keys;
+  * fencing completeness: every injected stale ack is detected at
+    resync/failover and none becomes visible in the keyspace.
 
 ``python -m repro.cluster.sim --smoke --json OUT.json`` runs the CI
 drill: the N-node mixed-workload run with one join and one
@@ -62,26 +75,30 @@ def run_cluster(scheme: str = "continuity", workload: str = "A", *,
                 num_records: int = 1200, num_ops: int = 2400,
                 batch: int = 240, dist: str = "zipf",
                 events: Sequence[Event] = (), node_slots: Optional[int] = None,
-                seed: int = 0, heartbeat_timeout: float = 5.0) -> Dict:
-    """One cluster cell; deterministic given the seed.  Returns the
-    aggregate payload the bench/CI artifact stores (throughput, latency
-    percentiles, wire counters, per-event reports, invariant flags)."""
+                seed: int = 0, heartbeat_timeout: float = 5.0,
+                grace_s: float = 0.0, faults=None, retry=None) -> Dict:
+    """One cluster cell; deterministic given the seed (ONE explicit seed
+    feeds the value stream, the request stream, the scramble, and the
+    chaos injections — the returned payload echoes it so any cell can be
+    replayed bit-exactly).  ``faults``/``retry`` optionally wrap every
+    node's endpoint in the transport's delivery-fault injector and retry
+    policy; ``grace_s`` is the monitor's partition-suspicion window.
+    Returns the aggregate payload the bench/CI artifact stores."""
     assert workload in ycsb.WORKLOADS, workload
-    mix = dict(ycsb.WORKLOADS[workload])
-    n_read = int(batch * (mix.get(ycsb.OP_READ, 0) + mix.get(ycsb.OP_RMW, 0)))
-    n_upd = int(batch * (mix.get(ycsb.OP_UPDATE, 0)
-                         + mix.get(ycsb.OP_RMW, 0)))
-    n_ins = int(batch * mix.get(ycsb.OP_INSERT, 0))
+    from repro.rdma.sim import _mix_counts
+    n_read, n_upd, n_ins, n_scan, n_rmw = _mix_counts(workload, batch)
+    n_logical = n_read + n_upd + n_ins + n_scan - n_rmw
 
     # size each node for its replicated share plus rebalance headroom
     if node_slots is None:
-        per = (num_records + n_ins * (num_ops // batch)) * replicas / nodes
+        per = ((num_records + n_ins * (num_ops // max(1, n_logical)))
+               * replicas / nodes)
         node_slots = int(per * 3) + 256
     cluster = ClusterStore(scheme, nodes=nodes, replicas=replicas,
-                           node_slots=node_slots)
+                           node_slots=node_slots, faults=faults, retry=retry)
     clock = _FakeClock()
     ctl = FailoverController(cluster, timeout_s=heartbeat_timeout,
-                             clock=clock)
+                             clock=clock, grace_s=grace_s)
 
     rng = np.random.RandomState(seed)
     acked: Dict[int, np.ndarray] = {}       # record id -> committed value
@@ -114,6 +131,7 @@ def run_cluster(scheme: str = "continuity", workload: str = "A", *,
     rebalance_ok = failover_seen = True
     ops_done = step = 0
     killed: List[str] = []
+    partitioned: List[str] = []
 
     def hottest_primary() -> str:
         hot = ycsb.make_key(np.array([order[scramble[0] % len(order)]]))
@@ -153,6 +171,33 @@ def run_cluster(scheme: str = "continuity", workload: str = "A", *,
                                 "moved_frac": rb.moved_frac,
                                 "copied": rb.copied})
                 ctl.monitor.hosts.pop(name, None)
+            elif kind == "partition":
+                name = hottest_primary() if name == "primary" else name
+                cluster.partition(name)
+                partitioned.append(name)
+                reports.append({"event": "partition", "node": name,
+                                "epoch": cluster.epoch})
+            elif kind == "stale":
+                # clients that missed the partition keep writing through
+                # the stale ex-primary: divergent values on HOT keys (the
+                # worst case — if fencing leaked, the audit would read
+                # them).  None of these acks is legitimate, so none
+                # enters `acked`.
+                ranks = stream.sample(rng, 16) % len(scramble)
+                sids = np.array(order)[scramble[ranks] % len(order)]
+                n = cluster.stale_write(name, ycsb.make_key(sids),
+                                        ycsb.make_value(rng, len(sids)))
+                reports.append({"event": "stale", "node": name,
+                                "acks_injected": n})
+            elif kind == "heal":
+                cluster.heal(name)
+                reports.append({"event": "heal", "node": name})
+            elif kind == "resync":
+                hr = cluster.resync(name)
+                reports.append({"event": "resync", "node": hr.node,
+                                "stale_acks_detected":
+                                    hr.stale_acks_detected,
+                                "resynced": hr.resynced})
             else:
                 assert kind == "kill", kind
                 name = hottest_primary() if name == "primary" else name
@@ -161,15 +206,29 @@ def run_cluster(scheme: str = "continuity", workload: str = "A", *,
 
         if n_read:
             ranks = stream.sample(rng, n_read) % len(order)
-            ids = np.array(order)[scramble[ranks] % len(order)] \
+            ids = np.array(order)[scramble[ranks % len(scramble)]
+                                  % len(order)] \
                 if workload != "D" else \
                 np.array(order)[len(order) - 1 - ranks]
             res = cluster.lookup(ycsb.make_key(ids))
             read_lat.append(res.op_us[np.asarray(res.found)])
             wall_us += res.round_us
+        if n_scan:
+            # YCSB-E short scans: zipf-ranked start keys, uniform spans
+            ranks = stream.sample(rng, n_scan) % len(scramble)
+            sids = np.array(order)[scramble[ranks] % len(order)]
+            spans = ycsb.scan_lengths(rng, n_scan)
+            res = cluster.scan(ycsb.make_key(sids), spans)
+            read_lat.append(res.op_us[np.asarray(res.found)])
+            wall_us += res.round_us
         if n_upd:
-            ranks = stream.sample(rng, n_upd) % len(order)
-            ids = np.array(order)[scramble[ranks] % len(order)]
+            # F's updates are the write half of read-modify-write: they
+            # hit the keys the SAME round just read, not a fresh draw
+            if n_rmw:
+                ids = ids[-n_upd:]
+            else:
+                ranks = stream.sample(rng, n_upd) % len(scramble)
+                ids = np.array(order)[scramble[ranks] % len(order)]
             vals = ycsb.make_value(rng, n_upd)
             res = cluster.update(ycsb.make_key(ids), vals)
             okn = np.asarray(res.ok)
@@ -182,10 +241,12 @@ def run_cluster(scheme: str = "continuity", workload: str = "A", *,
             ids = np.arange(base, base + n_ins)
             load(ids, ycsb.make_value(rng, n_ins), record=True)
             stream = _stream(dist, len(order))
-        ops_done += n_read + n_upd + n_ins
+        ops_done += n_logical
 
-    # let a terminal kill drain through detection before the audit
-    for _ in range(int(heartbeat_timeout) + 2):
+    # let a terminal kill drain through detection before the audit (the
+    # horizon includes the suspicion grace window: a node is only
+    # declared failed past timeout + grace)
+    for _ in range(int(heartbeat_timeout + grace_s) + 2):
         step += 1
         clock.t += 1.0
         ctl.beat(step)
@@ -198,7 +259,9 @@ def run_cluster(scheme: str = "continuity", workload: str = "A", *,
                      or any(r["event"] == "failover" for r in reports))
 
     # the zero-committed-loss audit: EVERY acked (id, value) must read
-    # back exactly after all failures and rebalances
+    # back exactly after all failures and rebalances.  Fault injection is
+    # quiesced first — the audit measures durability, not delivery luck
+    cluster.quiesce_faults()
     audit_ids = np.array(sorted(acked))
     lost = 0
     for lo in range(0, len(audit_ids), batch):
@@ -211,9 +274,10 @@ def run_cluster(scheme: str = "continuity", workload: str = "A", *,
     lat = (np.concatenate(read_lat + write_lat)
            if read_lat or write_lat else np.zeros(1))
     return {
-        "scheme": scheme, "workload": workload, "dist": dist,
+        "scheme": scheme, "workload": workload, "dist": dist, "seed": seed,
         "nodes_initial": nodes, "nodes_final": len(cluster.node_names()),
         "replicas": replicas, "ops": ops_done,
+        "chaos": dict(cluster.chaos), "partitioned": partitioned,
         "ops_per_s": ops_done / max(wall_us, 1e-9) * 1e6,
         "p50_us": float(np.percentile(lat, 50)),
         "p99_us": float(np.percentile(lat, 99)),
@@ -286,6 +350,9 @@ def main(argv=None) -> int:
     p.add_argument("--nodes", type=int, default=4)
     p.add_argument("--replicas", type=int, default=2)
     p.add_argument("--dist", default="zipf", choices=("zipf", "hotspot"))
+    p.add_argument("--seed", type=int, default=0,
+                   help="the ONE seed every stream derives from (echoed "
+                        "in the JSON payload for bit-exact replay)")
     p.add_argument("--smoke", action="store_true",
                    help="CI sizes: small run + join + primary kill + the "
                         "durability and migration drills")
@@ -300,7 +367,7 @@ def main(argv=None) -> int:
     )
     cell = run_cluster(args.scheme, args.workload, nodes=args.nodes,
                        replicas=args.replicas, dist=args.dist,
-                       events=events, **kw)
+                       events=events, seed=args.seed, **kw)
     payload = {
         "cluster": cell,
         "durability": durability_drill(args.scheme),
@@ -311,7 +378,7 @@ def main(argv=None) -> int:
             json.dump(payload, f, indent=2, sort_keys=True, default=str)
 
     print(f"cluster {args.scheme}/{args.workload} x{args.nodes} "
-          f"(R={args.replicas}, {args.dist}): "
+          f"(R={args.replicas}, {args.dist}, seed={args.seed}): "
           f"{cell['ops_per_s']:.0f} ops/s p50={cell['p50_us']:.2f}us "
           f"p99={cell['p99_us']:.2f}us nodes {cell['nodes_initial']}->"
           f"{cell['nodes_final']}")

@@ -49,7 +49,8 @@ from repro import api
 from repro.cluster.directory import Directory
 from repro.cluster.failover import FailoverReport
 from repro.rdma.sim import post_ledger_writes
-from repro.rdma.transport import LinkModel, RemoteMemory
+from repro.rdma.transport import (DeliveryTimeout, FaultInjector, LinkModel,
+                                  RemoteMemory, RetryPolicy)
 
 U32 = np.uint32
 PAD_QUANTUM = 64
@@ -62,6 +63,21 @@ class _Node:
     table: Any
     mem: Optional[RemoteMemory]
     alive: bool = True
+    reachable: bool = True      # False while partitioned (alive, but cut off)
+    epoch: int = 0              # directory epoch the node last joined/synced
+    # (key, val, epoch) writes a stale ex-primary acked while partitioned —
+    # the fencing machinery must detect and discard EVERY one of these
+    stale_log: List[Tuple[np.ndarray, np.ndarray, int]] = \
+        dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass(frozen=True)
+class HealReport:
+    """One partition heal + resync: the fencing-epoch bookkeeping."""
+
+    node: str
+    stale_acks_detected: int    # logged stale-epoch acks fenced out
+    resynced: int               # keys re-copied from the current primaries
 
 
 @dataclasses.dataclass(frozen=True)
@@ -116,16 +132,25 @@ class ClusterStore:
     def __init__(self, scheme: str = "continuity", nodes: int = 4,
                  replicas: int = 2, node_slots: int = 2048,
                  policy: Optional[api.ExecPolicy] = None,
-                 link: Optional[LinkModel] = None):
+                 link: Optional[LinkModel] = None,
+                 faults: Optional[FaultInjector] = None,
+                 retry: Optional[RetryPolicy] = None):
         names = tuple(f"pm{i}" for i in range(nodes))
         self.scheme = scheme
         self._node_slots = node_slots
         self._policy = policy or api.ExecPolicy(transport="sim")
         self._link = link
+        self._faults = faults       # shared injector: one seeded draw stream
+        self._retry = retry
+        self.epoch = 0              # the directory/fencing epoch: bumped on
+        #                             every membership change and partition
         self.directory = Directory(names, replicas=replicas)
         self._nodes: Dict[str, _Node] = {n: self._make_node(n)
                                          for n in names}
         self._mig: Optional[_Migration] = None
+        self.chaos = {"stale_acks_injected": 0, "stale_acks_detected": 0,
+                      "writes_rejected_read_only": 0, "lag_read_redirects": 0,
+                      "write_timeouts": 0, "read_timeouts": 0}
 
     # -- membership plumbing ------------------------------------------------
     def _make_node(self, name: str, slots: Optional[int] = None) -> _Node:
@@ -133,13 +158,48 @@ class ClusterStore:
                                table_slots=slots or self._node_slots,
                                policy=self._policy)
         return _Node(name, store, store.create(),
-                     RemoteMemory.from_policy(store.policy, self._link))
+                     RemoteMemory.from_policy(store.policy, self._link,
+                                              faults=self._faults,
+                                              retry=self._retry),
+                     epoch=self.epoch)
 
     def node_names(self) -> Tuple[str, ...]:
         return tuple(self._nodes)
 
     def is_alive(self, name: str) -> bool:
         return name in self._nodes and self._nodes[name].alive
+
+    def is_reachable(self, name: str) -> bool:
+        return name in self._nodes and self._nodes[name].reachable
+
+    def _serving(self, node: _Node) -> bool:
+        """A node serves cluster traffic iff it is alive, reachable, and
+        CURRENT-EPOCH: a healed-but-not-yet-resynced node holds an old
+        epoch token, so routing fences it out until `resync` (its image
+        may carry stale-ack divergence)."""
+        return node.alive and node.reachable and node.epoch == self.epoch
+
+    def _name_serving(self, name: str) -> bool:
+        return name in self._nodes and self._serving(self._nodes[name])
+
+    def _name_lagging(self, name: str) -> bool:
+        """Healed but not yet resynced: reachable, holding an old epoch
+        token.  Readable-looking but fenced — reads redirect past it."""
+        n = self._nodes.get(name)
+        return (n is not None and n.alive and n.reachable
+                and n.epoch < self.epoch)
+
+    def serving_names(self) -> Tuple[str, ...]:
+        return tuple(n.name for n in self._nodes.values()
+                     if self._serving(n))
+
+    @property
+    def read_only(self) -> bool:
+        """Quorum-loss degradation: with fewer serving nodes than the
+        replication factor the cluster cannot place a full replica set,
+        so it stops acking writes (reads keep flowing) instead of
+        acking under-replicated data it could later lose."""
+        return len(self.serving_names()) < self.directory.replicas
 
     @property
     def migrating(self) -> bool:
@@ -150,27 +210,57 @@ class ClusterStore:
     def node(self, name: str) -> _Node:
         return self._nodes[name]
 
+    def _bump_epoch(self) -> None:
+        """Advance the fencing epoch and hand the new token to every node
+        the coordinator can still reach.  A partitioned node keeps its
+        old epoch — the fence: when it heals, routing refuses it and its
+        stale-epoch acks are detected and discarded at `resync`."""
+        cur = self.epoch
+        self.epoch += 1
+        for node in self._nodes.values():
+            # only CURRENT nodes get the new token: a healed-but-unsynced
+            # node (epoch already behind) must stay fenced through
+            # unrelated membership churn until its `resync` runs
+            if node.alive and node.reachable and node.epoch == cur:
+                node.epoch = self.epoch
+
     def _resident(self, node: _Node) -> Tuple[np.ndarray, np.ndarray]:
         keys, vals, live = node.store._extract(node.table)
         liven = np.asarray(live)
         return (np.asarray(keys, U32)[liven], np.asarray(vals, U32)[liven])
 
     def _distinct_resident(self) -> Tuple[np.ndarray, np.ndarray]:
-        """(K, V) of every distinct key on any live node (replica dedup)."""
-        seen: Dict[bytes, np.ndarray] = {}
+        """(K, V) of every distinct key on any SERVING node, taking each
+        key's value from its highest-ranked replica-set member.
+        Partitioned or stale-epoch images are excluded (their divergence
+        must never become authoritative), and a leftover copy on a node
+        that lost ownership (un-cleaned after churn — it stops receiving
+        updates the moment it leaves the set) must never outrank the
+        current owners' copy."""
+        seen: Dict[bytes, Tuple[int, np.ndarray]] = {}
         order: List[np.ndarray] = []
         for node in self._nodes.values():
-            if not node.alive:
+            if not self._serving(node):
                 continue
             K, V = self._resident(node)
-            for k, v in zip(K, V):
+            if not len(K):
+                continue
+            sets = self.directory.replica_names(K)          # (n, R)
+            member = sets == node.name
+            rank = np.where(member.any(axis=1),
+                            np.argmax(member, axis=1), sets.shape[1] + 1)
+            for k, v, r in zip(K, V, rank):
                 kb = k.tobytes()
-                if kb not in seen:
-                    seen[kb] = v
+                cur = seen.get(kb)
+                if cur is None:
                     order.append(k)
+                    seen[kb] = (int(r), v)
+                elif int(r) < cur[0]:
+                    seen[kb] = (int(r), v)
         if not order:
             return np.zeros((0, 4), U32), np.zeros((0, 4), U32)
-        return np.stack(order), np.stack([seen[k.tobytes()] for k in order])
+        return (np.stack(order),
+                np.stack([seen[k.tobytes()][1] for k in order]))
 
     # -- padded per-node sub-batches ---------------------------------------
     def _padded_write(self, op: str, node: _Node, keys: np.ndarray,
@@ -210,6 +300,12 @@ class ClusterStore:
     def _write(self, op: str, keys, vals) -> ClusterWriteResult:
         keys = np.asarray(keys, U32).reshape(-1, 4)
         B = keys.shape[0]
+        if self.read_only:
+            # quorum loss: refuse the whole batch rather than ack data the
+            # cluster cannot place on a full replica set
+            self.chaos["writes_rejected_read_only"] += B
+            return ClusterWriteResult(np.zeros((B,), bool),
+                                      np.zeros((B,)), 0.0)
         vals = None if vals is None else np.asarray(vals, U32).reshape(-1, 4)
         ok = np.ones((B,), bool)
         touched = np.zeros((B,), bool)
@@ -220,7 +316,7 @@ class ClusterStore:
         # matrix is the cluster's hottest computation
         sets_by_dir = [d.replica_names(keys) for d in dirs]
         for node in list(self._nodes.values()):
-            if not node.alive:
+            if not self._serving(node):
                 continue
             m = np.zeros((B,), bool)
             for d, sets in zip(dirs, sets_by_dir):
@@ -233,12 +329,21 @@ class ClusterStore:
             ok[m] &= okn
             touched |= m
             if node.mem is not None:
-                comp = post_ledger_writes(node.mem, int(okn.sum()),
-                                          int(res.ledger.pm_writes))
+                try:
+                    comp = post_ledger_writes(node.mem, int(okn.sum()),
+                                              int(res.ledger.pm_writes))
+                except DeliveryTimeout:
+                    # the retry budget drained before this member's fenced
+                    # round completed: the member's ops are NOT acked (the
+                    # client never saw the commit), which keeps the
+                    # zero-committed-loss invariant trivially true for them
+                    self.chaos["write_timeouts"] += 1
+                    ok[m] = False
+                    continue
                 if comp is not None:
                     lat[np.flatnonzero(m)[okn]] += comp.op_us   # chain sum
                     round_us = max(round_us, comp.batch_us)
-        ok &= touched           # no live member -> not acked
+        ok &= touched           # no serving member -> not acked
         return ClusterWriteResult(ok, lat, round_us)
 
     # -- reads --------------------------------------------------------------
@@ -260,25 +365,78 @@ class ClusterStore:
     def _lookup_via(self, d: Directory, keys, mask, values, found,
                     lat) -> float:
         sets = d.replica_names(keys)                       # (B, R) names
-        # serve from the first ALIVE member: a dead primary degrades to
-        # replica reads until failover promotes
-        alive = np.vectorize(self.is_alive)(sets)
-        has = alive.any(axis=1)
-        first = np.argmax(alive, axis=1)
+        # serve from the first SERVING member: a dead, partitioned, or
+        # fenced (lagging) primary degrades to replica reads until
+        # failover promotes / resync re-admits it
+        serving = np.vectorize(self._name_serving)(sets)
+        has = serving.any(axis=1)
+        first = np.argmax(serving, axis=1)
+        # a healed-but-lagging replica ranked ahead of the member chosen
+        # forces a redirect — the replica-lag read path the chaos matrix
+        # measures (stale images must never serve)
+        lagging = np.vectorize(self._name_lagging)(sets)
+        rank = np.arange(sets.shape[1])[None, :]
+        self.chaos["lag_read_redirects"] += int(
+            (mask[:, None] & has[:, None] & lagging
+             & (rank < first[:, None])).any(axis=1).sum())
         target = np.where(has, sets[np.arange(len(first)), first], "")
         round_us = 0.0
         for name in np.unique(target[mask & has]):
             node = self._nodes[name]
             m = mask & has & (target == name)
             vs, fs, res = self._padded_lookup(node, keys[m])
-            values[m] = np.where(fs[:, None], vs, values[m])
-            found[m] |= fs
             if node.mem is not None and res.plan is not None:
-                comp = node.mem.post(res.plan)
+                try:
+                    comp = node.mem.post(res.plan)
+                except DeliveryTimeout:
+                    # delivery gave up: the client saw nothing — these ops
+                    # stay unresolved (a dual-read window may still retry
+                    # them on the other directory's owner)
+                    self.chaos["read_timeouts"] += 1
+                    continue
                 lat[m] = np.maximum(lat[m],
                                     comp.op_us[: int(m.sum())])
                 round_us = max(round_us, comp.batch_us)
+            values[m] = np.where(fs[:, None], vs, values[m])
+            found[m] |= fs
         return round_us
+
+    def scan(self, keys, spans) -> ClusterReadResult:
+        """YCSB-E short scans: route each scan's START key to its serving
+        primary and post the scheme's multi-record scan plan (continuity:
+        ONE contiguous multi-row READ; the probe baselines: one scattered
+        READ per record).  Rendezvous hashing randomizes placement, so a
+        scan is the contiguous PM range around the start record on its
+        owner — it never spans shards.  ``found`` reports the start
+        record resolving; the fetched range rides in the plan's bytes."""
+        keys = np.asarray(keys, U32).reshape(-1, 4)
+        spans = np.maximum(np.asarray(spans, np.int64).reshape(-1), 1)
+        B = keys.shape[0]
+        values = np.zeros((B, 4), U32)
+        found = np.zeros((B,), bool)
+        lat = np.zeros((B,))
+        sets = self.directory.replica_names(keys)
+        serving = np.vectorize(self._name_serving)(sets)
+        has = serving.any(axis=1)
+        first = np.argmax(serving, axis=1)
+        target = np.where(has, sets[np.arange(len(first)), first], "")
+        round_us = 0.0
+        for name in np.unique(target[has]):
+            node = self._nodes[name]
+            m = has & (target == name)
+            vs, fs, _ = self._padded_lookup(node, keys[m])
+            if node.mem is not None:
+                plan = node.store.scan_plan(node.table, keys[m], spans[m])
+                try:
+                    comp = node.mem.post(plan)
+                except DeliveryTimeout:
+                    self.chaos["read_timeouts"] += 1
+                    continue
+                lat[m] = comp.op_us[: int(m.sum())]
+                round_us = max(round_us, comp.batch_us)
+            values[m] = np.where(fs[:, None], vs, values[m])
+            found[m] |= fs
+        return ClusterReadResult(values, found, lat, round_us)
 
     # -- rebalance: live join / leave ---------------------------------------
     def begin_join(self, name: str,
@@ -312,6 +470,7 @@ class ClusterStore:
         joined = set(mig.new_dir.nodes) - set(self.directory.nodes)
         self.directory = mig.new_dir
         self._mig = None
+        self._bump_epoch()
         cleaned = self._cleanup()
         return RebalanceReport(
             kind="join", node=next(iter(joined)), resident=mig.resident,
@@ -349,6 +508,7 @@ class ClusterStore:
             moved_primary = 0
         self.directory = new_dir
         del self._nodes[name]
+        self._bump_epoch()
         return RebalanceReport(
             kind="leave", node=name, resident=len(K),
             moved_primary=moved_primary, copied=copied, cleaned=0,
@@ -357,7 +517,7 @@ class ClusterStore:
     def _cleanup(self) -> int:
         cleaned = 0
         for node in self._nodes.values():
-            if not node.alive:
+            if not self._serving(node):
                 continue
             K, _ = self._resident(node)
             if not len(K):
@@ -375,12 +535,149 @@ class ClusterStore:
         `FailoverController`'s job."""
         self._nodes[name].alive = False
 
+    # -- partitions & fencing ----------------------------------------------
+    def partition(self, name: str) -> None:
+        """Cut a node off the cluster network: it stays ALIVE (its image
+        keeps accepting whatever `stale_write` injects) but the
+        coordinator cannot reach it.  The epoch bump is the fence —
+        every reachable node gets the new token, the partitioned node
+        keeps the old one, and `_serving` refuses it from then on."""
+        node = self._nodes[name]
+        assert node.alive and node.reachable, name
+        node.reachable = False
+        self._bump_epoch()
+
+    def heal(self, name: str) -> None:
+        """The partition heals: the node is reachable again but still
+        holds its OLD epoch token, so routing keeps it fenced (the
+        replica-lag window) until `resync` reconciles its image."""
+        node = self._nodes[name]
+        assert node.alive and not node.reachable, name
+        node.reachable = True
+
+    def stale_write(self, name: str, keys, vals) -> int:
+        """A client that has not heard about the partition writes THROUGH
+        the stale ex-primary, which acks alone — the unfenced-ack hazard
+        `replication.check_replicated_durability`'s negative control
+        demonstrates.  Every such ack is logged with the node's (stale)
+        epoch; `resync` or `failover` must detect ALL of them
+        (``chaos['stale_acks_detected'] == chaos['stale_acks_injected']``
+        is the matrix gate) and none may survive into the keyspace."""
+        node = self._nodes[name]
+        assert node.alive and not node.reachable, name
+        keys = np.asarray(keys, U32).reshape(-1, 4)
+        vals = np.asarray(vals, U32).reshape(-1, 4)
+        _, fnd, _ = self._padded_lookup(node, keys)
+        if fnd.any():
+            self._padded_write("update", node, keys[fnd], vals[fnd])
+        if (~fnd).any():
+            self._padded_write("insert", node, keys[~fnd], vals[~fnd])
+        node.stale_log.append((keys, vals, node.epoch))
+        self.chaos["stale_acks_injected"] += int(keys.shape[0])
+        return int(keys.shape[0])
+
+    def _detect_stale(self, node: _Node) -> int:
+        """Fence check: every logged ack carrying an epoch older than the
+        directory's is detected (and its divergence discarded with the
+        image).  Returns the count and clears the log."""
+        detected = sum(len(k) for k, _, e in node.stale_log
+                       if e < self.epoch)
+        node.stale_log.clear()
+        self.chaos["stale_acks_detected"] += detected
+        return detected
+
+    def resync(self, name: str) -> HealReport:
+        """Re-admit a healed node by RECONCILING its image against the
+        serving replicas — never by wiping it, because the node may hold
+        the sole surviving copy of committed keys whose co-replica died
+        while it was partitioned.  Three passes:
+
+          1. stale-ack repair: every key the node acked while fenced is
+             overwritten from the current primaries where they hold it
+             and DELETED where they do not (a stale insert must not
+             resurface as a legitimate sole copy);
+          2. catch-up: every authoritative key the node owns is inserted
+             if missing and overwritten if divergent (writes it missed
+             while out of the set);
+          3. garbage: copies of keys it no longer owns are dropped (they
+             stop receiving updates and would silently go stale).
+
+        Then the node gets the current epoch token and `_serving`
+        accepts it again."""
+        node = self._nodes[name]
+        assert node.alive and node.reachable, name
+        assert node.epoch < self.epoch, f"{name} is already current"
+        stale_keys = (np.concatenate(
+            [k for k, _, e in node.stale_log if e < self.epoch])
+            if node.stale_log else np.zeros((0, 4), U32))
+        detected = self._detect_stale(node)
+        K, V = self._distinct_resident()    # authoritative (excludes node)
+        auth = {k.tobytes() for k in K}
+        if len(stale_keys):
+            held = np.array([k.tobytes() in auth for k in stale_keys],
+                            bool)
+            if (~held).any():
+                self._padded_write("delete", node, stale_keys[~held], None)
+            # held ones are refreshed by the catch-up pass below
+        resynced = 0
+        if len(K):
+            own = self.directory.owned_mask(K, name)
+            if own.any():
+                Ko, Vo = K[own], V[own]
+                vs, have, _ = self._padded_lookup(node, Ko)
+                div = have & (vs != Vo).any(axis=1)
+                if (~have).any():
+                    okn, _ = self._padded_write("insert", node, Ko[~have],
+                                                Vo[~have])
+                    resynced += int(okn.sum())
+                if div.any():
+                    okn, _ = self._padded_write("update", node, Ko[div],
+                                                Vo[div])
+                    resynced += int(okn.sum())
+        Kn, Vn = self._resident(node)
+        if len(Kn):
+            unowned = ~self.directory.owned_mask(Kn, name)
+            in_auth = np.array([k.tobytes() in auth for k in Kn], bool)
+            # an un-owned key with NO authoritative holder is a sole
+            # surviving copy (its owners died while this node was out):
+            # re-home it to its serving owners before dropping it here
+            orphan = unowned & ~in_auth
+            if orphan.any():
+                osets = self.directory.replica_names(Kn[orphan])
+                for other in self._nodes.values():
+                    if other is node or not self._serving(other):
+                        continue
+                    g = (osets == other.name).any(axis=1)
+                    if g.any():
+                        self._padded_write("insert", other,
+                                           Kn[orphan][g], Vn[orphan][g])
+            if unowned.any():
+                self._padded_write("delete", node, Kn[unowned], None)
+        node.epoch = self.epoch
+        return HealReport(node=name, stale_acks_detected=detected,
+                          resynced=resynced)
+
+    def quiesce_faults(self) -> None:
+        """Disable delivery-fault injection on every endpoint (and for
+        nodes made later).  The audit phase calls this: it measures
+        durability, not delivery luck — a dropped audit READ must not
+        masquerade as lost data."""
+        self._faults = None
+        for node in self._nodes.values():
+            if node.mem is not None:
+                node.mem.faults = None
+
     def failover(self, dead: str) -> FailoverReport:
-        """Promote the dead node's replicas: directory removal re-ranks
+        """Promote the failed node's replicas: directory removal re-ranks
         them to primary, every survivor runs its scheme's restart
         procedure on its (possibly mid-write) image, and the lost
-        replica count is restored from the new primaries."""
-        assert dead in self._nodes and not self._nodes[dead].alive, dead
+        replica count is restored from the new primaries.  ``dead`` may
+        be crashed OR partitioned past the suspicion grace window — a
+        partitioned ex-primary is fenced out the same way, and every
+        stale ack it took is detected here."""
+        node = self._nodes[dead]
+        assert not (node.alive and node.reachable), dead
+        self._detect_stale(node)
         old_dir = self.directory
         if dead not in old_dir.nodes:
             # a joiner died inside its own migration window: it owned
@@ -405,26 +702,40 @@ class ClusterStore:
                 self._mig = dataclasses.replace(self._mig, new_dir=nd)
         recovery = {}
         for node in self._nodes.values():
-            if not node.alive:
+            if not self._serving(node):
                 continue
             node.table, report = node.store.recover(node.table)
             recovery[node.name] = report
         del self._nodes[dead]
         self.directory = new_dir
+        self._bump_epoch()
         K, V = self._distinct_resident()
         promoted = recopied = 0
         if len(K):
             promoted = int((old_dir.replica_names(K)[:, 0] == dead).sum())
             new_sets = new_dir.replica_names(K)
             for node in self._nodes.values():
+                if not self._serving(node):
+                    continue
                 need = (new_sets == node.name).any(axis=1)
                 if not need.any():
                     continue
-                _, have, _ = self._padded_lookup(node, K[need])
+                vs, have, _ = self._padded_lookup(node, K[need])
+                # backfill missing copies AND refresh stale ones: a node
+                # re-entering a key's replica set after churn may hold a
+                # leftover copy that stopped receiving updates while it
+                # was out of the set — re-ranked to primary, that stale
+                # copy would serve unless re-replication overwrites it
+                stale = have & (vs != V[need]).any(axis=1)
                 miss = np.flatnonzero(need)[~have]
+                fix = np.flatnonzero(need)[stale]
                 if len(miss):
                     okn, _ = self._padded_write("insert", node, K[miss],
                                                 V[miss])
+                    recopied += int(okn.sum())
+                if len(fix):
+                    okn, _ = self._padded_write("update", node, K[fix],
+                                                V[fix])
                     recopied += int(okn.sum())
         return FailoverReport(dead=dead, promoted_keys=promoted,
                               recopied=recopied, recovery=recovery)
@@ -435,9 +746,12 @@ class ClusterStore:
 
     def stats(self) -> dict:
         out = {"scheme": self.scheme, "nodes": {}, "replicas":
-               self.directory.replicas, "migrating": self._mig is not None}
+               self.directory.replicas, "migrating": self._mig is not None,
+               "epoch": self.epoch, "read_only": self.read_only,
+               "chaos": dict(self.chaos)}
         for node in self._nodes.values():
-            st = {"alive": node.alive,
+            st = {"alive": node.alive, "reachable": node.reachable,
+                  "epoch": node.epoch,
                   "resident": int(len(self._resident(node)[0]))}
             if node.mem is not None:
                 st["wire"] = node.mem.stats()

@@ -114,6 +114,16 @@ def lookup_plan(cfg: DenseConfig, t: DenseTable, keys, res: LookupResult):
         (rv.READ, rv.REGION_TABLE, 0, cfg.table_bytes, 0, False)])
 
 
+def scan_plan(cfg: DenseConfig, t: DenseTable, keys, spans):
+    """Verb plan of a YCSB-E scan batch: dense storage is contiguous, so
+    like lookup this degenerates to one whole-table READ per scan (a
+    local-only layout priced at its remote worst case)."""
+    from repro.rdma import verbs as rv
+    keys = jnp.asarray(keys, U32).reshape(-1, KEY_LANES)
+    return rv.pack(keys.shape[0], [
+        (rv.READ, rv.REGION_TABLE, 0, cfg.table_bytes, 0, False)])
+
+
 def _batch(keys, vals, mask):
     keys = jnp.asarray(keys, U32).reshape(-1, KEY_LANES)
     B = keys.shape[0]

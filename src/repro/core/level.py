@@ -26,6 +26,7 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import pmem
 from repro.core.continuity import KEY_LANES, VAL_LANES, SLOT_BYTES
@@ -170,6 +171,29 @@ def lookup_plan(cfg: LevelConfig, t: LevelTable, keys, res: LookupResult):
         (jnp.where(act[:, j], rv.READ, rv.NOOP), rv.REGION_TABLE,
          off[:, j], cfg.bucket_bytes, rank[:, j], False)
         for j in range(4)])
+
+
+def scan_plan(cfg: LevelConfig, t: LevelTable, keys, spans):
+    """Verb plan of a YCSB-E short-scan batch: level hashing has NO
+    contiguous range — the two hash functions scatter adjacent records
+    over the whole top/bottom array — so a span-record scan degenerates
+    to one scattered bucket READ per record (the per-record walk a
+    hash-scattered layout forces, each record hashed independently).
+    All reads are independent (depth 0): the client knows every record's
+    bucket up front, but pays ``span`` verbs where continuity pays one."""
+    from repro.rdma import verbs as rv
+    keys = jnp.asarray(keys, U32).reshape(-1, KEY_LANES)
+    spans = np.maximum(np.asarray(spans, np.int32).reshape(-1), 1)
+    M = int(spans.max())
+    home = (hash128(keys) % U32(cfg.num_top)).astype(jnp.int32)
+    lanes = []
+    for j in range(M):
+        act = j < spans
+        # j-th record of the scan: an unrelated bucket (scattered layout)
+        off = ((home + j * 7 + 1) % cfg.num_top) * cfg.bucket_bytes
+        lanes.append((jnp.where(act, rv.READ, rv.NOOP), rv.REGION_TABLE,
+                      off, cfg.bucket_bytes, 0, False))
+    return rv.pack(keys.shape[0], lanes)
 
 
 # -- server-side ops (scan-serialized like the other schemes) ----------------

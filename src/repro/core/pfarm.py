@@ -179,6 +179,35 @@ def lookup_plan(cfg: PFarmConfig, t: PFarmTable, keys, res: LookupResult):
     return rv.pack(keys.shape[0], lanes)
 
 
+def scan_plan(cfg: PFarmConfig, t: PFarmTable, keys, spans):
+    """Verb plan of a YCSB-E short-scan batch: FaRM-KV's hopscotch layout
+    scatters adjacent records over unrelated windows, so a span-record
+    scan is one whole-window READ per record — and every record whose
+    window overflowed adds a chained dependent block READ (depth 1),
+    modelled here for the records past the first window's capacity.
+    The most expensive scan of the three remote schemes: span wide
+    window fetches where continuity posts one contiguous verb."""
+    import numpy as np
+    from repro.rdma import verbs as rv
+    keys = jnp.asarray(keys, U32).reshape(-1, KEY_LANES)
+    spans = np.maximum(np.asarray(spans, np.int32).reshape(-1), 1)
+    M = int(spans.max())
+    home = _home(cfg, keys).astype(jnp.int32)
+    bucket_stride = cfg.bucket_slots * SLOT_BYTES + 8      # slots + token
+    lanes = []
+    for j in range(M):
+        act = j < spans
+        off = ((home + j * 5 + 1) % cfg.num_buckets) * bucket_stride
+        lanes.append((jnp.where(act, rv.READ, rv.NOOP), rv.REGION_TABLE,
+                      off, cfg.window_bytes, 0, False))
+        # records past the window's neighbourhood walk a chain hop
+        if j + 1 > cfg.window:
+            lanes.append((jnp.where(act, rv.READ, rv.NOOP), rv.REGION_EXT,
+                          (off // bucket_stride % max(1, cfg.pool_blocks))
+                          * cfg.block_bytes, cfg.block_bytes, 1, False))
+    return rv.pack(keys.shape[0], lanes)
+
+
 # -- server-side ops ---------------------------------------------------------
 
 def _insert_one(cfg, t: PFarmTable, key, val, active):

@@ -6,12 +6,18 @@ values):
   B: 95% read / 5% update           (read-mostly)
   C: 100% read                      (read-only; positive search)
   D: 95% read / 5% insert, reads target LATEST inserts (read-latest)
+  E: 95% scan / 5% insert           (short range scans — the workload
+                                     continuity's contiguous SBuckets
+                                     are built for: a scan is ONE
+                                     contiguous segment-range READ)
   F: 50% read / 50% read-modify-write
 plus the paper's microbenchmarks: insert-only, update-only, delete-only,
 positive/negative search.
 
 Request distributions: zipfian (theta=0.99, YCSB default) for A/B/C/F,
-"latest" for D, uniform for microbenchmarks.
+"latest" for D, uniform for microbenchmarks.  E's scan lengths are
+uniform on [1, MAX_SCAN_LEN] (YCSB's uniform default, shortened to keep
+sim cells small).
 """
 
 from __future__ import annotations
@@ -21,15 +27,24 @@ from typing import Iterator, Tuple
 
 import numpy as np
 
-OP_READ, OP_UPDATE, OP_INSERT, OP_RMW, OP_DELETE = 0, 1, 2, 3, 4
+OP_READ, OP_UPDATE, OP_INSERT, OP_RMW, OP_DELETE, OP_SCAN = 0, 1, 2, 3, 4, 5
+
+MAX_SCAN_LEN = 16       # YCSB-E max scan length (uniform in [1, max])
 
 WORKLOADS = {
     "A": [(OP_READ, 0.5), (OP_UPDATE, 0.5)],
     "B": [(OP_READ, 0.95), (OP_UPDATE, 0.05)],
     "C": [(OP_READ, 1.0)],
     "D": [(OP_READ, 0.95), (OP_INSERT, 0.05)],
+    "E": [(OP_SCAN, 0.95), (OP_INSERT, 0.05)],
     "F": [(OP_READ, 0.5), (OP_RMW, 0.5)],
 }
+
+
+def scan_lengths(rng: np.random.RandomState, n: int,
+                 max_len: int = MAX_SCAN_LEN) -> np.ndarray:
+    """YCSB-E scan lengths: uniform integers in [1, max_len]."""
+    return rng.randint(1, max_len + 1, size=n)
 
 
 def make_key(ids: np.ndarray) -> np.ndarray:

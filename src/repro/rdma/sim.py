@@ -33,9 +33,11 @@ from repro.rdma.transport import LinkModel, RemoteMemory
 
 COMMIT_BYTES = 8        # the 8-byte atomic indicator/token commit word
 
-# read-heavy YCSB mixes the simulation drives (paper §V-A); D is the
-# read-latest mix (95% read / 5% insert, reads skewed to newest keys)
-SIM_WORKLOADS = ("A", "B", "C", "D")
+# YCSB mixes the simulation drives (paper §V-A): A/B/C the paper's trio,
+# D read-latest (95% read / 5% insert, reads skewed to newest keys),
+# E short scans (95% scan / 5% insert — continuity's contiguous-SBucket
+# showcase), F read-modify-write (50% read / 50% RMW on the SAME key)
+SIM_WORKLOADS = ("A", "B", "C", "D", "E", "F")
 
 
 def write_plan(B: int, pm_per_op: int, extra_ops: int = 0,
@@ -78,13 +80,17 @@ def post_ledger_writes(mem: RemoteMemory, n_ok: int, total_pm: int):
 
 
 def _mix_counts(workload: str, batch: int):
+    """(reads, updates, inserts, scans, rmw) per batch.  An RMW op counts
+    toward BOTH reads and updates (it posts a read round then a fenced
+    write round on the same key); ``rmw`` is the overlap so callers can
+    count logical ops as ``reads + updates + inserts + scans - rmw``."""
     mix = dict(ycsb.WORKLOADS[workload])
-    n_read = int(batch * (mix.get(ycsb.OP_READ, 0)
-                          + mix.get(ycsb.OP_RMW, 0)))
-    n_upd = int(batch * (mix.get(ycsb.OP_UPDATE, 0)
-                         + mix.get(ycsb.OP_RMW, 0)))
+    n_rmw = int(batch * mix.get(ycsb.OP_RMW, 0))
+    n_read = int(batch * mix.get(ycsb.OP_READ, 0)) + n_rmw
+    n_upd = int(batch * mix.get(ycsb.OP_UPDATE, 0)) + n_rmw
     n_ins = int(batch * mix.get(ycsb.OP_INSERT, 0))
-    return n_read, n_upd, n_ins
+    n_scan = int(batch * mix.get(ycsb.OP_SCAN, 0))
+    return n_read, n_upd, n_ins, n_scan, n_rmw
 
 
 def run_ycsb(scheme: str, workload: str, *, num_records: int = 3000,
@@ -98,8 +104,9 @@ def run_ycsb(scheme: str, workload: str, *, num_records: int = 3000,
     """
     from repro import api
     assert workload in SIM_WORKLOADS, workload
-    n_read, n_upd, n_ins = _mix_counts(workload, batch)
-    rounds = -(-num_ops // max(1, n_read + n_upd + n_ins))
+    n_read, n_upd, n_ins, n_scan, n_rmw = _mix_counts(workload, batch)
+    n_logical = n_read + n_upd + n_ins + n_scan - n_rmw
+    rounds = -(-num_ops // max(1, n_logical))
     slots = int(np.ceil((num_records + n_ins * rounds) / load_factor))
     store = api.make_store(scheme, table_slots=slots,
                            policy=api.ExecPolicy(transport="sim"))
@@ -135,6 +142,17 @@ def run_ycsb(scheme: str, workload: str, *, num_records: int = 3000,
             hits = store.lookup(table, ycsb.make_key(ids))
             comp = mem.post(hits.plan)
             read_lat.append(comp.op_us)
+        if n_scan:
+            # YCSB-E short scans: start key zipf-ranked, span uniform.
+            # The scan's wire cost IS the scan plan (the start record
+            # rides inside the fetched range — nothing else is posted);
+            # the jitted lookup runs for start-key correctness only.
+            starts = loaded[scramble[zipf.sample(rng, n_scan)]]
+            spans = ycsb.scan_lengths(rng, n_scan)
+            skeys = ycsb.make_key(starts)
+            store.lookup(table, skeys)
+            comp = mem.post(store.scan_plan(table, skeys, spans))
+            read_lat.append(comp.op_us)
         if n_ins:
             ins_ids = np.arange(next_id, next_id + n_ins)
             next_id += n_ins
@@ -147,14 +165,18 @@ def run_ycsb(scheme: str, workload: str, *, num_records: int = 3000,
             if comp is not None:
                 write_lat.append(comp.op_us)
         if n_upd:
-            ids = loaded[scramble[zipf.sample(rng, n_upd)]]
+            # F's updates are the write half of read-modify-write: they
+            # target the keys the SAME round just read (the RMW tail of
+            # the read batch), not an independent zipf draw
+            ids = (ids[-n_upd:] if n_rmw
+                   else loaded[scramble[zipf.sample(rng, n_upd)]])
             table, ures = store.update(table, ycsb.make_key(ids),
                                        ycsb.make_value(rng, n_upd))
             comp = post_ledger_writes(mem, int(np.asarray(ures.ok).sum()),
                                       int(ures.ledger.pm_writes))
             if comp is not None:
                 write_lat.append(comp.op_us)
-        ops_done += n_read + n_upd + n_ins
+        ops_done += n_logical
     jax.block_until_ready(table)
 
     lat = np.concatenate(read_lat + write_lat)

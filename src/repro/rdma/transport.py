@@ -32,6 +32,75 @@ import numpy as np
 from repro.rdma import verbs as rv
 
 
+class DeliveryTimeout(RuntimeError):
+    """A verb round exhausted its retry budget (every attempt dropped)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Per-round timeout + capped exponential backoff with jitter.
+
+    A doorbell round whose completion does not arrive within
+    ``timeout_us`` is retried after ``backoff_us(attempt)`` of waiting:
+    ``base_us * 2**attempt`` capped at ``cap_us``, with a ``jitter``
+    fraction of the delay randomized (decorrelates retry storms across
+    clients — the rng is injected so runs stay seeded).  Retrying a
+    FENCED WRITE round is idempotent by construction: payload stores are
+    blind writes and the round's commit is ONE atomic 8-byte indicator
+    store, so a replayed prefix can never be observed half-applied
+    (tests/test_chaos.py proves this per scheme over every prefix).
+    After ``max_attempts`` total attempts the round raises
+    `DeliveryTimeout` — the caller's failure-suspicion signal.
+    """
+
+    timeout_us: float = 50.0
+    max_attempts: int = 8
+    base_us: float = 4.0
+    cap_us: float = 200.0
+    jitter: float = 0.5
+
+    def backoff_us(self, attempt: int,
+                   rng: Optional[np.random.RandomState] = None) -> float:
+        d = min(self.base_us * (2.0 ** attempt), self.cap_us)
+        if rng is None or self.jitter <= 0.0:
+            return d
+        return d * (1.0 - self.jitter + self.jitter * rng.random_sample())
+
+
+@dataclasses.dataclass
+class FaultInjector:
+    """Seeded delivery faults for one endpoint (the chaos engine's knob).
+
+    Each doorbell round independently draws one outcome: ``drop`` (the
+    round vanishes — the client times out and retries), ``dup`` (the NIC
+    delivers the round twice — harmless for reads and for fenced write
+    rounds, which are idempotent, but the duplicate's verbs/bytes are
+    paid), ``reorder`` (verbs within the round arrive out of post order —
+    legal inside one doorbell, no intra-round ordering is guaranteed, but
+    the completion is skewed by one extra RTT), or clean delivery.
+    Deterministic given the seed and call order.
+    """
+
+    drop_p: float = 0.0
+    dup_p: float = 0.0
+    reorder_p: float = 0.0
+    seed: int = 0
+
+    def __post_init__(self):
+        self.rng = np.random.RandomState(self.seed)
+        self.injected = {"drop": 0, "dup": 0, "reorder": 0}
+
+    def draw(self) -> str:
+        u = self.rng.random_sample()
+        for kind, p in (("drop", self.drop_p), ("dup", self.dup_p),
+                        ("reorder", self.reorder_p)):
+            if u < p:
+                self.injected[kind] += 1
+                return kind
+            u -= p
+        return "ok"
+
+
 @dataclasses.dataclass(frozen=True)
 class LinkModel:
     """Analytical RDMA + PM cost constants (microseconds / bytes-per-us).
@@ -91,26 +160,76 @@ class RemoteMemory:
     the plans jitted code returns (`OpResult.plan` is a pure pytree).
     """
 
-    def __init__(self, link: Optional[LinkModel] = None):
+    def __init__(self, link: Optional[LinkModel] = None,
+                 faults: Optional[FaultInjector] = None,
+                 retry: Optional[RetryPolicy] = None):
         self.link = link or LinkModel()
+        self.faults = faults
+        # faults without a retry policy would silently lose rounds; the
+        # default policy makes every drop a timeout + backoff + replay
+        self.retry = retry or (RetryPolicy() if faults is not None else None)
         self.total_us = 0.0
         self.doorbells = 0
         self.posts = 0
         self.total_verbs = 0
         self.total_bytes = 0
+        self.retries = 0        # rounds replayed after a timeout
+        self.timeouts = 0       # dropped deliveries waited out
+        self.duplicates = 0     # rounds the NIC delivered twice
+        self.reorders = 0       # intra-round reordered deliveries
+        self.backoff_us = 0.0   # total backoff waited before replays
+        self.give_ups = 0       # rounds that exhausted max_attempts
 
     @classmethod
-    def from_policy(cls, policy,
-                    link: Optional[LinkModel] = None) -> Optional["RemoteMemory"]:
+    def from_policy(cls, policy, link: Optional[LinkModel] = None,
+                    faults: Optional[FaultInjector] = None,
+                    retry: Optional[RetryPolicy] = None
+                    ) -> Optional["RemoteMemory"]:
         """Transport selection threaded through `api.ExecPolicy`: returns an
         endpoint for ``transport="sim"``, None for ``transport="none"``."""
         if getattr(policy, "transport", "none") == "none":
             return None
-        return cls(link)
+        return cls(link, faults=faults, retry=retry)
+
+    def _deliver_round(self, round_cost_us: float) -> float:
+        """One doorbell round through the fault/retry loop: returns the
+        simulated time the round took (clean = RTT + service; each drop
+        adds a timeout + backoff; a duplicate pays the service twice; a
+        reorder skews completion by one RTT).  Raises `DeliveryTimeout`
+        when ``retry.max_attempts`` deliveries all dropped."""
+        clean = self.link.rtt_us + round_cost_us
+        if self.faults is None:
+            return clean
+        assert self.retry is not None
+        spent = 0.0
+        for attempt in range(self.retry.max_attempts):
+            outcome = self.faults.draw()
+            if outcome == "drop":
+                self.timeouts += 1
+                self.retries += 1
+                back = self.retry.backoff_us(attempt, self.faults.rng)
+                self.backoff_us += back
+                spent += self.retry.timeout_us + back
+                continue
+            if outcome == "dup":
+                self.duplicates += 1
+                return spent + clean + round_cost_us   # second copy drains too
+            if outcome == "reorder":
+                self.reorders += 1
+                return spent + clean + self.link.rtt_us
+            return spent + clean
+        self.give_ups += 1
+        raise DeliveryTimeout(
+            f"round dropped {self.retry.max_attempts} times "
+            f"(waited {spent:.1f}us)")
 
     def post(self, plan: rv.VerbPlan) -> Completion:
         """Execute one doorbell-batched verb plan; returns its `Completion`
-        and folds it into the endpoint's aggregate counters."""
+        and folds it into the endpoint's aggregate counters.  With a
+        `FaultInjector` attached, every dependent round runs the
+        timeout/backoff/replay loop — a `DeliveryTimeout` propagates to
+        the caller with the endpoint's clock already advanced (the wait
+        happened on the wire whether or not the round landed)."""
         verb = np.asarray(plan.verb)
         nbytes = np.asarray(plan.nbytes)
         depth = np.asarray(plan.depth)
@@ -120,10 +239,15 @@ class RemoteMemory:
 
         rounds = int((depth + 1)[active].max()) if active.any() else 0
         batch_us = 0.0
-        for d in range(rounds):
-            sel = active & (depth == d)
-            if sel.any():
-                batch_us += self.link.rtt_us + float(cost[sel].sum())
+        try:
+            for d in range(rounds):
+                sel = active & (depth == d)
+                if sel.any():
+                    batch_us += self._deliver_round(float(cost[sel].sum()))
+        except DeliveryTimeout:
+            self.total_us += batch_us
+            self.posts += 1
+            raise
 
         # unloaded per-op latency: each op pays one RTT per round it
         # participates in, plus its own verb service costs
@@ -140,10 +264,23 @@ class RemoteMemory:
         return Completion(batch_us, op_us, rounds, nverbs, nb)
 
     def stats(self) -> dict:
-        return {
+        out = {
             "posts": self.posts,
             "doorbells": self.doorbells,
             "verbs": self.total_verbs,
             "bytes": self.total_bytes,
             "simulated_us": self.total_us,
         }
+        # the retry counters outlive the injector: an audit phase that
+        # quiesces fault injection still reports what the run survived
+        if self.faults is not None or self.retries or self.duplicates \
+                or self.reorders or self.give_ups:
+            out["retries"] = self.retries
+            out["timeouts"] = self.timeouts
+            out["duplicates"] = self.duplicates
+            out["reorders"] = self.reorders
+            out["backoff_us"] = self.backoff_us
+            out["give_ups"] = self.give_ups
+            if self.faults is not None:
+                out["injected"] = dict(self.faults.injected)
+        return out

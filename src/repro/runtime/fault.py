@@ -41,12 +41,24 @@ class HostState:
 
 class HeartbeatMonitor:
     """Failure detection. Hosts report (host_id, step) heartbeats; a host
-    silent for ``timeout_s`` is declared failed."""
+    silent for ``timeout_s`` becomes SUSPECT, and only after a further
+    ``grace_s`` of silence is it declared failed.
 
-    def __init__(self, timeout_s: float = 30.0, clock=time.monotonic):
+    The two-phase declaration distinguishes "node dead" from "node
+    partitioned but alive": a partition that heals inside the grace
+    window resumes heartbeating, the suspicion clears, and no failover
+    fires — without the window, a transient partition and a crash are
+    indistinguishable and the controller double-promotes a primary that
+    is still alive on the far side.  ``grace_s=0`` keeps the original
+    single-timeout behaviour."""
+
+    def __init__(self, timeout_s: float = 30.0, clock=time.monotonic,
+                 grace_s: float = 0.0):
         self.timeout = timeout_s
+        self.grace = grace_s
         self.clock = clock
         self.hosts: Dict[str, HostState] = {}
+        self.suspicions_cleared = 0     # suspect hosts that came back
 
     def register(self, host_id: str):
         self.hosts[host_id] = HostState(last_seen=self.clock(),
@@ -55,16 +67,27 @@ class HeartbeatMonitor:
     def heartbeat(self, host_id: str, step: int,
                   step_latency_ms: Optional[float] = None):
         st = self.hosts[host_id]
+        if self.state(host_id) == "suspect":
+            self.suspicions_cleared += 1    # partitioned-but-alive came back
         st.last_seen = self.clock()
         st.step = step
         if step_latency_ms is not None:
             st.latencies_ms.append(step_latency_ms)
             del st.latencies_ms[:-100]
 
+    def state(self, host_id: str) -> str:
+        """``alive`` | ``suspect`` (silent past timeout, inside the grace
+        window) | ``failed`` (silent past timeout + grace)."""
+        silent = self.clock() - self.hosts[host_id].last_seen
+        if silent > self.timeout + self.grace:
+            return "failed"
+        return "suspect" if silent > self.timeout else "alive"
+
+    def suspect_hosts(self) -> List[str]:
+        return [h for h in self.hosts if self.state(h) == "suspect"]
+
     def failed_hosts(self) -> List[str]:
-        now = self.clock()
-        return [h for h, st in self.hosts.items()
-                if now - st.last_seen > self.timeout]
+        return [h for h in self.hosts if self.state(h) == "failed"]
 
 
 @dataclasses.dataclass(frozen=True)

@@ -1,0 +1,109 @@
+"""Property-test harness: hypothesis when available, seeded fallback else.
+
+The repro container has no network access, so `hypothesis` (a dev-only
+dependency) may be absent.  Property tests used to importorskip it; that
+silently dropped the strongest invariant checks from tier-1.  This shim
+keeps them running everywhere: with hypothesis installed you get real
+shrinking search, without it the same `@settings/@given` decorators run
+a fixed number of seeded-random examples (deterministic across runs, so
+failures replay bit-exactly).
+
+Usage (drop-in for the hypothesis triple):
+
+    from _propcheck import HAVE_HYPOTHESIS, given, settings, st
+"""
+
+from __future__ import annotations
+
+import inspect
+
+import numpy as np
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        """A draw function wrapped with the one method the shim needs."""
+
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example(self, rng):
+            return self._draw(rng)
+
+    def _integers(min_value=0, max_value=2 ** 31 - 1):
+        return _Strategy(
+            lambda rng: int(rng.randint(min_value, max_value + 1)))
+
+    def _sampled_from(seq):
+        pool = list(seq)
+        return _Strategy(lambda rng: pool[int(rng.randint(len(pool)))])
+
+    def _tuples(*strats):
+        return _Strategy(
+            lambda rng: tuple(s.example(rng) for s in strats))
+
+    def _lists(strat, min_size=0, max_size=None, unique=False):
+        hi = min_size + 10 if max_size is None else max_size
+
+        def draw(rng):
+            n = int(rng.randint(min_size, hi + 1))
+            out, seen, tries = [], set(), 0
+            while len(out) < n and tries < 20 * n + 100:
+                tries += 1
+                v = strat.example(rng)
+                if unique:
+                    if v in seen:
+                        continue
+                    seen.add(v)
+                out.append(v)
+            return out
+
+        return _Strategy(draw)
+
+    class _St:
+        integers = staticmethod(_integers)
+        sampled_from = staticmethod(_sampled_from)
+        tuples = staticmethod(_tuples)
+        lists = staticmethod(_lists)
+
+    st = _St()
+
+    def settings(max_examples=25, deadline=None, **_ignored):
+        def deco(f):
+            f._max_examples = max_examples
+            return f
+        return deco
+
+    def given(*strats, **kwstrats):
+        def deco(f):
+            params = list(inspect.signature(f).parameters.values())
+            if kwstrats:
+                passthrough = [p for p in params if p.name not in kwstrats]
+                strat_names = ()
+            else:
+                cut = len(params) - len(strats)
+                passthrough = params[:cut]
+                strat_names = tuple(p.name for p in params[cut:])
+
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_max_examples", 25)
+                for ex in range(n):
+                    rng = np.random.RandomState(1_000_003 * ex + 17)
+                    drawn = {k: s.example(rng) for k, s in kwstrats.items()}
+                    drawn.update(
+                        (name, s.example(rng))
+                        for name, s in zip(strat_names, strats))
+                    bound = dict(zip((p.name for p in passthrough), args))
+                    f(**bound, **kwargs, **drawn)
+
+            # pytest must see only the non-strategy params (fixtures /
+            # parametrize ids), exactly like hypothesis' own wrapper.
+            wrapper.__signature__ = inspect.Signature(passthrough)
+            wrapper.__name__ = f.__name__
+            wrapper.__doc__ = f.__doc__
+            return wrapper
+        return deco

@@ -1,0 +1,346 @@
+"""Chaos engineering subsystem: fencing, retry/backoff, degradation.
+
+Store-level drills of every invariant the seeded scenario matrix
+(`python -m repro.chaos.matrix`) gates end-to-end:
+
+  * epoch fencing — a partitioned ex-primary's stale-epoch acks are ALL
+    detected at resync/failover and none stays visible;
+  * transport robustness — per-round timeout, capped exponential backoff
+    with jitter, duplicate/reorder absorption, retry-budget exhaustion
+    surfacing as an UN-acked (never silently lost) round;
+  * retry idempotence — replaying a fenced write round after any
+    delivered prefix yields a bit-identical durable PM image, proved as
+    a property over every registered scheme;
+  * degradation — quorum loss flips the cluster read-only instead of
+    acking writes it could lose;
+  * two-phase failure detection — the HeartbeatMonitor grace window that
+    distinguishes "partitioned but alive" from "dead".
+"""
+
+import numpy as np
+import pytest
+
+from _propcheck import given, settings, st
+from repro import api
+from repro.chaos.matrix import GRID
+from repro.chaos.scenarios import SCENARIOS, run_scenario
+from repro.cluster.store import ClusterStore
+from repro.consistency.schemes import HANDLERS, trace_batch
+from repro.consistency.trace import apply_trace
+from repro.data import ycsb
+from repro.rdma.transport import (DeliveryTimeout, FaultInjector,
+                                  RemoteMemory, RetryPolicy)
+from repro.runtime.fault import HeartbeatMonitor
+
+pytestmark = pytest.mark.chaos
+
+
+def _cluster(**kw):
+    cfg = dict(scheme="continuity", nodes=4, replicas=2, node_slots=1024)
+    cfg.update(kw)
+    return ClusterStore(**cfg)
+
+
+def _kv(n, seed=0, lo=0):
+    rng = np.random.RandomState(seed)
+    return ycsb.make_key(np.arange(lo, lo + n)), ycsb.make_value(rng, n)
+
+
+# ---------------------------------------------------------------------------
+# HeartbeatMonitor: two-phase suspect -> failed with a grace window
+# ---------------------------------------------------------------------------
+
+class _Clock:
+    """Injectable monotonic clock (no sleeps in tier-1)."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def test_heartbeat_grace_two_phase_declaration():
+    clk = _Clock()
+    mon = HeartbeatMonitor(timeout_s=5.0, clock=clk, grace_s=10.0)
+    mon.register("pm0")
+    assert mon.state("pm0") == "alive"
+    clk.t = 5.0                      # boundary is strict
+    assert mon.state("pm0") == "alive"
+    clk.t = 5.1
+    assert mon.state("pm0") == "suspect"
+    assert mon.suspect_hosts() == ["pm0"] and mon.failed_hosts() == []
+    clk.t = 15.0                     # timeout + grace, still strict
+    assert mon.state("pm0") == "suspect"
+    clk.t = 15.1
+    assert mon.state("pm0") == "failed"
+    assert mon.failed_hosts() == ["pm0"] and mon.suspect_hosts() == []
+
+
+def test_heartbeat_heal_inside_grace_clears_suspicion():
+    """The regression the window exists for: a partition that heals
+    before timeout+grace must NOT be declared failed (no double-promote
+    of a primary that is alive on the far side)."""
+    clk = _Clock()
+    mon = HeartbeatMonitor(timeout_s=5.0, clock=clk, grace_s=10.0)
+    mon.register("pm0")
+    clk.t = 8.0                      # partitioned: silent past timeout
+    assert mon.state("pm0") == "suspect"
+    mon.heartbeat("pm0", step=1)     # partition heals inside the grace
+    assert mon.state("pm0") == "alive"
+    assert mon.suspicions_cleared == 1
+    clk.t = 13.5                     # 5.5 s silent since the heal
+    assert mon.state("pm0") == "suspect"
+    clk.t = 23.1                     # timeout + grace since the heal
+    assert mon.state("pm0") == "failed"
+
+
+def test_heartbeat_zero_grace_is_single_phase():
+    clk = _Clock()
+    mon = HeartbeatMonitor(timeout_s=5.0, clock=clk, grace_s=0.0)
+    mon.register("pm0")
+    clk.t = 5.1
+    assert mon.state("pm0") == "failed"
+    assert mon.suspect_hosts() == []
+
+
+# ---------------------------------------------------------------------------
+# transport: timeout, backoff, duplicate/reorder absorption, give-up
+# ---------------------------------------------------------------------------
+
+def test_backoff_capped_exponential_with_jitter():
+    pol = RetryPolicy(base_us=4.0, cap_us=64.0, jitter=0.0)
+    assert pol.backoff_us(0) == 4.0
+    assert pol.backoff_us(3) == 32.0
+    assert pol.backoff_us(10) == 64.0        # capped
+    jit = RetryPolicy(base_us=4.0, cap_us=64.0, jitter=0.5)
+    rng = np.random.RandomState(0)
+    draws = [jit.backoff_us(2, rng) for _ in range(16)]
+    assert len(set(draws)) > 1               # jitter decorrelates
+    assert all(8.0 <= d <= 16.0 for d in draws)
+
+
+def test_drop_storm_exhausts_budget_and_raises():
+    mem = RemoteMemory(faults=FaultInjector(drop_p=1.0, seed=0),
+                       retry=RetryPolicy(max_attempts=4))
+    with pytest.raises(DeliveryTimeout):
+        mem._deliver_round(1.0)
+    assert mem.give_ups == 1
+    assert mem.retries == 4 and mem.timeouts == 4
+    assert mem.backoff_us > 0.0
+
+
+def test_duplicate_and_reorder_absorbed_with_cost():
+    dup = RemoteMemory(faults=FaultInjector(dup_p=1.0, seed=0))
+    t = dup._deliver_round(1.0)
+    assert dup.duplicates == 1
+    assert t == pytest.approx(dup.link.rtt_us + 2.0)    # second copy drains
+    ro = RemoteMemory(faults=FaultInjector(reorder_p=1.0, seed=0))
+    t = ro._deliver_round(1.0)
+    assert ro.reorders == 1
+    assert t == pytest.approx(2 * ro.link.rtt_us + 1.0)  # one extra RTT
+
+
+def test_retry_counters_survive_quiesce():
+    """The audit phase removes injectors; stats must still report what
+    the run survived."""
+    mem = RemoteMemory(faults=FaultInjector(drop_p=1.0, seed=0),
+                       retry=RetryPolicy(max_attempts=2))
+    with pytest.raises(DeliveryTimeout):
+        mem._deliver_round(1.0)
+    mem.faults = None
+    s = mem.stats()
+    assert s["give_ups"] == 1 and s["retries"] == 2
+    assert "injected" not in s
+
+
+# ---------------------------------------------------------------------------
+# epoch fencing: stale acks detected, lagging nodes routed around
+# ---------------------------------------------------------------------------
+
+def test_partition_fence_detects_every_stale_ack():
+    c = _cluster()
+    K, V = _kv(200)
+    assert np.asarray(c.insert(K, V).ok).all()
+    e0 = c.epoch
+    c.partition("pm1")
+    assert c.epoch == e0 + 1                 # partition bumps the epoch
+    assert not c._name_serving("pm1")
+    # the cut-off ex-primary keeps acking writes under its stale token
+    SK, SV = K[:32], V[:32] ^ np.uint32(0xDEAD)
+    assert c.stale_write("pm1", SK, SV) == 32
+    c.heal("pm1")
+    # healed but NOT resynced: visible, still fenced out of routing
+    assert c._name_lagging("pm1") and not c._name_serving("pm1")
+    rep = c.resync("pm1")
+    assert rep.stale_acks_detected == 32
+    assert (c.chaos["stale_acks_detected"]
+            == c.chaos["stale_acks_injected"] == 32)
+    assert c._name_serving("pm1")
+    r = c.lookup(K)                          # no stale value visible anywhere
+    assert np.asarray(r.found).all()
+    assert (np.asarray(r.values) == V).all()
+
+
+def test_failover_of_partitioned_node_detects_stale_acks():
+    c = _cluster()
+    K, V = _kv(200)
+    assert np.asarray(c.insert(K, V).ok).all()
+    c.partition("pm2")
+    c.stale_write("pm2", K[:16], V[:16] ^ np.uint32(1))
+    c.failover("pm2")                        # declared failed while cut off
+    assert c.chaos["stale_acks_detected"] == 16
+    r = c.lookup(K)
+    assert np.asarray(r.found).all()
+    assert (np.asarray(r.values) == V).all()
+
+
+def test_healed_node_stays_fenced_through_unrelated_churn():
+    c = _cluster()
+    K, V = _kv(120)
+    assert np.asarray(c.insert(K, V).ok).all()
+    c.partition("pm3")
+    c.heal("pm3")
+    e = c.epoch
+    c.join("pm9")                            # unrelated membership churn
+    assert c.epoch > e
+    # the join's epoch bump must NOT hand pm3 a current token
+    assert c._name_lagging("pm3") and not c._name_serving("pm3")
+    c.resync("pm3")
+    assert c._name_serving("pm3")
+    r = c.lookup(K)
+    assert np.asarray(r.found).all()
+    assert (np.asarray(r.values) == V).all()
+
+
+# ---------------------------------------------------------------------------
+# degradation: quorum-loss read-only, exhausted budget -> un-acked round
+# ---------------------------------------------------------------------------
+
+def test_quorum_loss_flips_read_only_but_keeps_reading():
+    c = _cluster(nodes=3, replicas=2)
+    K, V = _kv(150)
+    assert np.asarray(c.insert(K, V).ok).all()
+    c.kill("pm2")
+    c.failover("pm2")
+    assert not c.read_only                   # 2 serving == replicas
+    c.kill("pm1")
+    c.failover("pm1")
+    assert c.read_only                       # 1 serving < replicas
+    K2, V2 = _kv(10, seed=1, lo=1000)
+    res = c.insert(K2, V2)
+    assert not np.asarray(res.ok).any()      # never ack what it could lose
+    assert c.chaos["writes_rejected_read_only"] == 10
+    r = c.lookup(K)                          # reads keep flowing, exact
+    assert np.asarray(r.found).all()
+    assert (np.asarray(r.values) == V).all()
+
+
+def test_exhausted_retry_budget_unacks_never_loses():
+    c = _cluster()
+    K, V = _kv(100)
+    assert np.asarray(c.insert(K, V).ok).all()
+    for name in c.node_names():
+        node = c.node(name)
+        node.mem.faults = FaultInjector(drop_p=1.0, seed=7)
+        node.mem.retry = RetryPolicy(max_attempts=2)
+    V2 = V ^ np.uint32(5)
+    res = c.update(K[:32], V2[:32])
+    assert not np.asarray(res.ok).any()      # budget exhausted -> un-acked
+    assert c.chaos["write_timeouts"] > 0
+    c.quiesce_faults()
+    r = c.lookup(K)
+    vals, found = np.asarray(r.values), np.asarray(r.found)
+    assert found.all()
+    # un-acked updates are INDETERMINATE (may have applied before the ack
+    # round died): targeted keys hold the old or the new value, nothing
+    # else; untargeted keys are exact
+    old = (vals == V).all(axis=1)
+    new = (vals == V2).all(axis=1)
+    targeted = np.zeros(len(K), bool)
+    targeted[:32] = True
+    assert (old | (targeted & new)).all()
+    assert old[~targeted].all()
+
+
+# ---------------------------------------------------------------------------
+# property: fenced write round retry is idempotent, every scheme
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("scheme", list(HANDLERS))
+@settings(max_examples=10, deadline=None)
+@given(op=st.sampled_from(["insert", "update", "delete"]),
+       seed=st.integers(min_value=0, max_value=2 ** 20),
+       prefix_pct=st.integers(min_value=0, max_value=100))
+def test_fenced_write_round_retry_idempotent(scheme, op, seed, prefix_pct):
+    """The transport's timeout -> backoff -> replay loop assumes replaying
+    a fenced write round is safe.  Property: for every registered scheme,
+    any delivered PREFIX of a round followed by a full replay leaves the
+    durable PM image bit-identical to one clean delivery."""
+    h = HANDLERS[scheme]
+    store = api.make_store(scheme, table_slots=240)
+    rng = np.random.RandomState(seed)
+    base_k = ycsb.make_key(np.arange(24))
+    t = store.create()
+    t, _ = store.insert(t, base_k, ycsb.make_value(rng, 24))
+    base = h.init_state(store.cfg, t)
+
+    if op == "insert":
+        K = ycsb.make_key(np.arange(100, 108) + seed % 50)
+    else:
+        K = base_k[seed % 3::3][:8]
+    V = None if op == "delete" else ycsb.make_value(rng, len(K))
+    final, trace = trace_batch(h, store.cfg, base, op, K, V)
+
+    clean = apply_trace(base, trace)         # one clean delivery
+    p = prefix_pct * len(trace.records) // 100
+    partial = apply_trace(base, trace, upto=p)   # round dies after p stores
+    retried = apply_trace(partial, trace)        # full replay on top
+    for field in clean:
+        assert np.array_equal(clean[field], retried[field]), \
+            (scheme, op, field, p)
+        assert np.array_equal(clean[field], final[field]), (scheme, op, field)
+
+
+# ---------------------------------------------------------------------------
+# scenario cells (the fast drills + one YCSB partition cell)
+# ---------------------------------------------------------------------------
+
+def test_matrix_grid_covers_every_scenario_and_scan_rmw():
+    assert {s for s, _ in GRID} == set(SCENARIOS)
+    assert {"E", "F"} <= {w for _, w in GRID}   # short scans + RMW present
+
+
+def test_scenario_read_only_degrade_cell():
+    cell = run_scenario("read_only_degrade", seed=5)
+    assert cell["ok"], cell["checks"]
+    assert cell["committed_lost"] == 0
+    assert cell["chaos"]["writes_rejected_read_only"] > 0
+
+
+def test_scenario_timeout_giveup_cell():
+    cell = run_scenario("timeout_giveup", seed=5)
+    assert cell["ok"], cell["checks"]
+    assert cell["wire"]["give_ups"] > 0
+
+
+@pytest.mark.slow
+def test_scenario_partition_fence_cell_scan_workload():
+    cell = run_scenario("partition_fence", workload="E", seed=2)
+    assert cell["ok"], cell["checks"]
+    assert (cell["chaos"]["stale_acks_detected"]
+            == cell["chaos"]["stale_acks_injected"] > 0)
+    assert cell["committed_lost"] == 0
+
+
+# ---------------------------------------------------------------------------
+# seeded cluster sim payload (the replay contract)
+# ---------------------------------------------------------------------------
+
+def test_cluster_sim_payload_echoes_seed_and_chaos():
+    from repro.cluster.sim import run_cluster
+    p = run_cluster(num_records=200, num_ops=200, batch=100, nodes=3,
+                    replicas=2, node_slots=1024, seed=11)
+    assert p["seed"] == 11
+    assert p["committed_lost"] == 0
+    assert "chaos" in p and "stale_acks_injected" in p["chaos"]

@@ -11,8 +11,11 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-hypothesis = pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st
+# Formerly importorskip("hypothesis"): the repro container has no network
+# and hypothesis is dev-only, so that skipped this whole module in tier-1.
+# _propcheck runs the same properties on seeded examples when hypothesis
+# is absent (and uses the real thing when present).
+from _propcheck import given, settings, st
 
 import repro.core.continuity as ch
 from repro import api
