@@ -1,0 +1,49 @@
+"""Cache benchmark section: the 100-client fan-in cell.
+
+One `repro.cache.fanin.run_fanin` drill — O(100) clients behind
+version-stamped `ClientCache` instances vs the uncached request-per-post
+edge, same seeded stream and chaos schedule on both sides.  The payload
+lands in the BENCH json under ``cache`` and `validate_bench.py` gates
+the ISSUE's acceptance criteria on it: >= 2x per-node read-doorbell
+reduction, cached p99 <= uncached p99, hit rate above the honesty floor,
+and ``stale_served`` exactly zero across partition/heal/join/failover.
+"""
+
+from __future__ import annotations
+
+from repro.cache import fanin
+
+SMOKE_KW = dict(rounds=14, ops_per_round=16, writes_per_round=2,
+                num_records=1200)
+FULL_KW = dict(rounds=18, ops_per_round=16, writes_per_round=2,
+               num_records=2000)
+
+
+def run(rows, scale: str = "full") -> dict:
+    kw = SMOKE_KW if scale == "smoke" else FULL_KW
+    cell = fanin.run_fanin("continuity", clients=100, **kw)
+    un, ca = cell["uncached"], cell["cached"]
+    payload = {
+        "clients": cell["clients"], "rounds": cell["rounds"],
+        "seed": cell["seed"], "dist": cell["dist"],
+        "trust_window": cell["trust_window"],
+        "doorbell_reduction": cell["doorbell_reduction"],
+        "bytes_reduction": cell["bytes_reduction"],
+        "p99_ratio": cell["p99_ratio"],
+        "hit_rate": ca["hit_rate"], "stale_served": ca["stale_served"],
+        "uncached": {k: un[k] for k in
+                     ("read_doorbells", "read_bytes", "p50_us", "p99_us",
+                      "wrong_reads", "reads_served")},
+        "cached": {k: ca[k] for k in
+                   ("read_doorbells", "read_bytes", "p50_us", "p99_us",
+                    "wrong_reads", "reads_served")},
+        "gate_failures": fanin.check_gates(cell),
+    }
+    rows.append(("cache_fanin[continuity]", ca["p50_us"],
+                 f"doorbells {un['read_doorbells']}->{ca['read_doorbells']} "
+                 f"({cell['doorbell_reduction']:.2f}x) "
+                 f"p99={ca['p99_us']:.2f}us hit={ca['hit_rate']:.3f} "
+                 f"stale={ca['stale_served']}"))
+    rows.append(("cache_fanin_uncached", un["p50_us"],
+                 f"p99={un['p99_us']:.2f}us (request-per-post baseline)"))
+    return payload

@@ -20,6 +20,10 @@ Prints ``name,us_per_call,derived`` CSV. Sections:
                     (live migration) and primary kill (failover), plus
                     the replicated-durability and migration crash drills
                     (repro.cluster; --e2e-scale smoke shrinks it for CI)
+  * cache         — 100-client fan-in: version-stamped client caches vs
+                    the uncached request-per-post edge under membership
+                    chaos (repro.cache; doorbell/p99 collapse + the
+                    zero-stale gate; --e2e-scale smoke shrinks it)
   * crash_consistency — recovery work per scheme from the crash/scheme
                     matrix (repro.consistency; EXPERIMENTS.md §Crash)
   * bench_serving — technique-on-the-hot-path serving numbers
@@ -41,7 +45,7 @@ import json
 
 HASH_SECTIONS = ("pm_writes", "access_amp", "search", "update_micro",
                  "ycsb", "end_to_end", "load_factor")
-SECTIONS = HASH_SECTIONS + ("cluster", "crash_consistency", "hash",
+SECTIONS = HASH_SECTIONS + ("cluster", "cache", "crash_consistency", "hash",
                             "serving", "roofline")
 
 
@@ -69,9 +73,9 @@ def main(argv=None) -> None:
     batches = tuple(int(b) for b in args.sweep_batches.split(",") if b)
 
     rows = []
-    table1 = crash = e2e = lf = cluster = None
-    from benchmarks import (bench_cluster, bench_crash, bench_hash,
-                            bench_serving, roofline)
+    table1 = crash = e2e = lf = cluster = cache = None
+    from benchmarks import (bench_cache, bench_cluster, bench_crash,
+                            bench_hash, bench_serving, roofline)
     if "pm_writes" in sections:
         table1 = bench_hash.bench_pm_writes(rows)
     if "crash_consistency" in sections:
@@ -80,6 +84,8 @@ def main(argv=None) -> None:
         e2e = bench_hash.bench_end_to_end(rows, scale=args.e2e_scale)
     if "cluster" in sections:
         cluster = bench_cluster.run(rows, scale=args.e2e_scale)
+    if "cache" in sections:
+        cache = bench_cache.run(rows, scale=args.e2e_scale)
     if "access_amp" in sections:
         bench_hash.bench_access_amp(rows)
     if "search" in sections:
@@ -105,6 +111,8 @@ def main(argv=None) -> None:
         payload["load_factor"] = lf
     if cluster is not None:
         payload["cluster"] = cluster
+    if cache is not None:
+        payload["cache"] = cache
     with open(args.bench_json, "w") as f:
         json.dump(payload, f, indent=2, sort_keys=True)
     print("name,us_per_call,derived")

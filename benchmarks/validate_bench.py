@@ -11,7 +11,9 @@ the container) over the payload ``benchmarks/run.py`` emits:
       "crash_consistency": {"<scheme>.<op>": {..., "ok": bool}},    # optional
       "end_to_end": {<scheme>: {<workload>: E2E_CELL}},             # optional
       "load_factor": {<policy>: [float, ...]},                      # optional
-      "cluster": {"cells": ..., "durability": ..., "migration": ...} # optional
+      "cluster": {"cells": ..., "durability": ..., "migration": ...}, # optional
+      "cache": {"doorbell_reduction": ..., "hit_rate": ...,
+                "stale_served": 0, "uncached": ..., "cached": ...}    # optional
     }
 
     CELL = {"ops_per_s": float > 0, "us_per_op": float > 0,
@@ -35,6 +37,10 @@ continuity load-factor claim: every policy triggers its FIRST resize at
 committed-op loss per cell, rebalance within 1/N + 5%, failover
 detected, the fenced durability drill lossless AND its unfenced negative
 control caught losing acked ops, the migration crash sweep clean.
+``cache``, when present, gates the client-cache fan-in criteria: >= 2x
+read-doorbell reduction, cached p99 <= uncached p99, hit rate >= the
+honesty floor, ``stale_served`` exactly 0, and zero wrong reads on
+both passes.
 
 The script also recognises a ``repro.chaos.matrix --json`` artifact
 (top-level ``cells``/``totals``/``gates``) and gates it on the chaos
@@ -304,6 +310,56 @@ def _check_chaos(payload) -> None:
         _fail("ok", "artifact reports not ok")
 
 
+# the cache fan-in gates (shared floors with repro.cache.fanin.GATES —
+# kept literal here so the validator has no runtime imports)
+CACHE_DOORBELL_FLOOR = 2.0
+CACHE_HIT_FLOOR = 0.45
+CACHE_PASS_FIELDS = ("read_doorbells", "read_bytes", "p50_us", "p99_us",
+                     "wrong_reads", "reads_served")
+
+
+def _check_cache(ca) -> None:
+    if not isinstance(ca, dict):
+        _fail("cache", f"expected object, got {type(ca).__name__}")
+    for part in ("uncached", "cached"):
+        cell = ca.get(part)
+        if not isinstance(cell, dict):
+            _fail(f"cache.{part}", "missing or non-object")
+        for field in CACHE_PASS_FIELDS:
+            v = cell.get(field)
+            if not isinstance(v, (int, float)) or isinstance(v, bool) \
+                    or v < 0:
+                _fail(f"cache.{part}.{field}",
+                      f"expected non-negative number, got {v!r}")
+        if cell["wrong_reads"] != 0:
+            _fail(f"cache.{part}.wrong_reads",
+                  f"{cell['wrong_reads']!r} reads served a value that was "
+                  f"never the committed one (must be 0)")
+        if cell["p99_us"] < cell["p50_us"]:
+            _fail(f"cache.{part}", f"p99 {cell['p99_us']!r} < p50 "
+                                   f"{cell['p50_us']!r}")
+    if ca.get("stale_served") != 0:
+        _fail("cache.stale_served",
+              f"{ca.get('stale_served')!r} cached reads served a "
+              f"pre-mutation value (must be exactly 0)")
+    db = ca.get("doorbell_reduction")
+    if not isinstance(db, (int, float)) or db < CACHE_DOORBELL_FLOOR:
+        _fail("cache.doorbell_reduction",
+              f"{db!r} below the {CACHE_DOORBELL_FLOOR}x floor")
+    hr = ca.get("hit_rate")
+    if not isinstance(hr, (int, float)) or not CACHE_HIT_FLOOR <= hr <= 1.0:
+        _fail("cache.hit_rate",
+              f"{hr!r} outside [{CACHE_HIT_FLOOR}, 1.0]")
+    if ca["cached"]["p99_us"] > ca["uncached"]["p99_us"]:
+        _fail("cache.cached.p99_us",
+              f"cached tail {ca['cached']['p99_us']!r} > uncached "
+              f"{ca['uncached']['p99_us']!r} — the fan-in collapse "
+              f"did not happen")
+    gf = ca.get("gate_failures")
+    if gf:
+        _fail("cache.gate_failures", f"fan-in run reported {gf!r}")
+
+
 def _check_crash(cc) -> None:
     if not isinstance(cc, dict) or not cc:
         _fail("crash_consistency", "must be a non-empty object")
@@ -352,6 +408,8 @@ def validate(payload: dict) -> None:
         _check_load_factor(payload["load_factor"])
     if "cluster" in payload:
         _check_cluster(payload["cluster"])
+    if "cache" in payload:
+        _check_cache(payload["cache"])
 
     sweep = payload["write_batch_sweep"]
     if set(sweep) - set(OPS) or not sweep:
@@ -410,7 +468,7 @@ def main(argv=None) -> int:
         print(f"INVALID {args.file}: {e}", file=sys.stderr)
         return 1
     extras = [k for k in ("table1", "crash_consistency", "end_to_end",
-                          "load_factor", "cluster")
+                          "load_factor", "cluster", "cache")
               if k in payload]
     print(f"OK {args.file}: valid write-batch sweep artifact "
           f"({len(payload['write_batch_sweep'])} ops"

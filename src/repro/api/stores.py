@@ -21,8 +21,10 @@ numbers compare at equal capacity (the paper's evaluation setup).
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any, ClassVar, Optional, Tuple
 
+import jax
 import jax.numpy as jnp
 
 from repro.api.types import ExecPolicy, OpResult
@@ -31,6 +33,28 @@ from repro.core import dense as dn
 from repro.core import level as lv
 from repro.core import pfarm as pf
 from repro.core.continuity import KEY_LANES, VAL_LANES
+
+
+# The read-side entry points compile ONCE per (store, shape): stores are
+# frozen dataclasses (hashable), so they ride as jit statics and the many
+# small per-node / per-client calls the cluster and cache layers make pay
+# dispatch, not retracing, after the first call at each batch shape.
+@functools.partial(jax.jit, static_argnums=0)
+def _jit_lookup(store: "_ModuleStore", table, keys):
+    from repro.rdma import verbs as rv
+    res = store._lookup_res(table, keys)
+    plan = store._mod.lookup_plan(store.cfg, table, keys, res)
+    return res, plan, rv.ledger_from_plan(plan)
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def _jit_stamp(store: "_ModuleStore", table, keys):
+    return store._stamp_impl(table, keys)
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def _jit_stamp_plan(store: "_ModuleStore", table, keys):
+    return store._vplan_impl(table, keys)
 
 
 def _check_resize_lossless(name: str, old_table, new_table) -> None:
@@ -100,10 +124,8 @@ class _ModuleStore:
         # bucket READs; pfarm: window + chained READs; dense: whole-table
         # READ) and the ledger is derived from the plan — this replaced
         # the four per-scheme hand-tallied ``read_counters`` blocks.
-        from repro.rdma import verbs as rv
-        res = self._lookup_res(table, keys)
-        plan = self._mod.lookup_plan(self.cfg, table, keys, res)
-        return OpResult(ok=res.found, ledger=rv.ledger_from_plan(plan),
+        res, plan, ledger = _jit_lookup(self, table, keys)
+        return OpResult(ok=res.found, ledger=ledger,
                         values=res.values, reads=res.reads, plan=plan)
 
     def scan_plan(self, table, keys, spans):
@@ -125,6 +147,32 @@ class _ModuleStore:
         new_table, _ = new.insert(new.create(), keys, vals, live)
         _check_resize_lossless(self.name, table, new_table)
         return new, new_table
+
+    # -- cache-validation surface (repro.cache) -----------------------------
+    # A stamp is an opaque (B, S) integer array, one row per key, compared
+    # row-wise: rows equal  <=>  a fresh lookup returns exactly the value
+    # observed when the stamp was taken.  The DEFAULT is value-based —
+    # ``[found, value lanes]`` — which is correct for every scheme but
+    # prices validation at a FULL lookup plan (there is no cheap version
+    # word to read).  Continuity overrides both with its 8-byte indicator
+    # word; the cost asymmetry is the cache subsystem's whole argument.
+
+    def version_stamp(self, table, keys) -> jnp.ndarray:
+        return _jit_stamp(self, table, keys)
+
+    def version_read_plan(self, table, keys):
+        """Verb plan pricing ONE stamp-validation batch."""
+        return _jit_stamp_plan(self, table, keys)
+
+    def _stamp_impl(self, table, keys) -> jnp.ndarray:
+        res = self._lookup_res(table, keys)
+        return jnp.concatenate(
+            [res.found[:, None].astype(jnp.uint32),
+             res.values.astype(jnp.uint32)], axis=-1)
+
+    def _vplan_impl(self, table, keys):
+        res = self._lookup_res(table, keys)
+        return self._mod.lookup_plan(self.cfg, table, keys, res)
 
     # -- crash-consistency surface (repro.consistency) ----------------------
     # Traced twins of the write ops: same table-out/ok-out contract, plus
@@ -201,6 +249,16 @@ class ContinuityStore(_ModuleStore):
 
     def _extract(self, table):
         return ch.extract_items(self.cfg, table)
+
+    def _stamp_impl(self, table, keys) -> jnp.ndarray:
+        # (B, 2) [version, indicator]: the ONE 8-byte word every committed
+        # mutation on the key's pair atomically rewrites — ABA-proof via
+        # the counter half (see ch.version_stamp)
+        return ch.version_stamp(self.cfg, table, keys)
+
+    def _vplan_impl(self, table, keys):
+        # one depth-0 8-byte READ per key vs the baselines' full lookup
+        return ch.version_read_plan(self.cfg, keys)
 
     def resize(self, table, factor: int = 2):
         # delegate to the scheme's own rehash (ONE implementation of the

@@ -1,0 +1,26 @@
+"""Client-side hot-key caching for the remote hash table.
+
+The paper's reads are one-sided (the server never sees them), so servers
+cannot invalidate client caches.  This package turns continuity hashing's
+commit discipline into the invalidation protocol instead: every committed
+mutation rewrites ONE 8-byte word per bucket pair (indicator bits + the
+per-pair version counter), so a cached entry is revalidated by a single
+8-byte READ of that word — log-free, protocol-free, one verb.
+
+  `policy`   TinyLFU admission sketch + backpressure shedding valve
+  `client`   `ClientCache` (per-client cache + round protocol) and its
+             backends (`StoreBackend` single store, `ClusterBackend`
+             over `cluster.ClusterStore`)
+  `fanin`    the 100-client fan-in simulation: hotspot storm through
+             independent caches with membership chaos underneath,
+             cached vs uncached per-node doorbells and p99
+"""
+
+from repro.cache.client import (CacheConfig, ClientCache, ClusterBackend,
+                                RoundResult, StoreBackend)
+from repro.cache.policy import Backpressure, FrequencySketch, key_hash
+
+__all__ = [
+    "Backpressure", "CacheConfig", "ClientCache", "ClusterBackend",
+    "FrequencySketch", "RoundResult", "StoreBackend", "key_hash",
+]

@@ -1,0 +1,438 @@
+"""100-client fan-in simulation: hot-key caching vs the uncached edge.
+
+The scenario the cache exists for: O(100) independent clients hammer a
+zipf/hotspot key set on a small `ClusterStore` while membership chaos
+(partition -> stale writes -> heal -> resync, a live join, a primary
+kill + failover) runs underneath.  The same seeded request stream is
+replayed twice over two identically-built clusters:
+
+  * **uncached** — the request-per-post serving edge: every read is
+    routed and POSTED individually (compute is batched per node, the
+    wire is not), the status quo before a cache tier;
+  * **cached** — every client owns a `ClientCache`; a round's reads are
+    deduplicated, cached keys revalidate in one batched 8-byte-per-key
+    stamp READ, and only granted misses fetch.
+
+Two effects are measured and CI-gated:
+
+  * **per-node doorbell collapse** — read-tagged doorbells per node drop
+    >= 2x because a client round coalesces into ~(one validate post per
+    touched node + one miss post) instead of one post per op;
+  * **p99 collapse** — per-op latency includes a per-round FIFO queue
+    at each node (posts serialize on the NIC: an op waits out the wire
+    time of every post that reached its node earlier that round), so
+    fan-in pressure inflates the uncached tail and the cache's fewer,
+    smaller posts deflate it.
+
+Correctness is gated harder than performance: every served value is
+compared against the ground truth of committed writes AT SERVE TIME.
+With ``trust_window=0`` (the gated configuration) a cached read NEVER
+serves a pre-mutation value — ``stale_served`` must be exactly zero
+across the full chaos schedule — and the uncached pass must show zero
+wrong reads too (the cluster's own fencing).
+
+Round model: reads of round t begin after round t's writes committed
+(the serving edge's request/commit epochs), so serving a value fetched
+or validated this round is a legal linearization; ``trust_window > 0``
+relaxes this across rounds and is deliberately NOT the gated default.
+
+``python -m repro.cache.fanin --smoke --json OUT.json`` runs the CI
+cell; exit status 0 iff every gate holds.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import sys
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.cache.client import CacheConfig, ClientCache, ClusterBackend
+from repro.cluster.store import ClusterStore
+from repro.data import ycsb
+from repro.rdma import verbs as rv
+
+U32 = np.uint32
+
+# (round, kind, name): kinds partition|stale|heal|resync|join|kill|failover;
+# name "primary"/"" resolves at fire time (hottest primary / last target)
+RoundEvent = Tuple[int, str, str]
+
+
+def default_events(rounds: int) -> List[RoundEvent]:
+    """The standard chaos schedule, scaled to the round count: a
+    partition/stale/heal/resync cycle in the first half, a live join at
+    the midpoint, a primary kill + explicit failover in the last
+    quarter.  On tiny round counts the later events are DROPPED instead
+    of squeezed: a kill landing before the cycle's resync would leave
+    resync targeting a dead node — tiny runs keep the early cycle only."""
+    p = max(2, rounds // 5)
+    j = rounds // 2 + 1
+    k = (3 * rounds) // 4 + 1
+    out = [(p, "partition", "primary"), (p, "stale", ""),
+           (p + 2, "heal", ""), (p + 3, "resync", "")]
+    if j > p + 3:
+        out.append((j, "join", "pmJ"))
+    if k > max(j, p + 3):
+        out += [(k, "kill", "primary"), (k + 1, "failover", "")]
+    return out
+
+
+def _uncached_round(cluster: ClusterStore, keys: np.ndarray,
+                    q: Dict[str, float]):
+    """One client's round at the uncached edge: batch the COMPUTE per
+    node (the jitted lookup), POST one single-row plan per op — the
+    request-per-post wire pattern.  ``q`` is the per-node FIFO queue
+    (microseconds of wire time already committed to that node this
+    round); each op's latency = queue on its node + its own unloaded
+    cost, and its post's wall time joins the queue behind it."""
+    B = keys.shape[0]
+    values = np.zeros((B, 4), U32)
+    found = np.zeros(B, bool)
+    lat = np.zeros(B)
+    posted = np.zeros(B, bool)
+    target, has = cluster._route_serving(keys)
+    per_node: Dict[str, tuple] = {}
+    where: Dict[int, Tuple[str, int]] = {}
+    for name in np.unique(target[has]):
+        node = cluster._nodes[name]
+        m = has & (target == name)
+        vs, fs, res = cluster._padded_lookup(node, keys[m])
+        pl = [np.asarray(leaf) for leaf in res.plan]
+        per_node[name] = (vs, fs, pl, node)
+        for j, i in enumerate(np.flatnonzero(m)):
+            where[int(i)] = (name, j)
+    for i in range(B):
+        if i not in where:
+            continue                       # no serving member right now
+        name, j = where[i]
+        vs, fs, pl, node = per_node[name]
+        values[i], found[i], posted[i] = vs[j], fs[j], True
+        if node.mem is not None:
+            comp = node.mem.post(
+                rv.VerbPlan(*(leaf[j:j + 1] for leaf in pl)), tag="read")
+            lat[i] = q.get(name, 0.0) + float(comp.op_us[0])
+            q[name] = q.get(name, 0.0) + float(comp.batch_us)
+    return values, found, lat, posted
+
+
+def _run_pass(cached: bool, *, scheme: str, clients: int, rounds: int,
+              ops_per_round: int, writes_per_round: int, num_records: int,
+              nodes: int, replicas: int, node_slots: int, dist: str,
+              theta: float, hot_frac: float, hot_op_frac: float,
+              cache_cfg: CacheConfig, events: Sequence[RoundEvent],
+              seed: int) -> Dict:
+    """One full pass (identical stream + chaos, cache on or off) over a
+    freshly built cluster.  Deterministic given the seed: both passes
+    draw the same rng sequence in the same order, so they replay the
+    SAME requests, values, and chaos injections."""
+    cluster = ClusterStore(scheme, nodes=nodes, replicas=replicas,
+                           node_slots=node_slots)
+    rng = np.random.RandomState(seed)
+    truth: Dict[int, np.ndarray] = {}      # id -> last committed value
+    for lo in range(0, num_records, 256):
+        ids = np.arange(lo, min(lo + 256, num_records))
+        vals = ycsb.make_value(rng, len(ids))
+        okn = np.asarray(cluster.insert(ycsb.make_key(ids), vals).ok)
+        for i, v in zip(ids[okn], vals[okn]):
+            truth[int(i)] = v
+    order = np.array(sorted(truth))
+    stream = ycsb.request_stream(dist, len(order), theta=theta,
+                                 hot_frac=hot_frac, hot_op_frac=hot_op_frac)
+    scramble = rng.permutation(len(order))
+
+    backend = ClusterBackend(cluster)
+    caches = [ClientCache(dataclasses.replace(cache_cfg,
+                                              seed=cache_cfg.seed + c),
+                          backend) for c in range(clients)] if cached else []
+
+    lats: List[float] = []
+    reports: List[dict] = []
+    partitioned: List[str] = []
+    killed: List[str] = []
+    stale_served = wrong_reads = unserved = 0
+    pending = sorted(events, key=lambda e: e[0])
+    pending_complete = False
+
+    def hottest_primary() -> str:
+        hot = ycsb.make_key(np.array([order[scramble[0] % len(order)]]))
+        return str(cluster.directory.replica_names(hot)[0, 0])
+
+    for rnd in range(1, rounds + 1):
+        if pending_complete:
+            if cluster.migrating:    # cutover one round after COPY: the
+                rb = cluster.complete_join()     # dual-read window was live
+                reports.append({"round": rnd, "event": "join",
+                                "node": rb.node, "moved_frac": rb.moved_frac,
+                                "bound": rb.bound,
+                                "within_bound": rb.within_bound})
+            pending_complete = False
+        while pending and pending[0][0] <= rnd:
+            _, kind, name = pending.pop(0)
+            if kind == "partition":
+                name = hottest_primary() if name in ("", "primary") else name
+                cluster.partition(name)
+                partitioned.append(name)
+                reports.append({"round": rnd, "event": "partition",
+                                "node": name})
+            elif kind == "stale":
+                name = name or partitioned[-1]
+                ranks = stream.sample(rng, 16) % len(scramble)
+                sids = order[scramble[ranks] % len(order)]
+                n = cluster.stale_write(name, ycsb.make_key(sids),
+                                        ycsb.make_value(rng, len(sids)))
+                reports.append({"round": rnd, "event": "stale",
+                                "node": name, "acks_injected": n})
+            elif kind == "heal":
+                name = name or partitioned[-1]
+                cluster.heal(name)
+                reports.append({"round": rnd, "event": "heal", "node": name})
+            elif kind == "resync":
+                name = name or partitioned[-1]
+                hr = cluster.resync(name)
+                reports.append({"round": rnd, "event": "resync",
+                                "node": hr.node,
+                                "stale_acks_detected": hr.stale_acks_detected,
+                                "resynced": hr.resynced})
+            elif kind == "join":
+                cluster.begin_join(name, node_slots)
+                pending_complete = True
+            elif kind == "kill":
+                name = hottest_primary() if name in ("", "primary") else name
+                cluster.kill(name)
+                killed.append(name)
+                reports.append({"round": rnd, "event": "kill", "node": name})
+            else:
+                assert kind == "failover", kind
+                name = name or killed[-1]
+                rep = cluster.failover(name)
+                reports.append({"round": rnd, "event": "failover",
+                                "dead": name,
+                                "promoted_keys": rep.promoted_keys,
+                                "recopied": rep.recopied,
+                                "recovery_log_free": rep.recovery_log_free()})
+
+        # writes commit BEFORE this round's reads begin (the round model)
+        if writes_per_round:
+            ranks = stream.sample(rng, writes_per_round) % len(scramble)
+            wids = order[scramble[ranks] % len(order)]
+            vals = ycsb.make_value(rng, len(wids))
+            res = cluster.update(ycsb.make_key(wids), vals)
+            okn = np.asarray(res.ok)
+            for i, v in zip(wids[okn], vals[okn]):
+                truth[int(i)] = v
+
+        q: Dict[str, float] = {}           # per-node round FIFO queue (us)
+        for c in range(clients):
+            ranks = stream.sample(rng, ops_per_round) % len(scramble)
+            ids = order[scramble[ranks] % len(order)]
+            keys = ycsb.make_key(ids)
+            if cached:
+                backend.last.clear()
+                r = caches[c].read_round(keys)
+                touched: set = set()
+                for _, srcs, _ in backend.last:
+                    touched |= srcs
+                before = max((q.get(n, 0.0) for n in touched), default=0.0)
+                for _, srcs, rus in backend.last:
+                    for nm in srcs:
+                        q[nm] = q.get(nm, 0.0) + rus
+                for i in range(len(ids)):
+                    if not r.served[i]:
+                        continue           # shed: counted by the valve
+                    if not r.found[i]:
+                        unserved += 1
+                        continue
+                    lats.append(before + float(r.op_us[i]))
+                    if not np.array_equal(r.values[i], truth[int(ids[i])]):
+                        if r.hit[i]:
+                            stale_served += 1   # the cardinal sin: gated == 0
+                        else:
+                            wrong_reads += 1
+            else:
+                values, found, lat, posted = _uncached_round(cluster, keys, q)
+                for i in range(len(ids)):
+                    if not (posted[i] and found[i]):
+                        unserved += 1
+                        continue
+                    lats.append(float(lat[i]))
+                    if not np.array_equal(values[i], truth[int(ids[i])]):
+                        wrong_reads += 1
+
+    # read-tagged wire counters per node (writes/load are untagged, so the
+    # comparison isolates exactly the read path the cache replaces)
+    tags = ("fill", "validate") if cached else ("read",)
+    per_node: Dict[str, dict] = {}
+    tot = {"posts": 0, "doorbells": 0, "verbs": 0, "bytes": 0}
+    for name, st in cluster.stats()["nodes"].items():
+        bt = st.get("wire", {}).get("by_tag", {})
+        row = {k: sum(bt.get(t, {}).get(k, 0) for t in tags) for k in tot}
+        row["total_doorbells"] = st.get("wire", {}).get("doorbells", 0)
+        per_node[name] = row
+        for k in tot:
+            tot[k] += row[k]
+
+    la = np.array(lats) if lats else np.zeros(1)
+    out = {
+        "read_posts": tot["posts"], "read_doorbells": tot["doorbells"],
+        "read_verbs": tot["verbs"], "read_bytes": tot["bytes"],
+        "per_node": per_node,
+        "p50_us": float(np.percentile(la, 50)),
+        "p99_us": float(np.percentile(la, 99)),
+        "reads_served": len(lats), "unserved": unserved,
+        "wrong_reads": wrong_reads,
+        "chaos": dict(cluster.chaos), "events": reports,
+    }
+    if cached:
+        agg = {k: sum(c.stats[k] for c in caches) for k in caches[0].stats}
+        denom = agg["hits"] + agg["misses"] + agg["shed"]
+        out["cache"] = agg
+        out["hit_rate"] = agg["hits"] / max(1, denom)
+        out["stale_served"] = stale_served
+    return out
+
+
+def run_fanin(scheme: str = "continuity", *, clients: int = 100,
+              rounds: int = 14, ops_per_round: int = 16,
+              writes_per_round: int = 2, num_records: int = 1200,
+              nodes: int = 4, replicas: int = 2,
+              node_slots: Optional[int] = None, dist: str = "hotspot",
+              theta: float = 0.99, hot_frac: float = 0.02,
+              hot_op_frac: float = 0.95, capacity: int = 128,
+              trust_window: int = 0, budget: Optional[int] = 12,
+              admission: bool = True,
+              events: Optional[Sequence[RoundEvent]] = None,
+              seed: int = 0) -> Dict:
+    """The fan-in cell: the same seeded run uncached then cached, plus
+    the request-stream self-check and the derived reduction ratios the
+    bench bands gate on."""
+    if node_slots is None:
+        node_slots = int(num_records * replicas / nodes * 2.5) + 256
+    if events is None:
+        events = default_events(rounds)
+    cache_cfg = CacheConfig(capacity=capacity, trust_window=trust_window,
+                            budget=budget, admission=admission, seed=seed)
+    common = dict(scheme=scheme, clients=clients, rounds=rounds,
+                  ops_per_round=ops_per_round,
+                  writes_per_round=writes_per_round,
+                  num_records=num_records, nodes=nodes, replicas=replicas,
+                  node_slots=node_slots, dist=dist, theta=theta,
+                  hot_frac=hot_frac, hot_op_frac=hot_op_frac,
+                  cache_cfg=cache_cfg, events=events, seed=seed)
+    uncached = _run_pass(False, **common)
+    cached = _run_pass(True, **common)
+    check = ycsb.stream_self_check(
+        ycsb.request_stream(dist, num_records, theta=theta,
+                            hot_frac=hot_frac, hot_op_frac=hot_op_frac),
+        np.random.RandomState(seed + 97))
+    return {
+        "scheme": scheme, "clients": clients, "rounds": rounds,
+        "ops_per_round": ops_per_round, "writes_per_round": writes_per_round,
+        "num_records": num_records, "nodes": nodes, "replicas": replicas,
+        "dist": dist, "theta": theta, "hot_frac": hot_frac,
+        "hot_op_frac": hot_op_frac, "trust_window": trust_window,
+        "capacity": capacity, "budget": budget, "seed": seed,
+        "stream_check": check,
+        "uncached": uncached, "cached": cached,
+        "doorbell_reduction": uncached["read_doorbells"]
+        / max(1, cached["read_doorbells"]),
+        "bytes_reduction": uncached["read_bytes"]
+        / max(1, cached["read_bytes"]),
+        "p99_ratio": cached["p99_us"] / max(1e-9, uncached["p99_us"]),
+    }
+
+
+# The hit-rate floor is deliberately below the steady-state rate (~0.6):
+# the schedule spends ~4 of 14 rounds in active chaos (partition cycle +
+# migration window) where the cache correctly refuses to trust itself,
+# and every committed hot-key write necessarily costs one miss per
+# caching client — the floor prices honesty, not a tuned best case.
+GATES = {"hit_rate_floor": 0.45, "doorbell_reduction_floor": 2.0}
+
+
+def check_gates(payload: Dict) -> List[str]:
+    """The CI gates (shared with `validate_bench`): returns the list of
+    violated gates, empty == pass."""
+    bad = []
+    ca, un = payload["cached"], payload["uncached"]
+    if ca.get("stale_served", 0) != 0:
+        bad.append(f"cache served {ca['stale_served']} stale read(s) "
+                   "(must be exactly 0)")
+    if ca["wrong_reads"] or un["wrong_reads"]:
+        bad.append(f"wrong reads: cached={ca['wrong_reads']} "
+                   f"uncached={un['wrong_reads']} (must be 0)")
+    if payload["doorbell_reduction"] < GATES["doorbell_reduction_floor"]:
+        bad.append(f"doorbell reduction {payload['doorbell_reduction']:.2f}x "
+                   f"< {GATES['doorbell_reduction_floor']}x")
+    if ca["p99_us"] > un["p99_us"]:
+        bad.append(f"cached p99 {ca['p99_us']:.1f}us > uncached "
+                   f"{un['p99_us']:.1f}us")
+    if ca["hit_rate"] < GATES["hit_rate_floor"]:
+        bad.append(f"hit rate {ca['hit_rate']:.3f} < "
+                   f"{GATES['hit_rate_floor']}")
+    if not payload["stream_check"]["ok"]:
+        bad.append(f"request stream failed its self-check: "
+                   f"{payload['stream_check']}")
+    return bad
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--scheme", default="continuity")
+    p.add_argument("--clients", type=int, default=100)
+    p.add_argument("--dist", default="hotspot", choices=("zipf", "hotspot"))
+    p.add_argument("--theta", type=float, default=0.99)
+    p.add_argument("--hot-frac", type=float, default=0.02)
+    p.add_argument("--hot-op-frac", type=float, default=0.95)
+    p.add_argument("--trust-window", type=int, default=0,
+                   help="rounds a validation is trusted; gated runs use 0")
+    p.add_argument("--budget", type=int, default=12,
+                   help="per-client per-round backend-fetch budget")
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--smoke", action="store_true",
+                   help="CI sizes (100 clients x 14 rounds)")
+    p.add_argument("--json", default=None, help="write the payload here")
+    args = p.parse_args(argv)
+
+    kw = (dict(rounds=14, ops_per_round=16, writes_per_round=2,
+               num_records=1200) if args.smoke
+          else dict(rounds=18, ops_per_round=16, writes_per_round=2,
+                    num_records=2000))
+    payload = run_fanin(args.scheme, clients=args.clients, dist=args.dist,
+                        theta=args.theta, hot_frac=args.hot_frac,
+                        hot_op_frac=args.hot_op_frac,
+                        trust_window=args.trust_window, budget=args.budget,
+                        seed=args.seed, **kw)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True, default=str)
+
+    un, ca = payload["uncached"], payload["cached"]
+    print(f"fanin {payload['scheme']} x{payload['clients']} clients "
+          f"({payload['dist']}, seed={payload['seed']}): "
+          f"doorbells {un['read_doorbells']} -> {ca['read_doorbells']} "
+          f"({payload['doorbell_reduction']:.2f}x), bytes "
+          f"{un['read_bytes']} -> {ca['read_bytes']} "
+          f"({payload['bytes_reduction']:.2f}x)")
+    print(f"  p50 {un['p50_us']:.2f} -> {ca['p50_us']:.2f}us, "
+          f"p99 {un['p99_us']:.2f} -> {ca['p99_us']:.2f}us "
+          f"(ratio {payload['p99_ratio']:.3f})")
+    print(f"  hit_rate={ca['hit_rate']:.3f} stale_served="
+          f"{ca['stale_served']} shed={ca['cache']['shed']} "
+          f"validations={ca['cache']['validations']} "
+          f"stamp_inval={ca['cache']['stamp_invalidations']} "
+          f"source_inval={ca['cache']['source_invalidations']} "
+          f"unresolved={ca['cache']['unresolved_validations']}")
+    for r in ca["events"]:
+        print(f"  event: {r}")
+    bad = check_gates(payload)
+    for b in bad:
+        print(f"FAIL: {b}", file=sys.stderr)
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -63,17 +63,18 @@ class _FakeClock:
         return self.t
 
 
-def _stream(dist: str, n: int):
-    if dist == "zipf":
-        return ycsb.Zipf(n)
-    assert dist == "hotspot", dist
-    return ycsb.Hotspot(n)
+def _stream(dist: str, n: int, theta: float = 0.99,
+            hot_frac: float = 0.2, hot_op_frac: float = 0.8):
+    return ycsb.request_stream(dist, n, theta=theta, hot_frac=hot_frac,
+                               hot_op_frac=hot_op_frac)
 
 
 def run_cluster(scheme: str = "continuity", workload: str = "A", *,
                 nodes: int = 4, replicas: int = 2,
                 num_records: int = 1200, num_ops: int = 2400,
                 batch: int = 240, dist: str = "zipf",
+                theta: float = 0.99, hot_frac: float = 0.2,
+                hot_op_frac: float = 0.8,
                 events: Sequence[Event] = (), node_slots: Optional[int] = None,
                 seed: int = 0, heartbeat_timeout: float = 5.0,
                 grace_s: float = 0.0, faults=None, retry=None) -> Dict:
@@ -122,7 +123,7 @@ def run_cluster(scheme: str = "continuity", workload: str = "A", *,
     for lo in range(0, num_records, batch):
         ids = np.arange(lo, min(lo + batch, num_records))
         load(ids, ycsb.make_value(rng, len(ids)))
-    stream = _stream(dist, len(order))
+    stream = _stream(dist, len(order), theta, hot_frac, hot_op_frac)
     scramble = rng.permutation(len(order))
 
     pending = sorted(events, key=lambda e: e[1])
@@ -240,7 +241,7 @@ def run_cluster(scheme: str = "continuity", workload: str = "A", *,
             base = max(order) + 1
             ids = np.arange(base, base + n_ins)
             load(ids, ycsb.make_value(rng, n_ins), record=True)
-            stream = _stream(dist, len(order))
+            stream = _stream(dist, len(order), theta, hot_frac, hot_op_frac)
         ops_done += n_logical
 
     # let a terminal kill drain through detection before the audit (the
@@ -275,6 +276,7 @@ def run_cluster(scheme: str = "continuity", workload: str = "A", *,
            if read_lat or write_lat else np.zeros(1))
     return {
         "scheme": scheme, "workload": workload, "dist": dist, "seed": seed,
+        "theta": theta, "hot_frac": hot_frac, "hot_op_frac": hot_op_frac,
         "nodes_initial": nodes, "nodes_final": len(cluster.node_names()),
         "replicas": replicas, "ops": ops_done,
         "chaos": dict(cluster.chaos), "partitioned": partitioned,
@@ -349,7 +351,9 @@ def main(argv=None) -> int:
     p.add_argument("--workload", default="A")
     p.add_argument("--nodes", type=int, default=4)
     p.add_argument("--replicas", type=int, default=2)
-    p.add_argument("--dist", default="zipf", choices=("zipf", "hotspot"))
+    p.add_argument("--dist", default=None, choices=("zipf", "hotspot"),
+                   help="request distribution (default: zipf here, the "
+                        "fan-in drill's own hotspot default under --cache)")
     p.add_argument("--seed", type=int, default=0,
                    help="the ONE seed every stream derives from (echoed "
                         "in the JSON payload for bit-exact replay)")
@@ -357,7 +361,25 @@ def main(argv=None) -> int:
                    help="CI sizes: small run + join + primary kill + the "
                         "durability and migration drills")
     p.add_argument("--json", default=None, help="write the payload here")
+    p.add_argument("--cache", action="store_true",
+                   help="run the client-cache fan-in drill instead "
+                        "(`repro.cache.fanin`): O(100) clients behind "
+                        "version-stamped caches vs the uncached baseline")
+    p.add_argument("--clients", type=int, default=100,
+                   help="fan-in client count (only with --cache)")
     args = p.parse_args(argv)
+
+    if args.cache:
+        from repro.cache import fanin
+        fwd = ["--scheme", args.scheme,
+               "--clients", str(args.clients), "--seed", str(args.seed)]
+        if args.dist is not None:
+            fwd += ["--dist", args.dist]
+        if args.smoke:
+            fwd.append("--smoke")
+        if args.json:
+            fwd += ["--json", args.json]
+        return fanin.main(fwd)
 
     kw = (dict(num_records=600, num_ops=1200, batch=240) if args.smoke
           else dict(num_records=2000, num_ops=4000, batch=400))
@@ -366,7 +388,7 @@ def main(argv=None) -> int:
         ("kill", 2 * kw["num_ops"] // 3, "primary"),
     )
     cell = run_cluster(args.scheme, args.workload, nodes=args.nodes,
-                       replicas=args.replicas, dist=args.dist,
+                       replicas=args.replicas, dist=args.dist or "zipf",
                        events=events, seed=args.seed, **kw)
     payload = {
         "cluster": cell,
@@ -378,7 +400,7 @@ def main(argv=None) -> int:
             json.dump(payload, f, indent=2, sort_keys=True, default=str)
 
     print(f"cluster {args.scheme}/{args.workload} x{args.nodes} "
-          f"(R={args.replicas}, {args.dist}, seed={args.seed}): "
+          f"(R={args.replicas}, {args.dist or 'zipf'}, seed={args.seed}): "
           f"{cell['ops_per_s']:.0f} ops/s p50={cell['p50_us']:.2f}us "
           f"p99={cell['p99_us']:.2f}us nodes {cell['nodes_initial']}->"
           f"{cell['nodes_final']}")

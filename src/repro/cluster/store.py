@@ -101,6 +101,28 @@ class ClusterReadResult(NamedTuple):
     round_us: float
 
 
+class ClusterStampResult(NamedTuple):
+    """One stamp-validation round (`ClusterStore.version_read`)."""
+
+    stamps: np.ndarray      # (B, S) int64 — scheme stamp rows; -1 = unresolved
+    source: np.ndarray      # (B,) object — answering node name ("" = none)
+    resolved: np.ndarray    # (B,) bool — a serving member answered
+    op_us: np.ndarray       # (B,) unloaded per-op latency
+    round_us: float
+
+
+class ClusterStampedRead(NamedTuple):
+    """A cache-fill read (`ClusterStore.lookup_stamped`): lookup answers
+    plus the answering node's version stamps from the same routing."""
+
+    values: np.ndarray      # (B, 4) uint32
+    found: np.ndarray       # (B,) bool
+    stamps: np.ndarray      # (B, S) int64 — -1 rows carry no stamp
+    source: np.ndarray      # (B,) object — answering node name ("" = none)
+    op_us: np.ndarray       # (B,) unloaded per-op latency
+    round_us: float
+
+
 @dataclasses.dataclass(frozen=True)
 class RebalanceReport:
     """One join/leave rebalance; ``moved_frac <= bound`` is the CI gate."""
@@ -124,6 +146,13 @@ class RebalanceReport:
 
 def _pad(n: int) -> int:
     return -(-max(n, 1) // PAD_QUANTUM) * PAD_QUANTUM
+
+
+def _slice_plan(plan, n: int):
+    """First ``n`` rows of a padded `VerbPlan` as host arrays: plan rows
+    are per-op and independent, so the slice is a legal plan on its own."""
+    from repro.rdma import verbs as rv
+    return rv.VerbPlan(*(np.asarray(leaf)[:n] for leaf in plan))
 
 
 class ClusterStore:
@@ -400,6 +429,121 @@ class ClusterStore:
             values[m] = np.where(fs[:, None], vs, values[m])
             found[m] |= fs
         return round_us
+
+    # -- cache-validation reads (repro.cache) -------------------------------
+    # Version stamps are ENDPOINT-LOCAL: replica op histories legitimately
+    # diverge after a resync (reconciliation replays different ops than the
+    # originals), so a stamp is only comparable against the node that
+    # produced it.  The answering node's name travels with every stamp;
+    # the cache treats a different answerer — or an unresolved row — as a
+    # failed validation and falls back to a full read.  That rule is what
+    # keeps cached reads safe across partition/heal/resync and failover:
+    # any node whose image could have moved past a client's stamp either
+    # bumped the pair's version (same-node mutation, stale-ack repair,
+    # resync overwrite) or stopped being the answerer.
+
+    def _route_serving(self, keys) -> Tuple[np.ndarray, np.ndarray]:
+        """(target, has): `_lookup_via`'s first-serving-member rule over
+        the current directory, without the migration dual-read retry."""
+        sets = self.directory.replica_names(keys)
+        serving = np.vectorize(self._name_serving)(sets)
+        has = serving.any(axis=1)
+        first = np.argmax(serving, axis=1)
+        target = np.where(has, sets[np.arange(keys.shape[0]), first], "")
+        return target, has
+
+    def _padded_stamp(self, node: _Node, keys: np.ndarray):
+        n = keys.shape[0]
+        pk = np.zeros((_pad(n), 4), U32)
+        pk[:n] = keys
+        st = np.asarray(node.store.version_stamp(node.table, pk), np.int64)
+        plan = node.store.version_read_plan(node.table, pk)
+        # post only the REAL rows: validation is priced per key actually
+        # checked, never per pad lane (the 8-byte-per-key claim is a gate)
+        return st[:n], _slice_plan(plan, n)
+
+    def lookup_stamped(self, keys) -> ClusterStampedRead:
+        """Cache-fill read: one routed lookup whose answers also carry the
+        answering node's version stamps.  For continuity the stamp word
+        lies INSIDE the segment the lookup already fetched, so the fill
+        stamp is free on the wire; the post is tagged ``"fill"``.
+
+        Live-migration windows need no special case: a join's COPY phase
+        only ADDS copies, so the OLD directory's serving members (the
+        routing below) hold every key, and `_write` commits bump BOTH
+        directories' member sets — a stamp taken here stays honest for
+        its node through the window.  The cutover's ownership changes
+        surface as source mismatches at the cache, never as stale hits."""
+        keys = np.asarray(keys, U32).reshape(-1, 4)
+        B = keys.shape[0]
+        src = np.full((B,), "", object)
+        values = np.zeros((B, 4), U32)
+        found = np.zeros((B,), bool)
+        lat = np.zeros((B,))
+        stamps = None
+        round_us = 0.0
+        target, has = self._route_serving(keys)
+        for name in np.unique(target[has]):
+            node = self._nodes[name]
+            m = has & (target == name)
+            vs, fs, res = self._padded_lookup(node, keys[m])
+            st, _ = self._padded_stamp(node, keys[m])
+            if stamps is None:
+                stamps = np.full((B, st.shape[1]), -1, np.int64)
+            if node.mem is not None and res.plan is not None:
+                try:
+                    comp = node.mem.post(_slice_plan(res.plan, int(m.sum())),
+                                         tag="fill")
+                except DeliveryTimeout:
+                    self.chaos["read_timeouts"] += 1
+                    continue
+                lat[m] = np.maximum(lat[m], comp.op_us[: int(m.sum())])
+                round_us = max(round_us, comp.batch_us)
+            values[m] = np.where(fs[:, None], vs, values[m])
+            found[m] |= fs
+            stamps[m] = st
+            src[m] = name
+        if stamps is None:
+            stamps = np.full((B, 1), -1, np.int64)
+        return ClusterStampedRead(values, found, stamps, src, lat, round_us)
+
+    def version_read(self, keys) -> ClusterStampResult:
+        """Stamp-validation round: the scheme's `version_read_plan` —
+        continuity: ONE depth-0 8-byte indicator-word READ per key —
+        posted to each key's serving member (the OLD directory during a
+        migration window, whose members stay write-current — see
+        `lookup_stamped`), tagged ``"validate"``.  Keys with no serving
+        member and delivery-timed-out sub-batches report unresolved;
+        callers MUST treat unresolved as a failed validation (miss),
+        never a hit."""
+        keys = np.asarray(keys, U32).reshape(-1, 4)
+        B = keys.shape[0]
+        lat = np.zeros((B,))
+        src = np.full((B,), "", object)
+        resolved = np.zeros((B,), bool)
+        stamps = None
+        round_us = 0.0
+        target, has = self._route_serving(keys)
+        for name in np.unique(target[has]):
+            node = self._nodes[name]
+            m = has & (target == name)
+            st, plan = self._padded_stamp(node, keys[m])
+            if stamps is None:
+                stamps = np.full((B, st.shape[1]), -1, np.int64)
+            if node.mem is not None and plan is not None:
+                try:
+                    comp = node.mem.post(plan, tag="validate")
+                except DeliveryTimeout:
+                    self.chaos["read_timeouts"] += 1
+                    continue
+                lat[m] = comp.op_us[: int(m.sum())]
+                round_us = max(round_us, comp.batch_us)
+            stamps[m] = st
+            src[m] = name
+            resolved[m] = True
+        if stamps is None:
+            stamps = np.full((B, 1), -1, np.int64)
+        return ClusterStampResult(stamps, src, resolved, lat, round_us)
 
     def scan(self, keys, spans) -> ClusterReadResult:
         """YCSB-E short scans: route each scan's START key to its serving

@@ -200,10 +200,16 @@ class ContinuityHandler(_Handler):
             addr = self._addr_ext(cfg, eidx, slot - S)
         return PMStore(op_id, "payload", False, addr, SLOT_BYTES, True, writes)
 
-    def _commit(self, cfg, op_id, pair, word) -> PMStore:
+    def _commit(self, cfg, op_id, st, pair, word) -> PMStore:
+        # the version bump shares the ONE atomic 8-byte store: the word's
+        # upper half is the per-pair committed-op counter (see
+        # ch.ContinuityTable.version) — same record, same nbytes, still
+        # untearable, zero extra PM writes
         return PMStore(op_id, "indicator", True, self._addr_indicator(cfg, pair),
                        ch.INDICATOR_BYTES, True,
-                       (SubWrite("indicator", (pair,), np.uint32(word)),))
+                       (SubWrite("indicator", (pair,), np.uint32(word)),
+                        SubWrite("version", (pair,),
+                                 U32(int(st["version"][pair]) + 1))))
 
     def _trace_insert(self, cfg, st, op_id, key, val, route):
         pair, parity = int(route[0][op_id]), int(route[1][op_id])
@@ -227,7 +233,7 @@ class ContinuityHandler(_Handler):
                  SubWrite("ext_count", (), np.int32(eidx + 1)))))
         recs.append(self._payload(cfg, op_id, pair, slot, eidx, key, val))
         word = U32(int(st["indicator"][pair]) | (1 << slot))
-        recs.append(self._commit(cfg, op_id, pair, word))
+        recs.append(self._commit(cfg, op_id, st, pair, word))
         return recs, True, ("ext" if slot >= S else "main")
 
     def _trace_update(self, cfg, st, op_id, key, val, route):
@@ -244,7 +250,7 @@ class ContinuityHandler(_Handler):
         recs = [self._payload(cfg, op_id, pair, new, eidx, key, val)]
         # out-of-place: BOTH bit flips land in the one atomic word store
         word = U32(int(st["indicator"][pair]) ^ ((1 << old) | (1 << new)))
-        recs.append(self._commit(cfg, op_id, pair, word))
+        recs.append(self._commit(cfg, op_id, st, pair, word))
         return recs, True, "oop"
 
     def _trace_delete(self, cfg, st, op_id, key, val, route):
@@ -256,7 +262,7 @@ class ContinuityHandler(_Handler):
             return [], False, "miss"
         slot = int(cand[int(np.argmax(match))])
         word = U32(int(st["indicator"][pair]) & ~(1 << slot))
-        return [self._commit(cfg, op_id, pair, word)], True, "main"
+        return [self._commit(cfg, op_id, st, pair, word)], True, "main"
 
     def visible(self, cfg, st):
         out = {}

@@ -136,6 +136,11 @@ class ContinuityTable(NamedTuple):
     keys: jnp.ndarray        # (P, SLOTS, KEY_LANES) uint32
     vals: jnp.ndarray        # (P, SLOTS, VAL_LANES) uint32
     indicator: jnp.ndarray   # (P,) uint32 — one valid bit per slot (+ext bits)
+    version: jnp.ndarray     # (P,) uint32 — per-pair committed-op counter; the
+    #   upper half of the 8B atomic indicator word (total_bits <= 32 leaves it
+    #   free), bumped by the SAME store that flips the bits.  A bare indicator
+    #   word is ABA-prone (two updates can walk a key back to its slot); the
+    #   counter makes (version << 32 | indicator) a safe client version stamp.
     ext_keys: jnp.ndarray    # (PE, EXT_SLOTS, KEY_LANES) uint32
     ext_vals: jnp.ndarray    # (PE, EXT_SLOTS, VAL_LANES) uint32
     ext_map: jnp.ndarray     # (P,) int32 — pair -> ext group index, -1 = none
@@ -149,6 +154,7 @@ def create(cfg: ContinuityConfig) -> ContinuityTable:
         keys=jnp.zeros((P, S, KEY_LANES), U32),
         vals=jnp.zeros((P, S, VAL_LANES), U32),
         indicator=jnp.zeros((P,), U32),
+        version=jnp.zeros((P,), U32),
         ext_keys=jnp.zeros((PE, E, KEY_LANES), U32),
         ext_vals=jnp.zeros((PE, E, VAL_LANES), U32),
         ext_map=jnp.full((P,), -1, I32),
@@ -301,6 +307,35 @@ def scan_plan(cfg: ContinuityConfig, table: ContinuityTable, keys, spans):
          0, False)])
 
 
+def version_stamp(cfg: ContinuityConfig, table: ContinuityTable, keys):
+    """(B, 2) uint32 version stamp per key: ``[version, indicator]`` of the
+    key's home pair — the two halves of the ONE 8-byte word every committed
+    mutation atomically stores.  A client that caches a value together with
+    this stamp can later validate the entry with a single 8-byte READ
+    (`version_read_plan`): any committed insert/update/delete on the pair
+    bumped ``version``, so stamp equality proves the cached value is the
+    value a fresh lookup would return.  The counter half is what makes the
+    check ABA-proof — indicator bits alone can walk back to a prior pattern
+    (update a key twice and it returns to its original slot)."""
+    keys = jnp.asarray(keys, U32).reshape(-1, KEY_LANES)
+    pair, _ = locate(cfg, keys)
+    return jnp.stack([table.version[pair], table.indicator[pair]], axis=-1)
+
+
+def version_read_plan(cfg: ContinuityConfig, keys):
+    """Verb plan of a stamp validation batch: ONE depth-0 8-byte READ per key
+    at the home pair's indicator-word offset.  This is the whole point of
+    indicator-word validation: it costs `INDICATOR_BYTES` on the wire versus
+    `segment_bytes` for a full lookup, with no server-side invalidation
+    protocol at all."""
+    from repro.rdma import verbs as rv
+    keys = jnp.asarray(keys, U32).reshape(-1, KEY_LANES)
+    pair, _ = locate(cfg, keys)
+    row_bytes = INDICATOR_BYTES + cfg.slots_per_pair * SLOT_BYTES
+    return rv.single_read_plan(keys.shape[0], rv.REGION_TABLE,
+                               pair * row_bytes, INDICATOR_BYTES)
+
+
 # ---------------------------------------------------------------------------
 # server write path — log-free failure atomicity (paper §III-C)
 # ---------------------------------------------------------------------------
@@ -326,9 +361,14 @@ def _scatter_payload(table: ContinuityTable, ok, pair, slot_id, ext_idx,
 
 
 def _commit_indicator(table: ContinuityTable, ok, pair, new_word) -> ContinuityTable:
-    """Phase 2: ONE atomic word store commits the operation."""
+    """Phase 2: ONE atomic word store commits the operation.
+
+    The same 8-byte store carries the per-pair version counter in its upper
+    half, so the bump costs zero extra PM writes (Table I unchanged)."""
     m_pair = jnp.where(ok, pair, jnp.iinfo(I32).max)
-    return table._replace(indicator=table.indicator.at[m_pair].set(new_word, mode="drop"))
+    return table._replace(
+        indicator=table.indicator.at[m_pair].set(new_word, mode="drop"),
+        version=table.version.at[m_pair].add(U32(1), mode="drop"))
 
 
 def _find_insert_slot(cfg, table, key):
@@ -792,9 +832,15 @@ def _insert_fused(cfg: ContinuityConfig, table: ContinuityTable, keys, vals,
     # so a scatter-add is the batch of independent atomic ORs)
     add = jnp.zeros((P,), U32).at[jnp.where(ok, pair_s, drop)].add(
         U32(1) << slot.astype(U32), mode="drop")
+    # version bumps ride the same per-pair commit scatter: one bump per
+    # committed op, and per-pair counts are order-independent sums, so the
+    # fused path stays byte-identical to the serial oracle
+    vadd = jnp.zeros((P,), U32).at[jnp.where(ok, pair_s, drop)].add(
+        U32(1), mode="drop")
     table = table._replace(
         keys=tkeys, vals=tvals, ext_keys=tek, ext_vals=tev,
         indicator=table.indicator | add,
+        version=table.version + vadd,
         count=table.count + jnp.sum(ok).astype(I32))
 
     okb = jnp.zeros((B,), jnp.bool_).at[idx_s].set(ok)
@@ -1004,6 +1050,10 @@ def resize(cfg: ContinuityConfig, table: ContinuityTable, factor: int = 2):
     """
     new_cfg = cfg.grow(factor)
     new = create(new_cfg)
+    # seed versions strictly above the old table's max: stamps cached against
+    # the old geometry can then never compare equal to a post-resize stamp
+    new = new._replace(version=jnp.full(
+        (new_cfg.num_pairs,), jnp.max(table.version) + U32(1), U32))
     keys, vals, mask = extract_items(cfg, table)
     new, _, _ = insert(new_cfg, new, keys, vals, mask)
     return new_cfg, new

@@ -81,8 +81,9 @@ def table_pspec(axes=("data",)) -> ContinuityTable:
     extension pool and the scalar counters stay replicated. Live-item counting
     in distributed mode is ``sharded_count`` (indicator popcount)."""
     d = P(axes)
-    return ContinuityTable(keys=d, vals=d, indicator=d, ext_keys=P(),
-                           ext_vals=P(), ext_map=d, ext_count=P(), count=P())
+    return ContinuityTable(keys=d, vals=d, indicator=d, version=d,
+                           ext_keys=P(), ext_vals=P(), ext_map=d,
+                           ext_count=P(), count=P())
 
 
 def sharded_count(table: ContinuityTable) -> jnp.ndarray:

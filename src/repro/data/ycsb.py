@@ -104,6 +104,41 @@ class Hotspot:
         return np.where(is_hot, hot_ids, cold_ids)
 
 
+def request_stream(dist: str, n: int, *, theta: float = 0.99,
+                   hot_frac: float = 0.2, hot_op_frac: float = 0.8):
+    """The ONE factory for skewed request streams: every sim (rdma,
+    cluster, cache fan-in) builds its stream here so the skew knobs —
+    zipf ``theta``, hotspot ``hot_frac``/``hot_op_frac`` — are sweepable
+    end to end instead of baked into each caller."""
+    if dist == "zipf":
+        return Zipf(n, theta=theta)
+    assert dist == "hotspot", dist
+    return Hotspot(n, hot_frac=hot_frac, hot_op_frac=hot_op_frac)
+
+
+def stream_self_check(stream, rng: np.random.RandomState,
+                      samples: int = 20_000, tol: float = 0.05) -> dict:
+    """Tiny distribution audit (the cache tests gate on it): draw
+    ``samples`` ranks and compare the measured hot mass to the stream's
+    analytic expectation.  Hotspot: the fraction of draws landing inside
+    the hot set must match ``hot_op_frac`` (the cold branch never wraps
+    into the hot range by construction).  Zipf: the mass on the top 1% of
+    ranks must match the partial zeta sum.  A sim whose 'hotspot' is not
+    actually hot would silently void every cache claim downstream."""
+    ranks = stream.sample(rng, samples)
+    if isinstance(stream, Hotspot):
+        measured = float((ranks < stream.hot).mean())
+        expected = float(stream.hot_op_frac)
+    else:
+        k = max(1, stream.n // 100)
+        measured = float((ranks < k).mean())
+        expected = float(np.sum(1.0 / np.arange(1, k + 1) ** stream.theta)
+                         / stream.zetan)
+    return {"ok": bool(abs(measured - expected) <= tol),
+            "measured": measured, "expected": expected, "tol": tol,
+            "samples": samples}
+
+
 @dataclasses.dataclass
 class OpBatch:
     ops: np.ndarray     # (B,) int32 op codes
@@ -112,15 +147,16 @@ class OpBatch:
 
 
 def generate(workload: str, num_records: int, num_ops: int,
-             batch: int, seed: int = 0) -> Iterator[OpBatch]:
+             batch: int, seed: int = 0,
+             theta: float = 0.99) -> Iterator[OpBatch]:
     """Yield op batches for a YCSB workload over a preloaded keyspace of
     ``num_records`` records (load phase is the caller's insert of ids
-    [0, num_records))."""
+    [0, num_records)).  ``theta`` sweeps the request-skew exponent."""
     rng = np.random.RandomState(seed)
     mix = WORKLOADS[workload]
     codes = np.array([c for c, _ in mix])
     probs = np.array([p for _, p in mix])
-    zipf = Zipf(num_records)
+    zipf = Zipf(num_records, theta=theta)
     next_insert = num_records
     done = 0
     while done < num_ops:

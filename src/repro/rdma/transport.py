@@ -179,6 +179,10 @@ class RemoteMemory:
         self.reorders = 0       # intra-round reordered deliveries
         self.backoff_us = 0.0   # total backoff waited before replays
         self.give_ups = 0       # rounds that exhausted max_attempts
+        # per-tag wire counters: callers label posts ("lookup", "validate",
+        # "fill", ...) so the cache benchmarks can separate validation
+        # traffic from miss traffic on ONE endpoint without guessing
+        self.by_tag: dict = {}
 
     @classmethod
     def from_policy(cls, policy, link: Optional[LinkModel] = None,
@@ -223,13 +227,15 @@ class RemoteMemory:
             f"round dropped {self.retry.max_attempts} times "
             f"(waited {spent:.1f}us)")
 
-    def post(self, plan: rv.VerbPlan) -> Completion:
+    def post(self, plan: rv.VerbPlan, tag: Optional[str] = None) -> Completion:
         """Execute one doorbell-batched verb plan; returns its `Completion`
         and folds it into the endpoint's aggregate counters.  With a
         `FaultInjector` attached, every dependent round runs the
         timeout/backoff/replay loop — a `DeliveryTimeout` propagates to
         the caller with the endpoint's clock already advanced (the wait
-        happened on the wire whether or not the round landed)."""
+        happened on the wire whether or not the round landed).  ``tag``
+        additionally buckets the post's wire counters under
+        ``stats()["by_tag"][tag]``."""
         verb = np.asarray(plan.verb)
         nbytes = np.asarray(plan.nbytes)
         depth = np.asarray(plan.depth)
@@ -261,6 +267,15 @@ class RemoteMemory:
         self.posts += 1
         self.total_verbs += nverbs
         self.total_bytes += nb
+        if tag is not None:
+            t = self.by_tag.setdefault(
+                tag, {"posts": 0, "doorbells": 0, "verbs": 0, "bytes": 0,
+                      "simulated_us": 0.0})
+            t["posts"] += 1
+            t["doorbells"] += rounds
+            t["verbs"] += nverbs
+            t["bytes"] += nb
+            t["simulated_us"] += batch_us
         return Completion(batch_us, op_us, rounds, nverbs, nb)
 
     def stats(self) -> dict:
@@ -283,4 +298,6 @@ class RemoteMemory:
             out["give_ups"] = self.give_ups
             if self.faults is not None:
                 out["injected"] = dict(self.faults.injected)
+        if self.by_tag:
+            out["by_tag"] = {k: dict(v) for k, v in self.by_tag.items()}
         return out

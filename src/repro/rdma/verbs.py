@@ -88,6 +88,13 @@ def pack(B: int, lane_list: Sequence[Lane]) -> VerbPlan:
     return VerbPlan(*cols)
 
 
+def single_read_plan(B: int, region, offset, nbytes) -> VerbPlan:
+    """(B, 1) plan of independent depth-0 READs — one contiguous fetch per
+    op, the whole batch behind ONE doorbell.  The shape cache validation
+    traffic takes: `offset`/`nbytes` broadcast over the batch."""
+    return pack(B, [(READ, region, offset, nbytes, 0, False)])
+
+
 def flatten(plan: VerbPlan) -> VerbPlan:
     """Collapse leading batch dims (e.g. a vmapped (S, B, M) plan) to (B', M)."""
     return VerbPlan(*(leaf.reshape(-1, leaf.shape[-1]) for leaf in plan))

@@ -1,0 +1,431 @@
+"""Client cache subsystem tests — the ISSUE's correctness property first:
+after ANY committed update/delete, a validating cached read NEVER returns
+the pre-mutation value.  Driven three ways:
+
+  * per-scheme over `StoreBackend` (every registered scheme, fixed cases
+    + a seeded/hypothesis property over random mutation waves);
+  * over a `ClusterStore` through partition -> stale-epoch -> heal ->
+    resync chaos via `ClusterBackend`;
+  * the continuity ABA regression: two back-to-back updates RESTORING a
+    value must still change the stamp (the per-pair op counter in the
+    8-byte word), so value-coincidence can never revalidate an entry.
+
+Plus the policy units (TinyLFU sketch, admission, backpressure), the
+keep-on-unresolved semantics, the tagged wire accounting the fan-in sim
+bills from, the request-stream self-check, and a tiny end-to-end fan-in
+run with the full chaos schedule.
+"""
+
+import numpy as np
+import pytest
+
+from _propcheck import given, settings, st
+from repro import api
+from repro.cache import (Backpressure, CacheConfig, ClientCache,
+                         ClusterBackend, FrequencySketch, StoreBackend,
+                         key_hash)
+from repro.cache import fanin
+from repro.cluster import ClusterStore
+from repro.data import ycsb
+from repro.rdma import verbs as rv
+
+U32 = np.uint32
+
+
+def K(ids):
+    return ycsb.make_key(np.asarray(ids))
+
+
+# ---------------------------------------------------------------------------
+# policy units
+# ---------------------------------------------------------------------------
+
+class TestPolicy:
+    def test_key_hash_deterministic_and_spread(self):
+        ks = [K([i])[0].tobytes() for i in range(256)]
+        hs = [key_hash(k) for k in ks]
+        assert hs == [key_hash(k) for k in ks]
+        assert len(set(hs)) == len(hs)
+
+    def test_sketch_counts_and_overestimates_only(self):
+        sk = FrequencySketch(width=256, depth=4, seed=1)
+        h, other = key_hash(b"a" * 16), key_hash(b"b" * 16)
+        for _ in range(5):
+            sk.add(h)
+        assert sk.estimate(h) >= 5          # count-min never undercounts
+        assert sk.estimate(other) <= sk.estimate(h)
+
+    def test_sketch_halving_decay(self):
+        sk = FrequencySketch(width=64, depth=2, sample=32, seed=0)
+        h = key_hash(b"hot!" * 4)
+        for _ in range(20):
+            sk.add(h)
+        before = sk.estimate(h)
+        for i in range(40):                 # push past the sample boundary
+            sk.add(key_hash(i.to_bytes(8, "little")))
+        assert sk.ages >= 1
+        assert sk.estimate(h) <= before // 2 + 1
+
+    def test_backpressure_unlimited(self):
+        bp = Backpressure(None)
+        assert bp.grant(np.array([1, 2, 3])).all()
+        assert bp.shed == 0
+
+    def test_backpressure_keeps_hottest(self):
+        bp = Backpressure(2)
+        g = bp.grant(np.array([5, 1, 9, 1]))
+        assert g.tolist() == [True, False, True, False]
+        assert bp.shed == 2 and bp.granted == 2
+
+    def test_backpressure_stable_ties(self):
+        g = Backpressure(1).grant(np.array([3, 3, 3]))
+        assert g.tolist() == [True, False, False]
+
+
+# ---------------------------------------------------------------------------
+# ClientCache semantics against a scriptable backend
+# ---------------------------------------------------------------------------
+
+class FakeBackend:
+    """Dict-served backend with switches for source flips and
+    unresolved (partition-style) validations."""
+
+    def __init__(self):
+        self.data = {}                      # kb -> (value, stamp int)
+        self.source = "n0"
+        self.resolved = True
+        self.fetches = 0
+
+    def put(self, i, val, stamp):
+        self.data[K([i])[0].tobytes()] = (np.asarray(val, U32), stamp)
+
+    def drop(self, i):
+        self.data.pop(K([i])[0].tobytes(), None)
+
+    def _iter(self, keys):
+        keys = np.asarray(keys, U32).reshape(-1, 4)
+        return keys.shape[0], [k.tobytes() for k in keys]
+
+    def validate(self, keys):
+        B, kbs = self._iter(keys)
+        stamps = np.full((B, 1), -1, np.int64)
+        for j, kb in enumerate(kbs):
+            if kb in self.data:
+                stamps[j, 0] = self.data[kb][1]
+        return (stamps, np.full(B, self.source, object),
+                np.full(B, self.resolved, bool), np.zeros(B))
+
+    def fetch(self, keys):
+        B, kbs = self._iter(keys)
+        self.fetches += B
+        vals = np.zeros((B, 4), U32)
+        found = np.zeros(B, bool)
+        stamps = np.full((B, 1), -1, np.int64)
+        for j, kb in enumerate(kbs):
+            if kb in self.data:
+                vals[j], stamps[j, 0] = self.data[kb]
+                found[j] = True
+        if not self.resolved:               # nobody answers fetches either
+            found[:] = False
+            stamps[:] = -1
+        return (vals, found, stamps, np.full(B, self.source, object),
+                np.zeros(B))
+
+
+class TestClientCache:
+    def _cache(self, **kw):
+        be = FakeBackend()
+        for i in range(8):
+            be.put(i, [i, i, i, i], stamp=100 + i)
+        return ClientCache(CacheConfig(**kw), be), be
+
+    def test_miss_fill_then_validated_hit(self):
+        c, be = self._cache(capacity=16)
+        r = c.read_round(K([0, 1]))
+        assert r.found.all() and not r.hit.any()
+        r = c.read_round(K([0, 1]))
+        assert r.found.all() and r.hit.all()
+        assert c.stats["validations"] == 2 and c.stats["hits"] == 2
+
+    def test_same_round_dedup_and_serve(self):
+        c, be = self._cache(capacity=16)
+        r = c.read_round(K([3, 3, 3, 4]))
+        assert r.found.all()
+        assert be.fetches == 2              # unique keys only
+        assert np.array_equal(r.values[0], r.values[1])
+
+    def test_stamp_mismatch_evicts_and_serves_new_value(self):
+        c, be = self._cache(capacity=16)
+        c.read_round(K([5]))
+        be.put(5, [9, 9, 9, 9], stamp=999)  # committed remote mutation
+        r = c.read_round(K([5]))
+        assert r.found[0] and not r.hit[0]
+        assert r.values[0].tolist() == [9, 9, 9, 9]
+        assert c.stats["stamp_invalidations"] == 1
+
+    def test_source_flip_evicts(self):
+        c, be = self._cache(capacity=16)
+        c.read_round(K([5]))
+        be.source = "n1"                    # answerer changed (failover)
+        r = c.read_round(K([5]))
+        assert r.found[0] and not r.hit[0]
+        assert c.stats["source_invalidations"] == 1
+
+    def test_unresolved_keeps_entry_but_never_serves_it(self):
+        c, be = self._cache(capacity=16)
+        c.read_round(K([5]))
+        be.resolved = False                 # partition: nobody can answer
+        r = c.read_round(K([5]))
+        assert not r.hit[0] and not r.found[0]
+        assert c.stats["unresolved_validations"] == 1
+        kb = K([5])[0].tobytes()
+        assert kb in c.entries              # kept, unservable
+        be.resolved = True                  # heal: the entry revalidates
+        misses_before = c.stats["misses"]
+        r = c.read_round(K([5]))
+        assert r.hit[0] and r.found[0]
+        assert c.stats["misses"] == misses_before
+
+    def test_delete_never_serves_ghost(self):
+        c, be = self._cache(capacity=16)
+        c.read_round(K([2]))
+        be.drop(2)                          # committed delete
+        r = c.read_round(K([2]))
+        assert not r.found[0] and not r.hit[0]
+
+    def test_shed_is_refused_not_served(self):
+        c, be = self._cache(capacity=16, budget=0)
+        r = c.read_round(K([0, 1, 2]))
+        assert not r.served.any() and not r.found.any()
+        assert c.stats["shed"] == 3 and be.fetches == 0
+
+    def test_tinylfu_admission_protects_hot_resident(self):
+        c, be = self._cache(capacity=1)
+        for _ in range(4):                  # make key 0 sketch-hot
+            c.read_round(K([0]))
+        c.read_round(K([7]))                # one-hit wonder
+        assert K([0])[0].tobytes() in c.entries
+        assert c.stats["admit_rejects"] >= 1
+
+    def test_own_write_invalidate(self):
+        c, be = self._cache(capacity=16)
+        c.read_round(K([1]))
+        assert c.invalidate(K([1])) == 1
+        assert K([1])[0].tobytes() not in c.entries
+
+
+# ---------------------------------------------------------------------------
+# THE property: committed mutations are never served, every scheme
+# ---------------------------------------------------------------------------
+
+def _fill_store(scheme, n, slots, seed):
+    store = api.make_store(scheme, table_slots=slots)
+    table = store.create()
+    rng = np.random.RandomState(seed)
+    ids = np.arange(n)
+    vals = ycsb.make_value(rng, n)
+    table, res = store.insert(table, K(ids), vals)
+    okn = np.asarray(res.ok)
+    truth = {int(i): v for i, v in zip(ids[okn], vals[okn])}
+    return store, table, rng, ids, truth
+
+
+def _audit(r, ids, truth):
+    """Every served value must be the committed one; deleted keys must
+    not resurface."""
+    for j, i in enumerate(np.asarray(ids)):
+        if int(i) in truth:
+            if r.found[j]:
+                assert np.array_equal(r.values[j], truth[int(i)]), \
+                    f"id {int(i)}: served a non-committed value"
+        else:
+            assert not r.found[j], f"id {int(i)}: served after delete"
+
+
+class TestNeverStaleStore:
+    @pytest.mark.parametrize("scheme", api.available_schemes())
+    def test_update_delete_never_served_stale(self, scheme):
+        store, table, rng, ids, truth = _fill_store(scheme, 48, 512, 0)
+        backend = StoreBackend(store, table)
+        cache = ClientCache(CacheConfig(capacity=64), backend)
+        _audit(cache.read_round(K(ids)), ids, truth)   # warm fill
+        up, dl = ids[:16], ids[16:24]
+        nv = ycsb.make_value(rng, len(up))
+        backend.table, ur = store.update(backend.table, K(up), nv)
+        for i, v in zip(up[np.asarray(ur.ok)], nv[np.asarray(ur.ok)]):
+            truth[int(i)] = v
+        backend.table, dr = store.delete(backend.table, K(dl))
+        for i in dl[np.asarray(dr.ok)]:
+            truth.pop(int(i), None)
+        r = cache.read_round(K(ids))
+        _audit(r, ids, truth)
+        # the mutated-and-cached keys were actually revalidated, not lucky
+        assert cache.stats["stamp_invalidations"] > 0
+
+    @pytest.mark.parametrize("scheme", api.available_schemes())
+    @settings(max_examples=6, deadline=None)
+    @given(seed=st.integers(0, 2 ** 31 - 1))
+    def test_property_random_mutation_waves(self, scheme, seed):
+        store, table, rng, ids, truth = _fill_store(scheme, 32, 256, seed)
+        backend = StoreBackend(store, table)
+        cache = ClientCache(CacheConfig(capacity=32), backend)
+        mrng = np.random.RandomState(seed ^ 0x5EED)
+        for _ in range(3):
+            _audit(cache.read_round(K(ids)), ids, truth)
+            up = ids[mrng.permutation(len(ids))[:8]]
+            nv = ycsb.make_value(mrng, len(up))
+            backend.table, ur = store.update(backend.table, K(up), nv)
+            for i, v in zip(up[np.asarray(ur.ok)], nv[np.asarray(ur.ok)]):
+                truth[int(i)] = v
+            dl = ids[mrng.permutation(len(ids))[:4]]
+            backend.table, dr = store.delete(backend.table, K(dl))
+            for i in dl[np.asarray(dr.ok)]:
+                truth.pop(int(i), None)
+        _audit(cache.read_round(K(ids)), ids, truth)
+
+
+class TestContinuityStamp:
+    def test_aba_value_restoring_update_still_changes_stamp(self):
+        store = api.make_store("continuity", table_slots=256)
+        table = store.create()
+        k = K([7])
+        v1 = np.array([[1, 2, 3, 4]], U32)
+        v2 = np.array([[5, 6, 7, 8]], U32)
+        table, _ = store.insert(table, k, v1)
+        s0 = np.asarray(store.version_stamp(table, k))
+        table, _ = store.update(table, k, v2)
+        table, _ = store.update(table, k, v1)      # value restored (ABA)
+        s2 = np.asarray(store.version_stamp(table, k))
+        assert not np.array_equal(s0, s2), \
+            "stamp must advance even when the value round-trips"
+        # and a real lookup agrees the value is back
+        r = store.lookup(table, k)
+        assert np.asarray(r.ok)[0]
+        assert np.array_equal(np.asarray(r.values)[0], v1[0])
+
+    def test_untouched_pair_stamp_is_stable(self):
+        store = api.make_store("continuity", table_slots=512)
+        table = store.create()
+        ids = np.arange(16)
+        vals = ycsb.make_value(np.random.RandomState(0), 16)
+        table, _ = store.insert(table, K(ids), vals)
+        before = np.asarray(store.version_stamp(table, K(ids)))
+        table, _ = store.update(table, K([0]),
+                                np.array([[9, 9, 9, 9]], U32))
+        after = np.asarray(store.version_stamp(table, K(ids)))
+        assert not np.array_equal(before[0], after[0])
+        # the stamp is per bucket PAIR: only keys sharing key 0's pair may
+        # re-stamp (their rows are identical to key 0's, before and after);
+        # keys on other pairs never see a spurious invalidation
+        moved = [j for j in range(1, 16)
+                 if not np.array_equal(before[j], after[j])]
+        for j in moved:
+            assert np.array_equal(before[j], before[0]) \
+                and np.array_equal(after[j], after[0]), \
+                f"key {j} re-stamped but is not on key 0's pair"
+
+    def test_validation_plan_is_single_8byte_read(self):
+        store = api.make_store("continuity", table_slots=256)
+        table = store.create()
+        ids = np.arange(8)
+        table, _ = store.insert(table, K(ids),
+                                ycsb.make_value(np.random.RandomState(0), 8))
+        plan = store.version_read_plan(table, K(ids))
+        verb = np.asarray(plan.verb)
+        active = verb == rv.READ
+        assert active.sum() == 8            # exactly one READ per key
+        assert (np.asarray(plan.nbytes)[active] == 8).all()
+        assert (np.asarray(plan.depth)[active] == 0).all()
+
+
+# ---------------------------------------------------------------------------
+# cluster: never stale across partition -> stale epoch -> heal -> resync
+# ---------------------------------------------------------------------------
+
+class TestClusterNeverStale:
+    def test_partition_heal_cycle(self):
+        cluster = ClusterStore("continuity", nodes=3, replicas=2,
+                               node_slots=2048)
+        rng = np.random.RandomState(3)
+        ids = np.arange(120)
+        vals = ycsb.make_value(rng, 120)
+        res = cluster.insert(K(ids), vals)
+        okn = np.asarray(res.ok)
+        truth = {int(i): v for i, v in zip(ids[okn], vals[okn])}
+        backend = ClusterBackend(cluster)
+        cache = ClientCache(CacheConfig(capacity=128), backend)
+        _audit(cache.read_round(K(ids)), ids, truth)   # warm
+
+        victim = str(cluster.directory.replica_names(K(ids[:1]))[0, 0])
+        cluster.partition(victim)
+        # stale unfenced acks through the partitioned ex-primary: these
+        # must NEVER become servable
+        sids = ids[:8]
+        cluster.stale_write(victim, K(sids), ycsb.make_value(rng, len(sids)))
+        up = ids[rng.permutation(120)[:24]]
+        nv = ycsb.make_value(rng, len(up))
+        ur = cluster.update(K(up), nv)
+        for i, v in zip(up[np.asarray(ur.ok)], nv[np.asarray(ur.ok)]):
+            truth[int(i)] = v
+        _audit(cache.read_round(K(ids)), ids, truth)
+
+        cluster.heal(victim)
+        hr = cluster.resync(victim)
+        assert hr.stale_acks_detected == 8
+        up = ids[rng.permutation(120)[:24]]
+        nv = ycsb.make_value(rng, len(up))
+        ur = cluster.update(K(up), nv)
+        for i, v in zip(up[np.asarray(ur.ok)], nv[np.asarray(ur.ok)]):
+            truth[int(i)] = v
+        _audit(cache.read_round(K(ids)), ids, truth)
+        assert cache.stats["stamp_invalidations"] > 0
+
+    def test_backend_tags_wire_traffic(self):
+        cluster = ClusterStore("continuity", nodes=3, replicas=2,
+                               node_slots=1024)
+        ids = np.arange(40)
+        cluster.insert(K(ids), ycsb.make_value(np.random.RandomState(0), 40))
+        backend = ClusterBackend(cluster)
+        cache = ClientCache(CacheConfig(capacity=64), backend)
+        cache.read_round(K(ids))            # fills
+        cache.read_round(K(ids))            # validations
+        tags = {}
+        for st_ in cluster.stats()["nodes"].values():
+            for tag, row in st_.get("wire", {}).get("by_tag", {}).items():
+                agg = tags.setdefault(tag, {"verbs": 0, "bytes": 0})
+                agg["verbs"] += row["verbs"]
+                agg["bytes"] += row["bytes"]
+        assert tags["fill"]["verbs"] > 0
+        # every validate verb is the 8-byte indicator word, nothing more
+        assert tags["validate"]["verbs"] == 40
+        assert tags["validate"]["bytes"] == 8 * 40
+
+
+# ---------------------------------------------------------------------------
+# request-stream self-check + the tiny end-to-end fan-in cell
+# ---------------------------------------------------------------------------
+
+class TestFanIn:
+    @pytest.mark.parametrize("dist", ["zipf", "hotspot"])
+    def test_request_stream_self_check(self, dist):
+        s = ycsb.request_stream(dist, 500, theta=0.99, hot_frac=0.05,
+                                hot_op_frac=0.9)
+        chk = ycsb.stream_self_check(s, np.random.RandomState(1))
+        assert chk["ok"], chk
+
+    def test_tiny_fanin_full_chaos_schedule(self):
+        events = [(2, "partition", "primary"), (2, "stale", ""),
+                  (3, "heal", ""), (4, "resync", ""),
+                  (5, "kill", "primary"), (6, "failover", "")]
+        res = fanin.run_fanin("continuity", clients=6, rounds=7,
+                              ops_per_round=6, writes_per_round=1,
+                              num_records=300, nodes=3, replicas=2,
+                              budget=None, events=events)
+        ca, un = res["cached"], res["uncached"]
+        assert ca["stale_served"] == 0
+        assert ca["wrong_reads"] == 0 and un["wrong_reads"] == 0
+        assert res["stream_check"]["ok"]
+        assert res["doorbell_reduction"] > 1.0
+        fired = {e["event"] for e in ca["events"]}
+        assert {"partition", "stale", "heal", "resync",
+                "kill", "failover"} <= fired

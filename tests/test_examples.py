@@ -34,6 +34,16 @@ def test_quickstart_runs():
     assert "Table I" in proc.stdout
 
 
+def test_serve_kv_cache_demo_runs():
+    # the client-cache tier in front of the page-table store: no model,
+    # so it is cheap enough for the fast tier; the script itself asserts
+    # no client ever served a remapped (stale) page
+    proc = _run("serve_kv.py", "--cache", "--clients", "8", timeout=300)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "stale_served=0" in proc.stdout
+    assert "cache check passed" in proc.stdout
+
+
 @pytest.mark.slow
 def test_ycsb_cluster_smoke_runs():
     # 8 simulated host devices + the RDMA transport comparison + the
