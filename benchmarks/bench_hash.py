@@ -208,10 +208,94 @@ def bench_load_factor(rows):
                 if not okn.all():
                     break
             lfs.append(float(store.load_factor(table)))
-            store, table = store.resize(table)
+            store, table = store.resize_cutover(store.begin_resize(table))
         payload[label] = lfs
         rows.append((f"load_factor[{label}]", 0.0,
                      " ".join(f"{x:.2f}" for x in lfs)))
+    return payload
+
+
+def bench_resize(rows, table_slots=2048, batch=256):
+    """Online-resize section: steps-per-cutover and the foreground stall
+    while a shard splits, incremental vs stop-the-world.
+
+    Every scheme grows a ~0.8-full table through the begin/step/cutover
+    triple.  Continuity advances ONE cohort per step with a foreground
+    YCSB round (lookup + insert routed by the split tokens) between
+    steps; the baselines rehash everything inside their first step — the
+    stop-the-world pause.  Also times continuity's own one-shot shim as
+    the like-for-like pause.  Returns the ``resize`` payload for the
+    BENCH json, which ``validate_bench.py`` gates: the split must be
+    genuinely incremental (steps == cohorts > 1) and its worst per-step
+    stall must undercut the scheme's own stop-the-world pause."""
+    import time
+    payload = {}
+    for s in SCHEMES:
+        rng = np.random.RandomState(8)
+        store = api.make_store(s, table_slots=table_slots)
+        table = store.create()
+        next_id = 0
+        while float(store.load_factor(table)) < 0.8:
+            K = ycsb.make_key(np.arange(next_id, next_id + batch))
+            table, res = store.insert(table, K,
+                                      ycsb.make_value(rng, batch))
+            next_id += batch
+            if not np.asarray(res.ok).all():
+                break
+        n_items = int(np.asarray(store.stats(table)["count"]))
+        incremental = hasattr(store, "resize_write")
+
+        # stop-the-world reference: the whole rehash as ONE pause.  Run
+        # twice and keep the second — the first pays jit compilation for
+        # the grown shapes, which would flatter the incremental column
+        store.resize_cutover(store.begin_resize(table))
+        t0 = time.perf_counter()
+        _, stw_table = store.resize_cutover(store.begin_resize(table))
+        stw_ms = (time.perf_counter() - t0) * 1e3
+
+        # incremental path (one cohort per step, foreground between)
+        rs = store.begin_resize(table)
+        step_ms, fg_us = [], []
+        steps = 0
+        probe = ycsb.make_key(rng.randint(0, max(next_id, 1), batch))
+        while not rs.done:
+            t0 = time.perf_counter()
+            rs = store.resize_step(rs, budget=1)
+            jax.block_until_ready(rs.new_table)
+            step_ms.append((time.perf_counter() - t0) * 1e3)
+            steps += 1
+            if incremental:     # the stream keeps flowing mid-split
+                kin = ycsb.make_key(
+                    np.arange(10_000 + steps * 8, 10_008 + steps * 8))
+                vin = ycsb.make_value(rng, 8)
+                t0 = time.perf_counter()
+                lr = store.resize_lookup(rs, probe)
+                rs, _ = store.resize_write(rs, "insert", kin, vin)
+                jax.block_until_ready((lr.values, rs.new_table))
+                fg_us.append((time.perf_counter() - t0) * 1e6 / (batch + 8))
+        new_store, new_table = store.resize_cutover(rs)
+        got = int(np.asarray(new_store.stats(new_table)["count"]))
+        # first step pays jit compilation for the grown shapes; the
+        # steady-state stall is what a serving shard would see
+        steady = step_ms[1:] or step_ms
+        payload[s] = {
+            "n_items": n_items,
+            "cohorts": steps,
+            "steps_per_cutover": steps,
+            "incremental_routing": incremental,
+            "stw_pause_ms": stw_ms,
+            "first_step_ms": step_ms[0],
+            "max_step_ms": float(max(steady)),
+            "mean_step_ms": float(np.mean(steady)),
+            "max_stall_over_stw": float(max(steady)) / max(stw_ms, 1e-9),
+            "foreground_p99_us": (float(np.percentile(fg_us, 99))
+                                  if fg_us else None),
+            "lossless": got >= n_items,
+        }
+        rows.append((f"resize[{s}]", payload[s]["mean_step_ms"] * 1e3,
+                     f"{steps} steps, max stall "
+                     f"{payload[s]['max_step_ms']:.1f}ms vs stw "
+                     f"{stw_ms:.1f}ms"))
     return payload
 
 

@@ -11,6 +11,7 @@ the container) over the payload ``benchmarks/run.py`` emits:
       "crash_consistency": {"<scheme>.<op>": {..., "ok": bool}},    # optional
       "end_to_end": {<scheme>: {<workload>: E2E_CELL}},             # optional
       "load_factor": {<policy>: [float, ...]},                      # optional
+      "resize": {<scheme>: {"steps_per_cutover": int, ...}},        # optional
       "cluster": {"cells": ..., "durability": ..., "migration": ...}, # optional
       "cache": {"doorbell_reduction": ..., "hit_rate": ...,
                 "stale_served": 0, "uncached": ..., "cached": ...}    # optional
@@ -29,10 +30,16 @@ Table I gate, reading structured JSON instead of grepping CSV rows.
 band on the read-heavy mixes: continuity throughput >= level >= pfarm on
 BOTH YCSB-C and YCSB-B — the transport model is deterministic, so the
 ordering is a hard gate, not a tolerance check.
-``load_factor``, when present, is banded against the paper's ~70%
-continuity load-factor claim: every policy triggers its FIRST resize at
->= 70% occupancy, and the paper's 1/10-extension policy keeps min >= 62%
-/ mean >= 68% across all resize rounds.
+``load_factor``, when present, is banded against the continuity
+load-factor claim: with the fingerprint/stash tier every policy triggers
+its FIRST resize at >= 85% occupancy (the plain layout's floor was the
+paper's ~70%), and the 1/10-extension policy keeps min >= 85% / mean
+>= 90% across all resize rounds.
+``resize``, when present, gates the online-resize claim: at least one
+scheme routes traffic mid-split, every scheme's rehash is lossless, and
+an incremental scheme must split in > 1 steps with its worst per-step
+stall under RESIZE_MAX_STALL_FRAC of its own stop-the-world pause and
+its mid-split foreground p99 bounded.
 ``cluster``, when present, gates the cluster acceptance criteria: zero
 committed-op loss per cell, rebalance within 1/N + 5%, failover
 detected, the fenced durability drill lossless AND its unfenced negative
@@ -167,10 +174,13 @@ def _check_end_to_end(e2e) -> None:
                       f"{sb} {b:.0f} ops/s")
 
 
-# paper Fig 18 / §V: continuity sustains ~70% occupancy before resizing
-LF_FIRST_TRIGGER_MIN = 0.70
+# paper Fig 18 / §V, lifted by the fingerprint/stash tier: the plain
+# layout first-triggered around the paper's ~70%; with 2-bit slot
+# fingerprints pre-filtering probes and a 1/8 stash absorbing overflow,
+# continuity sustains ~94% occupancy before resizing (EXPERIMENTS.md)
+LF_FIRST_TRIGGER_MIN = 0.85
 LF_BEST_POLICY = "1/10"
-LF_BEST_MIN, LF_BEST_MEAN = 0.62, 0.68
+LF_BEST_MIN, LF_BEST_MEAN = 0.85, 0.90
 
 
 def _check_load_factor(lf) -> None:
@@ -195,6 +205,47 @@ def _check_load_factor(lf) -> None:
             _fail(f"load_factor.{LF_BEST_POLICY}",
                   f"min {min(lfs):.2f} / mean {sum(lfs)/len(lfs):.2f} "
                   f"below the [{LF_BEST_MIN}, {LF_BEST_MEAN}] band")
+
+
+# online-resize gates: the incremental split must be genuinely
+# incremental (many steps, each a small bounded stall) while the
+# baselines' one-shot rehash IS the stop-the-world pause it undercuts
+RESIZE_MAX_STALL_FRAC = 0.5      # worst step vs own stop-the-world pause
+RESIZE_FG_P99_MAX_US = 20_000.0  # mid-split foreground p99 ceiling
+
+
+def _check_resize(rz) -> None:
+    if not isinstance(rz, dict) or not rz:
+        _fail("resize", "must be a non-empty object")
+    any_incremental = False
+    for scheme, cell in rz.items():
+        here = f"resize.{scheme}"
+        if not isinstance(cell, dict):
+            _fail(here, f"expected object, got {type(cell).__name__}")
+        for field in ("steps_per_cutover", "max_step_ms", "stw_pause_ms",
+                      "max_stall_over_stw", "n_items", "lossless",
+                      "incremental_routing"):
+            if field not in cell:
+                _fail(here, f"missing {field!r}")
+        if cell["lossless"] is not True:
+            _fail(here, "rehash lost items")
+        if not cell["incremental_routing"]:
+            continue
+        any_incremental = True
+        if cell["steps_per_cutover"] <= 1:
+            _fail(here, "claimed incremental but cut over in one step")
+        if cell["max_stall_over_stw"] > RESIZE_MAX_STALL_FRAC:
+            _fail(here, f"worst per-step stall is "
+                        f"{cell['max_stall_over_stw']:.2f}x the stop-the-"
+                        f"world pause (> {RESIZE_MAX_STALL_FRAC}) — the "
+                        f"split is not meaningfully online")
+        p99 = cell.get("foreground_p99_us")
+        if not isinstance(p99, (int, float)) or isinstance(p99, bool) \
+                or not 0 < p99 <= RESIZE_FG_P99_MAX_US:
+            _fail(here, f"mid-split foreground p99 {p99!r} outside "
+                        f"(0, {RESIZE_FG_P99_MAX_US}]us")
+    if not any_incremental:
+        _fail("resize", "no scheme routes traffic mid-split")
 
 
 def _check_cluster(cl) -> None:
@@ -406,6 +457,8 @@ def validate(payload: dict) -> None:
         _check_end_to_end(payload["end_to_end"])
     if "load_factor" in payload:
         _check_load_factor(payload["load_factor"])
+    if "resize" in payload:
+        _check_resize(payload["resize"])
     if "cluster" in payload:
         _check_cluster(payload["cluster"])
     if "cache" in payload:
@@ -468,7 +521,7 @@ def main(argv=None) -> int:
         print(f"INVALID {args.file}: {e}", file=sys.stderr)
         return 1
     extras = [k for k in ("table1", "crash_consistency", "end_to_end",
-                          "load_factor", "cluster", "cache")
+                          "load_factor", "resize", "cluster", "cache")
               if k in payload]
     print(f"OK {args.file}: valid write-batch sweep artifact "
           f"({len(payload['write_batch_sweep'])} ops"

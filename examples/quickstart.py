@@ -56,10 +56,18 @@ def main():
 
     print(f"\nstats: {store.stats(table)}")
 
-    # log-free resizing (rehash every live item into a 2x store)
-    store2, table2 = store.resize(table)
+    # log-free ONLINE resizing: one bucket-pair cohort per step, an atomic
+    # 8-byte token cutover each, foreground reads served throughout
+    rs = store.begin_resize(table)
+    steps = 0
+    while not rs.done:
+        rs = store.resize_step(rs, budget=16)
+        steps += 1
+        store.resize_lookup(rs, keys[250:300])   # dual-read mid-split
+    store2, table2 = store.resize_cutover(rs)
     hit2 = store2.lookup(table2, keys[250:])
-    print(f"resize 2x: {int(hit2.ok.sum())}/{n-250} items survive, "
+    print(f"resize 2x in {steps} incremental steps: "
+          f"{int(hit2.ok.sum())}/{n-250} items survive, "
           f"new load factor {float(store2.load_factor(table2)):.2f}")
 
 

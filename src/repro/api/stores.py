@@ -22,12 +22,13 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 from typing import Any, ClassVar, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.api.types import ExecPolicy, OpResult
+from repro.api.types import ExecPolicy, OpResult, ResizeState
 from repro.core import continuity as ch
 from repro.core import dense as dn
 from repro.core import level as lv
@@ -136,17 +137,52 @@ class _ModuleStore:
         record — the asymmetry YCSB-E measures."""
         return self._mod.scan_plan(self.cfg, table, keys, spans)
 
-    def resize(self, table, factor: int = 2) -> Tuple["_ModuleStore", Any]:
-        """Rehash every live item into a ``factor``x-capacity store.
+    # -- incremental maintenance surface ------------------------------------
+    # begin_resize/resize_step/resize_cutover: the protocol's resize is a
+    # steppable background job.  The generic implementation completes the
+    # whole rehash in the FIRST step (a stop-the-world move is all the
+    # scattered baselines can offer — their candidate buckets change
+    # wholesale at the new size); continuity overrides the triple with a
+    # real cohort-at-a-time split.
 
-        Host-level op (blocks on the result): raises if any live item fails
-        to reinsert (possible for the bucketed baselines when candidate
-        buckets collide even at the larger size) instead of dropping it."""
+    def begin_resize(self, table, factor: int = 2) -> ResizeState:
         new = dataclasses.replace(self, cfg=self.cfg.grow(factor))
-        keys, vals, live = self._extract(table)
-        new_table, _ = new.insert(new.create(), keys, vals, live)
-        _check_resize_lossless(self.name, table, new_table)
-        return new, new_table
+        return ResizeState(store=self, new_store=new, table=table,
+                           new_table=new.create(), factor=factor,
+                           n_items=int(table.count))
+
+    def resize_step(self, state: ResizeState, budget: int = 1) -> ResizeState:
+        if state.done:
+            return state
+        keys, vals, live = self._extract(state.table)
+        new_table, _ = state.new_store.insert(state.new_table, keys, vals,
+                                              live)
+        return dataclasses.replace(
+            state, new_table=new_table, done=True,
+            moved=int(jnp.asarray(live).sum()))
+
+    def resize_cutover(self, state: ResizeState) -> Tuple["_ModuleStore", Any]:
+        """Finish any remaining steps and hand over the grown store.
+
+        Raises if any live item failed to reinsert (possible for the
+        bucketed baselines when candidate buckets collide even at the
+        larger size) instead of dropping it."""
+        while not state.done:
+            state = self.resize_step(state, budget=1 << 30)
+        _check_resize_lossless(self.name, state.table, state.new_table)
+        return state.new_store, state.new_table
+
+    def resize(self, table, factor: int = 2) -> Tuple["_ModuleStore", Any]:
+        """DEPRECATED one-shot resize: begin + step-to-completion + cutover.
+
+        Kept as a shim for callers that can afford to block; new code
+        should drive ``begin_resize``/``resize_step`` from its maintenance
+        loop and ``resize_cutover`` when the split has drained."""
+        warnings.warn(
+            "HashStore.resize() is deprecated; use begin_resize()/"
+            "resize_step()/resize_cutover()", DeprecationWarning,
+            stacklevel=2)
+        return self.resize_cutover(self.begin_resize(table, factor))
 
     # -- cache-validation surface (repro.cache) -----------------------------
     # A stamp is an opaque (B, S) integer array, one row per key, compared
@@ -171,8 +207,11 @@ class _ModuleStore:
              res.values.astype(jnp.uint32)], axis=-1)
 
     def _vplan_impl(self, table, keys):
-        res = self._lookup_res(table, keys)
-        return self._mod.lookup_plan(self.cfg, table, keys, res)
+        # uniform delegation: every scheme module exposes the unified
+        # ``version_read_plan(cfg, table, keys)`` (continuity: one depth-0
+        # 8-byte word READ per key; the value-stamp baselines: their full
+        # lookup plan — there is no cheap version word to poll)
+        return self._mod.version_read_plan(self.cfg, table, keys)
 
     # -- crash-consistency surface (repro.consistency) ----------------------
     # Traced twins of the write ops: same table-out/ok-out contract, plus
@@ -256,16 +295,69 @@ class ContinuityStore(_ModuleStore):
         # the counter half (see ch.version_stamp)
         return ch.version_stamp(self.cfg, table, keys)
 
-    def _vplan_impl(self, table, keys):
-        # one depth-0 8-byte READ per key vs the baselines' full lookup
-        return ch.version_read_plan(self.cfg, keys)
+    def begin_resize(self, table, factor: int = 2) -> ResizeState:
+        # the paper's log-free resize as an ONLINE split: per-pair cutover
+        # tokens route traffic while cohorts move one at a time
+        new_cfg, new_table, split = ch.split_begin(self.cfg, table, factor)
+        return ResizeState(
+            store=self, new_store=dataclasses.replace(self, cfg=new_cfg),
+            table=table, new_table=new_table, factor=factor, opaque=split,
+            n_items=int(table.count))
 
-    def resize(self, table, factor: int = 2):
-        # delegate to the scheme's own rehash (ONE implementation of the
-        # paper's log-free resizing), keeping the protocol's loss check
-        new_cfg, new_table = ch.resize(self.cfg, table, factor)
-        _check_resize_lossless(self.name, table, new_table)
-        return dataclasses.replace(self, cfg=new_cfg), new_table
+    def resize_step(self, state: ResizeState, budget: int = 1) -> ResizeState:
+        if state.done:
+            return state
+        table, new_table, split, moved = ch.split_step(
+            self.cfg, state.table, state.new_store.cfg, state.new_table,
+            state.opaque, budget)
+        return dataclasses.replace(
+            state, table=table, new_table=new_table, opaque=split,
+            moved=state.moved + moved,
+            done=bool(ch.split_done(self.cfg, split)))
+
+    def resize_cutover(self, state: ResizeState):
+        while not state.done:
+            state = self.resize_step(state, budget=self.cfg.num_pairs)
+        left = int(state.table.count)
+        if left:
+            raise RuntimeError(
+                f"resize cutover with {left} item(s) still in the source "
+                f"{self.name!r} table — the split did not drain")
+        return state.new_store, state.new_table
+
+    # -- mid-split routing (the maintenance loop's read/write path) ---------
+    def resize_lookup(self, state: ResizeState, keys) -> OpResult:
+        """Dual-read during a split: probe old and new, pick by the
+        cohort's cutover token (one extra READ only for in-flight pairs)."""
+        res = ch.split_lookup(self.cfg, state.table,
+                              state.new_store.cfg, state.new_table,
+                              state.opaque, keys)
+        from repro.rdma import verbs as rv
+        plan = ch.lookup_plan(self.cfg, state.table, keys,
+                              ch.lookup(self.cfg, state.table, keys))
+        return OpResult(ok=res.found, ledger=rv.ledger_from_plan(plan),
+                        values=res.values, reads=res.reads, plan=plan)
+
+    def resize_write(self, state: ResizeState, op: str, keys, vals=None,
+                     mask=None) -> Tuple[ResizeState, OpResult]:
+        """Route one write batch by the split tokens: moved cohorts write
+        the new table, unmoved the old (whose items the split will carry
+        over).  Keeps insert-during-split lossless and duplicate-free."""
+        keys = jnp.asarray(keys, jnp.uint32).reshape(-1, KEY_LANES)
+        to_new = ch.split_route(self.cfg, state.opaque, keys)
+        m = (jnp.ones(keys.shape[0], bool) if mask is None
+             else jnp.asarray(mask).reshape(-1))
+        fn = {"insert": self.insert, "update": self.update,
+              "delete": self.delete}[op]
+        nfn = {"insert": state.new_store.insert,
+               "update": state.new_store.update,
+               "delete": state.new_store.delete}[op]
+        args_old = (keys,) if op == "delete" else (keys, vals)
+        table, r_old = fn(state.table, *args_old, mask=m & ~to_new)
+        new_table, r_new = nfn(state.new_table, *args_old, mask=m & to_new)
+        ok = jnp.where(to_new, r_new.ok, r_old.ok)
+        return (dataclasses.replace(state, table=table, new_table=new_table),
+                OpResult(ok=ok, ledger=r_old.ledger.merge(r_new.ledger)))
 
     def total_slots(self, table=None) -> float:
         if table is None:
@@ -282,6 +374,10 @@ class ContinuityStore(_ModuleStore):
                    **overrides) -> "ContinuityStore":
         per_pair = ch.ContinuityConfig(2).slots_per_pair
         pairs = max(2, -(-table_slots // per_pair))   # ceil: >= table_slots
+        # a 1/8 stash tier by default: costs nothing until the main slots
+        # fill (the lane stays NOOP while the count byte is 0) and lifts
+        # the first-trigger load factor past the paper's ~0.85 band
+        overrides.setdefault("stash_frac", 1 / 8)
         cfg = dataclasses.replace(
             ch.ContinuityConfig(num_buckets=2 * pairs), **overrides)
         return cls(cfg=cfg, policy=policy)

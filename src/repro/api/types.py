@@ -16,9 +16,19 @@ Calling convention (uniform across schemes):
     table, res       = store.update(table, keys, vals[, mask])
     table, res       = store.delete(table, keys[, mask])
     res              = store.lookup(table, keys)
-    store2, table2   = store.resize(table, factor)
+    rs               = store.begin_resize(table, factor)
+    rs               = store.resize_step(rs, budget)   # incremental
+    store2, table2   = store.resize_cutover(rs)
     lf               = store.load_factor(table)
     info             = store.stats(table)          # host-side dict
+
+(``store.resize(table, factor)`` survives as a deprecated one-shot shim
+over the begin/step/cutover triple.)  ``ResizeState`` is the maintenance
+handle the incremental API threads: continuity advances a real cohort-at-
+a-time split (serving reads and writes throughout, routed by its per-pair
+cutover tokens); the baselines complete the whole rehash in their first
+``resize_step`` — the protocol is uniform, the increment is the paper
+scheme's advantage.
 
     table, tres      = store.trace_insert(table, keys, vals)   # + PM trace
     table2, report   = store.recover(crashed_state)            # restart
@@ -101,6 +111,30 @@ class OpResult(NamedTuple):
     plan: Optional[Any] = None
 
 
+@dataclasses.dataclass(frozen=True)
+class ResizeState:
+    """Handle of one in-flight incremental resize (begin -> step* -> cutover).
+
+    ``store``/``table`` are the SOURCE geometry and its (draining) state;
+    ``new_store``/``new_table`` the grown target.  ``opaque`` is the
+    scheme's private cursor (continuity: its per-pair cutover-token split
+    state); ``done`` flips when every cohort has moved; ``moved`` counts
+    relocated items and ``n_items`` records the live count at begin (the
+    cutover loss check).  The handle is immutable — each step returns a new
+    one — so a crash between steps simply resumes from the last handle (or
+    from recovery's token scan)."""
+
+    store: "HashStore"
+    new_store: "HashStore"
+    table: Any
+    new_table: Any
+    factor: int = 2
+    opaque: Any = None
+    done: bool = False
+    n_items: int = 0
+    moved: int = 0
+
+
 @runtime_checkable
 class HashStore(Protocol):
     """Structural type every registered scheme satisfies (see module doc
@@ -119,6 +153,16 @@ class HashStore(Protocol):
     def delete(self, table: Any, keys, mask=None) -> Tuple[Any, OpResult]: ...
 
     def lookup(self, table: Any, keys) -> OpResult: ...
+
+    # incremental maintenance surface: begin one resize, advance it a
+    # bounded number of cohorts at a time (foreground traffic keeps
+    # flowing between steps), then cut over.  ``resize`` is the deprecated
+    # one-shot shim over the triple.
+    def begin_resize(self, table: Any, factor: int = 2) -> ResizeState: ...
+
+    def resize_step(self, state: ResizeState, budget: int = 1) -> ResizeState: ...
+
+    def resize_cutover(self, state: ResizeState) -> Tuple["HashStore", Any]: ...
 
     def resize(self, table: Any, factor: int = 2) -> Tuple["HashStore", Any]: ...
 

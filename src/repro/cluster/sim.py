@@ -77,7 +77,9 @@ def run_cluster(scheme: str = "continuity", workload: str = "A", *,
                 hot_op_frac: float = 0.8,
                 events: Sequence[Event] = (), node_slots: Optional[int] = None,
                 seed: int = 0, heartbeat_timeout: float = 5.0,
-                grace_s: float = 0.0, faults=None, retry=None) -> Dict:
+                grace_s: float = 0.0, faults=None, retry=None,
+                maintenance: bool = True, resize_trigger_lf: float = 0.85,
+                resize_budget: int = 2) -> Dict:
     """One cluster cell; deterministic given the seed (ONE explicit seed
     feeds the value stream, the request stream, the scramble, and the
     chaos injections — the returned payload echoes it so any cell can be
@@ -242,6 +244,15 @@ def run_cluster(scheme: str = "continuity", workload: str = "A", *,
             ids = np.arange(base, base + n_ins)
             load(ids, ycsb.make_value(rng, n_ins), record=True)
             stream = _stream(dist, len(order), theta, hot_frac, hot_op_frac)
+        if maintenance:
+            # between-rounds shard growth: any shard past the trigger
+            # load factor splits `resize_budget` cohorts per round while
+            # the YCSB stream above keeps flowing (writes/reads route by
+            # the split's cutover tokens)
+            for act in cluster.maintenance_step(budget=resize_budget,
+                                                trigger_lf=resize_trigger_lf):
+                if act["action"] != "step":
+                    reports.append({"event": "resize", "round": step, **act})
         ops_done += n_logical
 
     # let a terminal kill drain through detection before the audit (the
@@ -286,6 +297,7 @@ def run_cluster(scheme: str = "continuity", workload: str = "A", *,
         "committed": len(acked), "committed_lost": lost,
         "rebalance_within_bound": bool(rebalance_ok),
         "failover_detected": bool(failover_seen),
+        "maintenance": dict(cluster.maintenance),
         "events": reports, "killed": killed,
         "stats": cluster.stats(),
     }

@@ -65,6 +65,10 @@ class _Node:
     alive: bool = True
     reachable: bool = True      # False while partitioned (alive, but cut off)
     epoch: int = 0              # directory epoch the node last joined/synced
+    # in-flight incremental resize (an api.ResizeState): while set, every
+    # read/write/stamp on this node routes through the split's per-cohort
+    # cutover tokens; `maintenance_step` advances and eventually clears it
+    resize: Optional[Any] = None
     # (key, val, epoch) writes a stale ex-primary acked while partitioned —
     # the fencing machinery must detect and discard EVERY one of these
     stale_log: List[Tuple[np.ndarray, np.ndarray, int]] = \
@@ -180,6 +184,9 @@ class ClusterStore:
         self.chaos = {"stale_acks_injected": 0, "stale_acks_detected": 0,
                       "writes_rejected_read_only": 0, "lag_read_redirects": 0,
                       "write_timeouts": 0, "read_timeouts": 0}
+        self.maintenance = {"resizes_begun": 0, "steps": 0,
+                            "cohorts_moved": 0, "cutovers": 0,
+                            "blocking_resizes": 0}
 
     # -- membership plumbing ------------------------------------------------
     def _make_node(self, name: str, slots: Optional[int] = None) -> _Node:
@@ -256,7 +263,19 @@ class ClusterStore:
     def _resident(self, node: _Node) -> Tuple[np.ndarray, np.ndarray]:
         keys, vals, live = node.store._extract(node.table)
         liven = np.asarray(live)
-        return (np.asarray(keys, U32)[liven], np.asarray(vals, U32)[liven])
+        K = np.asarray(keys, U32)[liven]
+        V = np.asarray(vals, U32)[liven]
+        if node.resize is not None:
+            # mid-split the shard's items are PARTITIONED across the two
+            # tables (each cohort's source copies are deleted as its token
+            # flips, and between maintenance steps no cohort is half-moved),
+            # so residency is the plain union of both images
+            rs = node.resize
+            k2, v2, l2 = rs.new_store._extract(rs.new_table)
+            l2n = np.asarray(l2)
+            K = np.concatenate([K, np.asarray(k2, U32)[l2n]])
+            V = np.concatenate([V, np.asarray(v2, U32)[l2n]])
+        return K, V
 
     def _distinct_resident(self) -> Tuple[np.ndarray, np.ndarray]:
         """(K, V) of every distinct key on any SERVING node, taking each
@@ -300,11 +319,20 @@ class ClusterStore:
         pk[:n] = keys
         mask = np.zeros((P,), bool)
         mask[:n] = True
-        if vals is None:
-            node.table, res = getattr(node.store, op)(node.table, pk, mask)
-        else:
+        pv = None
+        if vals is not None:
             pv = np.zeros((P, 4), U32)
             pv[:n] = vals
+        if node.resize is not None:
+            # in-flight split: the store routes each key to the table its
+            # cohort's cutover token owns (insert-during-split stays
+            # lossless and duplicate-free — the matrix property gates it)
+            node.resize, res = node.store.resize_write(
+                node.resize, op, pk, pv, mask)
+            node.table = node.resize.table
+        elif vals is None:
+            node.table, res = getattr(node.store, op)(node.table, pk, mask)
+        else:
             node.table, res = getattr(node.store, op)(node.table, pk, pv,
                                                       mask)
         return np.asarray(res.ok)[:n], res
@@ -313,7 +341,12 @@ class ClusterStore:
         n = keys.shape[0]
         pk = np.zeros((_pad(n), 4), U32)
         pk[:n] = keys
-        res = node.store.lookup(node.table, pk)
+        if node.resize is not None:
+            # dual-read during the node's split window, resolved per-pair
+            # by cutover token
+            res = node.store.resize_lookup(node.resize, pk)
+        else:
+            res = node.store.lookup(node.table, pk)
         return (np.asarray(res.values)[:n], np.asarray(res.ok)[:n], res)
 
     # -- writes -------------------------------------------------------------
@@ -453,14 +486,22 @@ class ClusterStore:
         return target, has
 
     def _padded_stamp(self, node: _Node, keys: np.ndarray):
+        """(stamps, plan, fresh).  ``fresh=False`` while the node is mid-
+        split: a moved cohort's mutations bump the GROWN table's pair
+        word, so a stamp against the draining source word would validate
+        stale cache rows forever.  Unresolved stamps cost the cache a
+        full read per hot key for the window and nothing in safety —
+        callers already treat unresolved as a failed validation."""
         n = keys.shape[0]
+        if node.resize is not None:
+            return np.full((n, 2), -1, np.int64), None, False
         pk = np.zeros((_pad(n), 4), U32)
         pk[:n] = keys
         st = np.asarray(node.store.version_stamp(node.table, pk), np.int64)
         plan = node.store.version_read_plan(node.table, pk)
         # post only the REAL rows: validation is priced per key actually
         # checked, never per pad lane (the 8-byte-per-key claim is a gate)
-        return st[:n], _slice_plan(plan, n)
+        return st[:n], _slice_plan(plan, n), True
 
     def lookup_stamped(self, keys) -> ClusterStampedRead:
         """Cache-fill read: one routed lookup whose answers also carry the
@@ -487,7 +528,7 @@ class ClusterStore:
             node = self._nodes[name]
             m = has & (target == name)
             vs, fs, res = self._padded_lookup(node, keys[m])
-            st, _ = self._padded_stamp(node, keys[m])
+            st, _, fresh = self._padded_stamp(node, keys[m])
             if stamps is None:
                 stamps = np.full((B, st.shape[1]), -1, np.int64)
             if node.mem is not None and res.plan is not None:
@@ -502,7 +543,8 @@ class ClusterStore:
             values[m] = np.where(fs[:, None], vs, values[m])
             found[m] |= fs
             stamps[m] = st
-            src[m] = name
+            if fresh:               # a mid-split answer is uncacheable
+                src[m] = name
         if stamps is None:
             stamps = np.full((B, 1), -1, np.int64)
         return ClusterStampedRead(values, found, stamps, src, lat, round_us)
@@ -527,7 +569,7 @@ class ClusterStore:
         for name in np.unique(target[has]):
             node = self._nodes[name]
             m = has & (target == name)
-            st, plan = self._padded_stamp(node, keys[m])
+            st, plan, fresh = self._padded_stamp(node, keys[m])
             if stamps is None:
                 stamps = np.full((B, st.shape[1]), -1, np.int64)
             if node.mem is not None and plan is not None:
@@ -540,7 +582,7 @@ class ClusterStore:
                 round_us = max(round_us, comp.batch_us)
             stamps[m] = st
             src[m] = name
-            resolved[m] = True
+            resolved[m] = fresh
         if stamps is None:
             stamps = np.full((B, 1), -1, np.int64)
         return ClusterStampResult(stamps, src, resolved, lat, round_us)
@@ -581,6 +623,56 @@ class ClusterStore:
             values[m] = np.where(fs[:, None], vs, values[m])
             found[m] |= fs
         return ClusterReadResult(values, found, lat, round_us)
+
+    # -- background maintenance: incremental per-shard resize ---------------
+    def maintenance_step(self, budget: int = 1, trigger_lf: float = 0.85,
+                         factor: int = 2) -> List[dict]:
+        """One maintenance round, called between foreground batches: any
+        serving shard past ``trigger_lf`` begins an incremental resize;
+        shards mid-split advance ``budget`` cohorts and cut over when
+        drained.  Foreground traffic keeps flowing the whole time — the
+        split's per-pair tokens route it (`_padded_write`/`_padded_lookup`)
+        — so growth never stops the world.  Schemes without mid-split
+        routing (the baselines' one-shot ``resize_step``) are driven to
+        cutover inside the round: the stop-the-world stall the resize
+        bench prices.  Returns one action dict per shard touched."""
+        actions: List[dict] = []
+        for node in self._nodes.values():
+            if not self._serving(node):
+                continue
+            if node.resize is None:
+                lf = float(node.store.load_factor(node.table))
+                if lf <= trigger_lf:
+                    continue
+                rs = node.store.begin_resize(node.table, factor)
+                self.maintenance["resizes_begun"] += 1
+                if not hasattr(node.store, "resize_write"):
+                    node.store, node.table = node.store.resize_cutover(rs)
+                    self.maintenance["blocking_resizes"] += 1
+                    actions.append({"node": node.name, "action": "blocking",
+                                    "lf": lf, "moved": rs.n_items})
+                    continue
+                node.resize = rs
+                node.table = rs.table
+                actions.append({"node": node.name, "action": "begin",
+                                "lf": lf, "cohorts": rs.store.cfg.num_pairs})
+            else:
+                rs = node.store.resize_step(node.resize, budget)
+                node.table = rs.table
+                self.maintenance["steps"] += 1
+                self.maintenance["cohorts_moved"] += budget
+                if rs.done:
+                    node.store, node.table = node.store.resize_cutover(rs)
+                    node.resize = None
+                    self.maintenance["cutovers"] += 1
+                    actions.append({"node": node.name, "action": "cutover",
+                                    "moved": rs.moved,
+                                    "n_items": rs.n_items})
+                else:
+                    node.resize = rs
+                    actions.append({"node": node.name, "action": "step",
+                                    "moved": rs.moved})
+        return actions
 
     # -- rebalance: live join / leave ---------------------------------------
     def begin_join(self, name: str,
@@ -849,6 +941,14 @@ class ClusterStore:
             if not self._serving(node):
                 continue
             node.table, report = node.store.recover(node.table)
+            if node.resize is not None:
+                # a survivor mid-split restarts BOTH images; the handle
+                # resumes from the recovered tables (tokens are host
+                # state here — PM-token recovery is the matrix cell's job)
+                rs = node.resize
+                new_table, _ = rs.new_store.recover(rs.new_table)
+                node.resize = dataclasses.replace(
+                    rs, table=node.table, new_table=new_table)
             recovery[node.name] = report
         del self._nodes[dead]
         self.directory = new_dir
@@ -892,10 +992,11 @@ class ClusterStore:
         out = {"scheme": self.scheme, "nodes": {}, "replicas":
                self.directory.replicas, "migrating": self._mig is not None,
                "epoch": self.epoch, "read_only": self.read_only,
-               "chaos": dict(self.chaos)}
+               "chaos": dict(self.chaos),
+               "maintenance": dict(self.maintenance)}
         for node in self._nodes.values():
             st = {"alive": node.alive, "reachable": node.reachable,
-                  "epoch": node.epoch,
+                  "epoch": node.epoch, "resizing": node.resize is not None,
                   "resident": int(len(self._resident(node)[0]))}
             if node.mem is not None:
                 st["wire"] = node.mem.stats()

@@ -42,10 +42,12 @@ from repro.data import ycsb
 
 OPS = ("insert", "update", "delete")
 MIGRATE_SCHEMES = ("continuity",)   # schemes the migrate cell sweeps
+RESIZE_SCHEMES = ("continuity",)    # schemes the incremental-resize cell sweeps
 
 # (consistent, log_free) expected per cell; None = don't-care
 EXPECT: Dict[Tuple[str, str], Tuple[bool, bool]] = {
     ("continuity", "migrate"): (True, True),
+    ("continuity", "resize"): (True, True),
     ("continuity", "insert"): (True, True),
     ("continuity", "update"): (True, True),
     ("continuity", "delete"): (True, True),
@@ -99,22 +101,29 @@ def run_matrix(schemes=None, ops=OPS, order: str = "serial"
     """The scheme x write-op cells.  The migrate cell has a different
     result shape (a summary dict, not a `CaseResult`) — ask for it via
     `run_migration_cell` / `run_rows`, not here."""
-    if "migrate" in ops:
-        raise ValueError("run_matrix sweeps write ops only; use "
-                         "run_migration_cell (or run_rows) for migrate")
+    for special in ("migrate", "resize"):
+        if special in ops:
+            raise ValueError(
+                f"run_matrix sweeps write ops only; use "
+                f"run_{'migration' if special == 'migrate' else special}"
+                f"_cell (or run_rows) for {special}")
     schemes = schemes or [s for s in api.available_schemes() if s in SHAPES]
     return [run_cell(s, op, order) for s in schemes for op in ops]
 
 
-def run_rows(schemes=None, ops=OPS + ("migrate",),
+def run_rows(schemes=None, ops=OPS + ("migrate", "resize"),
              order: str = "serial") -> List[dict]:
-    """Summary rows for every requested cell, migrate included — the ONE
-    inventory the CLI, CI artifact, and library callers share."""
+    """Summary rows for every requested cell, migrate and resize included
+    — the ONE inventory the CLI, CI artifact, and library callers share."""
     rows = [summarize(r) for r in
-            run_matrix(schemes, tuple(o for o in ops if o != "migrate"),
-                       order)]
+            run_matrix(schemes,
+                       tuple(o for o in ops
+                             if o not in ("migrate", "resize")), order)]
     if "migrate" in ops:
         rows += [run_migration_cell(s) for s in MIGRATE_SCHEMES
+                 if schemes is None or s in schemes]
+    if "resize" in ops:
+        rows += [run_resize_cell(s) for s in RESIZE_SCHEMES
                  if schemes is None or s in schemes]
     return rows
 
@@ -137,6 +146,32 @@ def run_migration_cell(scheme: str, n_move: int = 6) -> dict:
     return {
         "scheme": scheme, "op": "migrate", "order": "serial",
         "paths": ["migrate"],
+        "crash_points": sweep.crash_points,
+        "torn_points": sweep.torn_points,
+        "violations": len(sweep.violations),
+        "consistent": sweep.consistent, "log_free": sweep.log_free,
+        "trace_log_records": sweep.log_records_in_trace,
+        "log_used_points": int(sweep.report.log_records_used > 0),
+        "recovery": dataclasses.asdict(sweep.report),
+        "expected": list(want),
+        "ok": ok,
+    }
+
+
+def run_resize_cell(scheme: str, factor: int = 2) -> dict:
+    """The incremental-resize crash cell: sweep every crash prefix of the
+    per-cohort copy -> token-cutover -> cleanup trace and require the
+    dual-read-resolved item set to equal the original at every point,
+    with zero resize log (`repro.consistency.split.split_crash_sweep`)."""
+    from repro.consistency.split import split_crash_sweep
+    store, table, _, _, _ = _load(scheme)
+    sweep = split_crash_sweep(store, table, factor)
+    want = EXPECT.get((scheme, "resize"), (None, None))
+    ok = ((want[0] is None or want[0] == sweep.consistent)
+          and (want[1] is None or want[1] == sweep.log_free))
+    return {
+        "scheme": scheme, "op": "resize", "order": "serial",
+        "paths": ["resize"],
         "crash_points": sweep.crash_points,
         "torn_points": sweep.torn_points,
         "violations": len(sweep.violations),
@@ -182,7 +217,7 @@ def main(argv=None) -> int:
     p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("--schemes", default=None,
                    help="comma-separated subset (default: all registered)")
-    p.add_argument("--ops", default=",".join(OPS + ("migrate",)))
+    p.add_argument("--ops", default=",".join(OPS + ("migrate", "resize")))
     p.add_argument("--json", default=None, help="write cell summaries here")
     p.add_argument("--quiet", action="store_true")
     args = p.parse_args(argv)

@@ -137,12 +137,16 @@ class ContinuityHandler(_Handler):
     table_cls = ch.ContinuityTable
     uses_log = False
 
-    # symbolic PM layout: [pair rows: indicator | slots] [ext pool] [ext_map]
+    # symbolic PM layout: [pair rows: indicator | fp | slots] [ext pool]
+    # [ext_map] [stash: (meta | slot) entries]
     def _row_bytes(self, cfg) -> int:
-        return ch.INDICATOR_BYTES + cfg.slots_per_pair * SLOT_BYTES
+        return ch.INDICATOR_BYTES + ch.FP_BYTES + cfg.slots_per_pair * SLOT_BYTES
 
     def _addr_indicator(self, cfg, pair) -> int:
         return pair * self._row_bytes(cfg)
+
+    def _addr_fp(self, cfg, pair, lane) -> int:
+        return pair * self._row_bytes(cfg) + ch.INDICATOR_BYTES + lane * 4
 
     def _addr_ext(self, cfg, eidx, eslot) -> int:
         ext_base = cfg.num_pairs * self._row_bytes(cfg)
@@ -151,6 +155,12 @@ class ContinuityHandler(_Handler):
     def _addr_map(self, cfg, pair) -> int:
         return (cfg.num_pairs * self._row_bytes(cfg)
                 + cfg.ext_pool_pairs * cfg.ext_slots * SLOT_BYTES + pair * 4)
+
+    def _addr_stash(self, cfg, sidx) -> int:
+        base = (cfg.num_pairs * self._row_bytes(cfg)
+                + cfg.ext_pool_pairs * cfg.ext_slots * SLOT_BYTES
+                + cfg.num_pairs * 4)
+        return base + sidx * (ch.STASH_META_BYTES + SLOT_BYTES)
 
     def route(self, cfg, keys):
         pair, parity = ch.locate(cfg, jnp.asarray(keys, jnp.uint32))
@@ -168,7 +178,7 @@ class ContinuityHandler(_Handler):
         S = cfg.slots_per_pair
         is_ext = cand >= S
         ind = int(st["indicator"][pair])
-        bits = (ind >> cand) & 1
+        bits = (ind >> cand.astype(np.int64)) & 1
         eidx = int(st["ext_map"][pair])
         has_ext = eidx >= 0
         slot_ok = np.where(is_ext, has_ext or ext_allowed, True).astype(bool)
@@ -193,7 +203,7 @@ class ContinuityHandler(_Handler):
             writes = (SubWrite("keys", (pair, slot), key),
                       SubWrite("vals", (pair, slot), val))
             addr = (pair * self._row_bytes(cfg) + ch.INDICATOR_BYTES
-                    + slot * SLOT_BYTES)
+                    + ch.FP_BYTES + slot * SLOT_BYTES)
         else:
             writes = (SubWrite("ext_keys", (eidx, slot - S), key),
                       SubWrite("ext_vals", (eidx, slot - S), val))
@@ -211,6 +221,49 @@ class ContinuityHandler(_Handler):
                         SubWrite("version", (pair,),
                                  U32(int(st["version"][pair]) + 1))))
 
+    def _vbump(self, cfg, op_id, st, pair) -> PMStore:
+        """Version-only store of the 8-byte commit word: stash commits live
+        OUTSIDE the indicator bits, but cached stamps must still be
+        invalidated, so the pair's counter half is bumped on its own."""
+        return PMStore(op_id, "vbump", True, self._addr_indicator(cfg, pair),
+                       ch.INDICATOR_BYTES, True,
+                       (SubWrite("version", (pair,),
+                                 U32(int(st["version"][pair]) + 1)),))
+
+    def _fp_rec(self, cfg, op_id, pair, lane, word, kind="fp") -> PMStore:
+        """Fingerprint-word lane store: probe metadata only — never the
+        visibility commit point, never Table-I-counted."""
+        return PMStore(op_id, kind, True, self._addr_fp(cfg, pair, lane), 4,
+                       False, (SubWrite("fp", (pair, lane), np.uint32(word)),))
+
+    def _fp_field_word(self, st, pair, slot, key) -> Tuple[int, U32]:
+        """(lane, new-lane-word) setting ``slot``'s fingerprint field."""
+        lane = slot // ch._FPW
+        sh = ch.FP_SLOT_BITS * (slot % ch._FPW)
+        fpv = int(np.asarray(ch.fingerprint(key))[0])
+        old = int(st["fp"][pair, lane])
+        return lane, U32((old & ~(ch.FP_MASK << sh)) | (fpv << sh))
+
+    def _smeta(self, cfg, op_id, sidx, value) -> PMStore:
+        return PMStore(op_id, "smeta", True, self._addr_stash(cfg, sidx), 8,
+                       True, (SubWrite("stash_meta", (sidx,),
+                                       np.uint32(value)),))
+
+    def _stash_payload(self, cfg, op_id, sidx, key, val) -> PMStore:
+        return PMStore(op_id, "payload", False,
+                       self._addr_stash(cfg, sidx) + ch.STASH_META_BYTES,
+                       SLOT_BYTES, True,
+                       (SubWrite("stash_keys", (sidx,), key),
+                        SubWrite("stash_vals", (sidx,), val)))
+
+    def _stash_match(self, cfg, st, pair, key):
+        """First live stash entry holding ``key`` homed at ``pair`` (-1)."""
+        if not cfg.stash_slots:
+            return -1
+        m = ((st["stash_meta"] == U32(pair + 1))
+             & np.all(st["stash_keys"] == key[None], axis=-1))
+        return int(np.argmax(m)) if m.any() else -1
+
     def _trace_insert(self, cfg, st, op_id, key, val, route):
         pair, parity = int(route[0][op_id]), int(route[1][op_id])
         can_alloc = (cfg.ext_frac > 0
@@ -219,7 +272,21 @@ class ContinuityHandler(_Handler):
             cfg, st, pair, parity, can_alloc)
         empty = ~valid & slot_ok
         if not empty.any():
-            return [], False, "full"
+            # stash fallback: count-byte bump (conservative overcount is
+            # harmless: an extra read, never a missed item) -> payload ->
+            # version bump -> atomic meta-word commit.  3 counted writes.
+            if not cfg.stash_slots:
+                return [], False, "full"
+            free = st["stash_meta"][:cfg.stash_slots] == 0
+            if not free.any():
+                return [], False, "full"
+            sidx = int(np.argmax(free))
+            cnt = U32(int(st["fp"][pair, 1]) + (1 << ch.STASH_CNT_SHIFT))
+            recs = [self._fp_rec(cfg, op_id, pair, 1, cnt),
+                    self._stash_payload(cfg, op_id, sidx, key, val),
+                    self._vbump(cfg, op_id, st, pair),
+                    self._smeta(cfg, op_id, sidx, pair + 1)]
+            return recs, True, "stash"
         slot = int(cand[int(np.argmax(empty))])
         S = cfg.slots_per_pair
         recs = []
@@ -232,6 +299,11 @@ class ContinuityHandler(_Handler):
                 (SubWrite("ext_map", (pair,), np.int32(eidx)),
                  SubWrite("ext_count", (), np.int32(eidx + 1)))))
         recs.append(self._payload(cfg, op_id, pair, slot, eidx, key, val))
+        if slot < S:
+            # the NEW slot's fingerprint field lands before the commit, so
+            # the fp pre-filter is always correct for visible slots
+            lane, word = self._fp_field_word(st, pair, slot, key)
+            recs.append(self._fp_rec(cfg, op_id, pair, lane, word))
         word = U32(int(st["indicator"][pair]) | (1 << slot))
         recs.append(self._commit(cfg, op_id, st, pair, word))
         return recs, True, ("ext" if slot >= S else "main")
@@ -243,11 +315,30 @@ class ContinuityHandler(_Handler):
         match = valid & np.all(self._cand_keys(cfg, st, pair, cand, eidx)
                                == key[None], axis=-1)
         empty = ~valid & slot_ok
-        if not (match.any() and empty.any()):
+        sidx = -1 if match.any() else self._stash_match(cfg, st, pair, key)
+        if not ((match.any() or sidx >= 0) and empty.any()):
             return [], False, "miss"
-        old = int(cand[int(np.argmax(match))])
         new = int(cand[int(np.argmax(empty))])
+        S = cfg.slots_per_pair
         recs = [self._payload(cfg, op_id, pair, new, eidx, key, val)]
+        fp1 = int(st["fp"][pair, 1])
+        if new < S:
+            lane, word = self._fp_field_word(st, pair, new, key)
+            recs.append(self._fp_rec(cfg, op_id, pair, lane, word))
+            if lane == 1:
+                fp1 = int(word)
+        if sidx >= 0:
+            # stash relocation: the ONE indicator store makes the main copy
+            # win by probe priority; meta clear + count decrement follow as
+            # shadowed-entry cleanup (count stays >= live at every prefix)
+            word = U32(int(st["indicator"][pair]) ^ (1 << new))
+            recs.append(self._commit(cfg, op_id, st, pair, word))
+            recs.append(self._smeta(cfg, op_id, sidx, 0))
+            recs.append(self._fp_rec(
+                cfg, op_id, pair, 1,
+                U32(fp1 - (1 << ch.STASH_CNT_SHIFT)), kind="fpcnt"))
+            return recs, True, "stash-move"
+        old = int(cand[int(np.argmax(match))])
         # out-of-place: BOTH bit flips land in the one atomic word store
         word = U32(int(st["indicator"][pair]) ^ ((1 << old) | (1 << new)))
         recs.append(self._commit(cfg, op_id, st, pair, word))
@@ -259,7 +350,19 @@ class ContinuityHandler(_Handler):
         match = valid & np.all(self._cand_keys(cfg, st, pair, cand, eidx)
                                == key[None], axis=-1)
         if not match.any():
-            return [], False, "miss"
+            sidx = self._stash_match(cfg, st, pair, key)
+            if sidx < 0:
+                return [], False, "miss"
+            # stash delete: version bump -> atomic meta clear (the commit)
+            # -> count-byte decrement AFTER the commit, so the count never
+            # reads LOW of the live occupancy at any crash prefix
+            recs = [self._vbump(cfg, op_id, st, pair),
+                    self._smeta(cfg, op_id, sidx, 0),
+                    self._fp_rec(
+                        cfg, op_id, pair, 1,
+                        U32(int(st["fp"][pair, 1])
+                            - (1 << ch.STASH_CNT_SHIFT)), kind="fpcnt")]
+            return recs, True, "stash"
         slot = int(cand[int(np.argmax(match))])
         word = U32(int(st["indicator"][pair]) & ~(1 << slot))
         return [self._commit(cfg, op_id, st, pair, word)], True, "main"
@@ -279,6 +382,12 @@ class ContinuityHandler(_Handler):
                     if ind >> (S + s) & 1:
                         out[_key_bytes(st["ext_keys"][e, s])] = \
                             _key_bytes(st["ext_vals"][e, s])
+        for i in range(cfg.stash_slots):
+            # probe priority main > ext > stash: a stash copy never shadows
+            # a committed row copy (mid-relocation crash states rely on it)
+            if int(st["stash_meta"][i]) != 0:
+                out.setdefault(_key_bytes(st["stash_keys"][i]),
+                               _key_bytes(st["stash_vals"][i]))
         return out
 
     def rebuild_counts(self, cfg, st):
@@ -291,17 +400,57 @@ class ContinuityHandler(_Handler):
         if E:
             ext = int((popcount((ind >> U32(S)) & U32((1 << E) - 1))
                        * mapped).sum())
-        st["count"] = np.asarray(main + ext, st["count"].dtype)
+        stash = 0
+        if cfg.stash_slots:
+            stash = int((st["stash_meta"][:cfg.stash_slots] != 0).sum())
+        st["count"] = np.asarray(main + ext + stash, st["count"].dtype)
         st["ext_count"] = np.asarray(int(mapped.sum()),
                                      st["ext_count"].dtype)
         return st
 
+    def _row_has_key(self, cfg, st, pair, kb) -> bool:
+        S, E = cfg.slots_per_pair, cfg.ext_slots
+        ind = int(st["indicator"][pair])
+        for s in range(S):
+            if ind >> s & 1 and _key_bytes(st["keys"][pair, s]) == kb:
+                return True
+        e = int(st["ext_map"][pair])
+        if e >= 0:
+            for s in range(E):
+                if (ind >> (S + s) & 1
+                        and _key_bytes(st["ext_keys"][e, s]) == kb):
+                    return True
+        return False
+
     def recover(self, cfg, st):
-        """Paper §III-C restart: a PURE function of the indicator words (+
-        the persisted pair->pool map).  No payload reads, no log — the
-        whole point of the single-atomic-commit discipline."""
+        """Paper §III-C restart: a PURE function of the commit words — the
+        indicator words plus (stash-enabled geometries only) the stash meta
+        words.  A crashed stash relocation can leave a live meta word whose
+        entry is shadowed by the committed row copy; recovery clears those
+        (bounded by the stash size, the only payload reads it ever does)
+        and re-derives the per-pair count bytes.  No log, ever."""
+        st = copy_state(st)
+        T = cfg.stash_slots
+        dups = scanned = 0
+        if T:
+            seen = set()
+            for i in np.nonzero(st["stash_meta"][:T] != 0)[0]:
+                scanned += 1
+                pair = int(st["stash_meta"][i]) - 1
+                kb = _key_bytes(st["stash_keys"][i])
+                if self._row_has_key(cfg, st, pair, kb) or (pair, kb) in seen:
+                    st["stash_meta"][i] = U32(0)
+                    dups += 1
+                else:
+                    seen.add((pair, kb))
+            for p in range(cfg.num_pairs):
+                cnt = int((st["stash_meta"][:T] == U32(p + 1)).sum())
+                st["fp"][p, 1] = U32(
+                    (int(st["fp"][p, 1]) & ((1 << ch.STASH_CNT_SHIFT) - 1))
+                    | (cnt << ch.STASH_CNT_SHIFT))
         return self.rebuild_counts(cfg, st), RecoveryReport(
-            self.name, commit_words_scanned=cfg.num_pairs)
+            self.name, commit_words_scanned=cfg.num_pairs + T,
+            payload_slots_scanned=scanned, duplicates_cleared=dups)
 
 
 # ---------------------------------------------------------------------------
@@ -893,7 +1042,8 @@ def trace_batch(handler: _Handler, cfg, table_or_state, op: str,
         assert hasattr(handler, "wave_ranks"), \
             f"{handler.name} has no wave schedule"
         rank = handler.wave_ranks(cfg, keys, active)
-        phase = {"indicator": 1, "token": 1}
+        phase = {"vbump": 1, "indicator": 1, "token": 1,
+                 "smeta": 2, "fpcnt": 3}
         records = [r for _, r in sorted(
             enumerate(records),
             key=lambda ir: (int(rank[ir[1].op_id]),

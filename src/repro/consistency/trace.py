@@ -212,7 +212,7 @@ def crash_states(base: State, trace: PMTrace,
 # observed state the restarted node no longer has.  ``remote_crash_states``
 # materializes exactly that cut for every store boundary.
 
-COMMIT_KINDS = ("indicator", "token", "log_commit", "log_free")
+COMMIT_KINDS = ("indicator", "token", "smeta", "log_commit", "log_free")
 
 
 @dataclasses.dataclass(frozen=True)

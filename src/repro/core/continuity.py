@@ -52,7 +52,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import pmem
-from repro.core.hashfn import hash128
+from repro.core.hashfn import hash128, hash128_2
 
 U32 = jnp.uint32
 I32 = jnp.int32
@@ -61,6 +61,12 @@ KEY_LANES = 4   # 16-byte keys (paper: 16 B)
 VAL_LANES = 4   # 16-byte value slots (paper: values <= 15 B + metadata byte)
 SLOT_BYTES = (KEY_LANES + VAL_LANES) * 4
 INDICATOR_BYTES = 8  # stored/committed as one 8-byte atomic unit
+FP_BYTES = 8         # fingerprint word, adjacent to the indicator (Dash-style)
+FP_SLOT_BITS = 2     # fingerprint bits per main slot
+FP_MASK = (1 << FP_SLOT_BITS) - 1
+_FPW = 32 // FP_SLOT_BITS            # fp fields per 32-bit lane
+STASH_CNT_SHIFT = 24                 # per-pair stash count byte (fp lane 1)
+STASH_META_BYTES = 8                 # per-stash-entry meta word (atomic commit)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -72,11 +78,16 @@ class ContinuityConfig:
     sbuckets: int = 3                # shared SBuckets per pair (paper: 3)
     ext_frac: float = 1.0 / 10.0     # max fraction of pairs with added SBuckets
     ext_groups: int = 1              # added SBucket groups per extended pair
+    stash_frac: float = 0.0          # stash slots as a fraction of main slots
 
     def __post_init__(self):
         assert self.num_buckets >= 2 and self.num_buckets % 2 == 0
         assert self.total_bits <= 32, (
             f"indicator must fit one atomic word: {self.total_bits} bits")
+        # fp lane 1 keeps its top byte for the per-pair stash count, so main
+        # slot fields must fit the remaining 56 bits of the fingerprint word
+        assert self.slots_per_pair * FP_SLOT_BITS <= 64 - 8, (
+            f"fingerprint fields overflow the fp word: {self.slots_per_pair}")
 
     # -- derived geometry ---------------------------------------------------
     @property
@@ -109,12 +120,30 @@ class ContinuityConfig:
 
     @property
     def segment_bytes(self) -> int:
-        """Payload of one one-sided segment fetch (indicator + segment slots)."""
-        return INDICATOR_BYTES + self.seg_slots * SLOT_BYTES
+        """Payload of one one-sided segment fetch (indicator + fingerprint
+        word + segment slots — the fp word rides in the segments' overlap)."""
+        return INDICATOR_BYTES + FP_BYTES + self.seg_slots * SLOT_BYTES
+
+    @property
+    def row_bytes(self) -> int:
+        """One full pair row: [B_even | indicator | fp | SBuckets | B_odd]."""
+        return INDICATOR_BYTES + FP_BYTES + self.slots_per_pair * SLOT_BYTES
 
     @property
     def ext_bytes(self) -> int:
         return self.ext_slots * SLOT_BYTES
+
+    @property
+    def stash_slots(self) -> int:
+        if self.stash_frac <= 0:
+            return 0
+        return max(1, int(np.ceil(
+            self.num_pairs * self.slots_per_pair * self.stash_frac)))
+
+    @property
+    def stash_bytes(self) -> int:
+        """The whole stash region (fetched as ONE contiguous READ)."""
+        return self.stash_slots * (STASH_META_BYTES + SLOT_BYTES)
 
     def grow(self, factor: int = 2) -> "ContinuityConfig":
         return dataclasses.replace(self, num_buckets=self.num_buckets * factor)
@@ -146,10 +175,20 @@ class ContinuityTable(NamedTuple):
     ext_map: jnp.ndarray     # (P,) int32 — pair -> ext group index, -1 = none
     ext_count: jnp.ndarray   # () int32 — allocated extension groups
     count: jnp.ndarray       # () int32 — live items
+    fp: jnp.ndarray          # (P, 2) uint32 — the 8B fingerprint word next to
+    #   the indicator: FP_SLOT_BITS per main slot (lane s//16, field s%16) and
+    #   the per-pair stash count in lane 1's top byte.  Pure probe metadata:
+    #   uncommitted stores never make an item visible (the indicator bit does),
+    #   so fp writes are not PM-write-counted and Table I is unchanged.
+    stash_keys: jnp.ndarray  # (T, KEY_LANES) uint32 — shared overflow stash
+    stash_vals: jnp.ndarray  # (T, VAL_LANES) uint32
+    stash_meta: jnp.ndarray  # (T,) uint32 — home pair + 1; 0 = free.  The 8B
+    #   atomic commit word of a stash entry (payload first, meta second).
 
 
 def create(cfg: ContinuityConfig) -> ContinuityTable:
     P, S, E, PE = cfg.num_pairs, cfg.slots_per_pair, cfg.ext_slots, cfg.ext_pool_pairs
+    T = max(cfg.stash_slots, 1)
     return ContinuityTable(
         keys=jnp.zeros((P, S, KEY_LANES), U32),
         vals=jnp.zeros((P, S, VAL_LANES), U32),
@@ -160,12 +199,16 @@ def create(cfg: ContinuityConfig) -> ContinuityTable:
         ext_map=jnp.full((P,), -1, I32),
         ext_count=jnp.zeros((), I32),
         count=jnp.zeros((), I32),
+        fp=jnp.zeros((P, 2), U32),
+        stash_keys=jnp.zeros((T, KEY_LANES), U32),
+        stash_vals=jnp.zeros((T, VAL_LANES), U32),
+        stash_meta=jnp.zeros((T,), U32),
     )
 
 
 def capacity(cfg: ContinuityConfig, table: ContinuityTable) -> jnp.ndarray:
     """Total allocated storage units (paper's load-factor denominator)."""
-    return (cfg.num_pairs * cfg.slots_per_pair
+    return (cfg.num_pairs * cfg.slots_per_pair + cfg.stash_slots
             + table.ext_count * cfg.ext_slots).astype(jnp.float32)
 
 
@@ -178,6 +221,33 @@ def locate(cfg: ContinuityConfig, keys: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.n
     h = hash128(keys)
     bno = h % U32(cfg.num_buckets)
     return (bno >> U32(1)).astype(I32), (bno & U32(1)).astype(I32)
+
+
+def fingerprint(keys: jnp.ndarray) -> jnp.ndarray:
+    """(B,) uint32 slot fingerprint from the second hash function (so it is
+    independent of the bucket number, which the first hash determines)."""
+    return hash128_2(jnp.asarray(keys, U32).reshape(-1, KEY_LANES)) & U32(FP_MASK)
+
+
+def stash_count(table: ContinuityTable, pair: jnp.ndarray) -> jnp.ndarray:
+    """Per-pair stash occupancy byte (fp lane 1, top byte).  May briefly read
+    HIGH of the true count (insert bumps it before the meta commit, delete
+    decrements after) — a conservative overcount only ever costs an extra
+    stash READ, never a missed item."""
+    return (table.fp[pair, 1] >> U32(STASH_CNT_SHIFT)) & U32(0xFF)
+
+
+def _fp_store(table: ContinuityTable, ok, pair, slot, fpv) -> ContinuityTable:
+    """Set the fp field of (pair, slot) — main slots only; callers mask.
+    Active lanes must touch distinct (pair, slot); the read-modify-write
+    models the server's 4-byte fp-lane store (uncounted metadata)."""
+    w = jnp.where(ok, slot // _FPW, 0)
+    sh = (U32(FP_SLOT_BITS) * (slot % _FPW).astype(U32))
+    old = table.fp[pair, w]
+    new = (old & ~(U32(FP_MASK) << sh)) | ((fpv & U32(FP_MASK)) << sh)
+    drop = jnp.iinfo(I32).max
+    return table._replace(
+        fp=table.fp.at[jnp.where(ok, pair, drop), w].set(new, mode="drop"))
 
 
 # ---------------------------------------------------------------------------
@@ -230,7 +300,8 @@ def _gather_candidates(cfg: ContinuityConfig, table: ContinuityTable,
 class LookupResult(NamedTuple):
     found: jnp.ndarray   # (B,) bool
     values: jnp.ndarray  # (B, VAL_LANES) uint32
-    slot: jnp.ndarray    # (B,) int32 — matched slot id (or -1)
+    slot: jnp.ndarray    # (B,) int32 — matched slot id (or -1); stash hits
+    #   report cfg.total_bits + stash_index
     pair: jnp.ndarray    # (B,) int32
     reads: jnp.ndarray   # (B,) int32 — contiguous fetches this lookup needed
 
@@ -239,7 +310,8 @@ class LookupResult(NamedTuple):
 def lookup(cfg: ContinuityConfig, table: ContinuityTable,
            keys: jnp.ndarray) -> LookupResult:
     """Batched client read: ONE contiguous segment fetch per key (+1 iff the
-    pair has added SBuckets and the main segment missed)."""
+    pair has added SBuckets and the main segment missed, +1 iff the pair's
+    stash count byte is non-zero and both main and extension missed)."""
     keys = jnp.asarray(keys, U32).reshape(-1, KEY_LANES)
     pair, parity = locate(cfg, keys)
     f = jnp.zeros((keys.shape[0],), jnp.bool_)
@@ -252,7 +324,21 @@ def lookup(cfg: ContinuityConfig, table: ContinuityTable,
     values = jnp.take_along_axis(cvals, first[:, None, None], 1)[:, 0]
     values = jnp.where(found[:, None], values, 0)
     found_main = jnp.any(match & ~is_ext, axis=-1)
+    found_me = found                          # matched in main or extension
     reads = 1 + (has_ext & ~found_main).astype(I32)
+    if cfg.stash_slots:
+        # stash probe: the whole region arrives in one contiguous READ, so
+        # the scan is free once the fetch is paid; probe priority stays
+        # main > extension > stash (commits clear the stash entry LAST)
+        home = pair.astype(U32) + U32(1)
+        smatch = (table.stash_meta[None, :] == home[:, None]) & jnp.all(
+            table.stash_keys[None, :, :] == keys[:, None, :], axis=-1)
+        sfound = jnp.any(smatch, axis=-1) & ~found
+        sfirst = jnp.argmax(smatch, axis=-1).astype(I32)
+        values = jnp.where(sfound[:, None], table.stash_vals[sfirst], values)
+        slot = jnp.where(sfound, cfg.total_bits + sfirst, slot)
+        found = found | sfound
+        reads = reads + ((stash_count(table, pair) > 0) & ~found_me).astype(I32)
     return LookupResult(found, values, slot, pair, reads)
 
 
@@ -261,26 +347,37 @@ def lookup_plan(cfg: ContinuityConfig, table: ContinuityTable, keys,
     """Verb plan of a lookup batch (paper §III-B): ONE contiguous segment
     READ per key — home bucket + neighbouring SBuckets in a single
     one-sided fetch, misses included — plus one DEPENDENT extension-group
-    READ iff the pair has added SBuckets and the main segment missed
-    (``res.reads > 1``).  The `CostLedger` every caller sees is derived
+    READ iff the pair has added SBuckets and the main segment missed, and
+    one dependent stash-region READ iff the pair's stash count byte (read
+    for free inside the fp word of the first fetch) is non-zero and both
+    prior fetches missed.  The `CostLedger` every caller sees is derived
     from this plan (`repro.rdma.verbs.ledger_from_plan`)."""
     from repro.rdma import verbs as rv
     keys = jnp.asarray(keys, U32).reshape(-1, KEY_LANES)
     pair, parity = locate(cfg, keys)
-    # modeled row layout: [B_even | indicator | SBuckets | B_odd] — the
-    # indicator word sits in the two segments' OVERLAP, so BOTH parities'
-    # fetches are genuinely contiguous ranges that include it: even =
-    # [row, row + segment_bytes), odd = [row + bucket_slots*SLOT_BYTES,
-    # row_end); a plan replay against a linear memory image stays valid
-    row_bytes = INDICATOR_BYTES + cfg.slots_per_pair * SLOT_BYTES
+    # modeled row layout: [B_even | indicator | fp | SBuckets | B_odd] — the
+    # indicator and fingerprint words sit in the two segments' OVERLAP, so
+    # BOTH parities' fetches are genuinely contiguous ranges that include
+    # them: even = [row, row + segment_bytes), odd = [row +
+    # bucket_slots*SLOT_BYTES, row_end); a replay against a linear memory
+    # image stays valid
+    row_bytes = cfg.row_bytes
     seg_off = pair * row_bytes + parity * (cfg.bucket_slots * SLOT_BYTES)
-    ext = res.reads > 1
+    found_main = res.found & (res.slot >= 0) & (res.slot < cfg.slots_per_pair)
+    ext = (table.ext_map[pair] >= 0) & ~found_main
     eidx = jnp.maximum(table.ext_map[pair], 0)
-    return rv.pack(keys.shape[0], [
+    lanes = [
         (rv.READ, rv.REGION_TABLE, seg_off, cfg.segment_bytes, 0, False),
         (jnp.where(ext, rv.READ, rv.NOOP), rv.REGION_EXT,
          eidx * cfg.ext_bytes, cfg.ext_bytes, 1, False),
-    ])
+    ]
+    if cfg.stash_slots:
+        found_me = res.found & (res.slot >= 0) & (res.slot < cfg.total_bits)
+        srd = (stash_count(table, pair) > 0) & ~found_me
+        lanes.append((jnp.where(srd, rv.READ, rv.NOOP), rv.REGION_STASH,
+                      0, cfg.stash_bytes,
+                      jnp.where(ext, 2, 1).astype(I32), False))
+    return rv.pack(keys.shape[0], lanes)
 
 
 def scan_plan(cfg: ContinuityConfig, table: ContinuityTable, keys, spans):
@@ -298,7 +395,7 @@ def scan_plan(cfg: ContinuityConfig, table: ContinuityTable, keys, spans):
     keys = jnp.asarray(keys, U32).reshape(-1, KEY_LANES)
     spans = jnp.maximum(jnp.asarray(spans, I32).reshape(-1), 1)
     pair, _ = locate(cfg, keys)
-    row_bytes = INDICATOR_BYTES + cfg.slots_per_pair * SLOT_BYTES
+    row_bytes = cfg.row_bytes
     rows = -(-spans // cfg.slots_per_pair)          # ceil: rows crossed
     # clamp to the table's tail so the range stays a valid remote region
     start = jnp.minimum(pair, jnp.maximum(cfg.num_pairs - rows, 0))
@@ -322,18 +419,20 @@ def version_stamp(cfg: ContinuityConfig, table: ContinuityTable, keys):
     return jnp.stack([table.version[pair], table.indicator[pair]], axis=-1)
 
 
-def version_read_plan(cfg: ContinuityConfig, keys):
+def version_read_plan(cfg: ContinuityConfig, table: ContinuityTable, keys):
     """Verb plan of a stamp validation batch: ONE depth-0 8-byte READ per key
     at the home pair's indicator-word offset.  This is the whole point of
     indicator-word validation: it costs `INDICATOR_BYTES` on the wire versus
     `segment_bytes` for a full lookup, with no server-side invalidation
-    protocol at all."""
+    protocol at all.  (``table`` is unused — the plan depends only on the
+    geometry — but rides along for the unified ``(cfg, table, keys)`` plan
+    signature shared by every scheme module.)"""
     from repro.rdma import verbs as rv
+    del table
     keys = jnp.asarray(keys, U32).reshape(-1, KEY_LANES)
     pair, _ = locate(cfg, keys)
-    row_bytes = INDICATOR_BYTES + cfg.slots_per_pair * SLOT_BYTES
     return rv.single_read_plan(keys.shape[0], rv.REGION_TABLE,
-                               pair * row_bytes, INDICATOR_BYTES)
+                               pair * cfg.row_bytes, INDICATOR_BYTES)
 
 
 # ---------------------------------------------------------------------------
@@ -391,11 +490,36 @@ def _find_insert_slot(cfg, table, key):
     return pair[0], slot, ok, need_alloc, ext_idx
 
 
+def _stash_insert_one(cfg, table: ContinuityTable, key, val, want):
+    """Stash fallback of one insert (``want`` = probe failed, op active).
+
+    Record order for crash atomicity: fp count bump (uncounted metadata,
+    may overcount) -> payload store -> version bump -> meta word commit.
+    The 8B meta word is the atomic commit point; a crash before it leaves
+    the entry invisible.  3 counted PM writes."""
+    pair, _ = locate(cfg, key[None])
+    free = table.stash_meta == U32(0)
+    sok = want & jnp.any(free)
+    sidx = jnp.argmax(free).astype(I32)
+    drop = jnp.iinfo(I32).max
+    w = jnp.where(sok, sidx, drop)
+    pw = jnp.where(sok, pair[0], drop)
+    table = table._replace(
+        fp=table.fp.at[pw, 1].add(U32(1) << U32(STASH_CNT_SHIFT), mode="drop"),
+        stash_keys=table.stash_keys.at[w].set(key, mode="drop"),
+        stash_vals=table.stash_vals.at[w].set(val, mode="drop"),
+        version=table.version.at[pw].add(U32(1), mode="drop"),
+        stash_meta=table.stash_meta.at[w].set(
+            pair[0].astype(U32) + U32(1), mode="drop"),
+        count=table.count + sok.astype(I32))
+    return table, sok
+
+
 def _insert_one(cfg, table: ContinuityTable, key, val, active=None):
     pair, slot, ok, need_alloc, ext_idx = _find_insert_slot(cfg, table, key)
-    if active is not None:
-        ok = ok & active
-        need_alloc = need_alloc & active
+    act = jnp.ones((), jnp.bool_) if active is None else active
+    ok = ok & act
+    need_alloc = need_alloc & act
     # extension allocation is metadata (rebuilt on recovery from ext_map scan)
     ext_map = table.ext_map.at[jnp.where(need_alloc, pair, jnp.iinfo(I32).max)].set(
         ext_idx, mode="drop")
@@ -403,9 +527,18 @@ def _insert_one(cfg, table: ContinuityTable, key, val, active=None):
                            ext_count=table.ext_count + need_alloc.astype(I32))
     table = _scatter_payload(table, ok, pair, slot, ext_idx, key, val,
                              cfg.slots_per_pair)
+    # fingerprint field of the NEW slot lands before the commit (main only)
+    table = _fp_store(table, ok & (slot < cfg.slots_per_pair), pair, slot,
+                      fingerprint(key[None])[0])
     new_word = table.indicator[pair] | jnp.where(ok, U32(1) << slot.astype(U32), U32(0))
     table = _commit_indicator(table, ok, pair, new_word)
-    return table._replace(count=table.count + ok.astype(I32)), ok
+    table = table._replace(count=table.count + ok.astype(I32))
+    pm = jnp.where(ok, 2, 0).astype(I32)
+    if cfg.stash_slots:
+        table, sok = _stash_insert_one(cfg, table, key, val, act & ~ok)
+        ok = ok | sok
+        pm = pm + jnp.where(sok, 3, 0).astype(I32)
+    return table, ok, pm
 
 
 def _delete_one(cfg, table: ContinuityTable, key, active=None):
@@ -413,14 +546,36 @@ def _delete_one(cfg, table: ContinuityTable, key, active=None):
     ok, pair, slot = res.found[0], res.pair[0], res.slot[0]
     if active is not None:
         ok = ok & active
-    safe = jnp.maximum(slot, 0).astype(U32)
-    new_word = table.indicator[pair] & ~jnp.where(ok, U32(1) << safe, U32(0))
-    table = _commit_indicator(table, ok, pair, new_word)
-    return table._replace(count=table.count - ok.astype(I32)), ok
+    in_stash = ok & (slot >= cfg.total_bits)
+    okm = ok & ~in_stash
+    safe = jnp.minimum(jnp.maximum(slot, 0), cfg.total_bits - 1).astype(U32)
+    new_word = table.indicator[pair] & ~jnp.where(okm, U32(1) << safe, U32(0))
+    table = _commit_indicator(table, okm, pair, new_word)
+    pm = jnp.where(okm, 1, 0).astype(I32)
+    if cfg.stash_slots:
+        # stash delete: version bump -> meta clear (the atomic commit) ->
+        # fp count decrement (uncounted, AFTER the commit so the count byte
+        # never reads LOW of the true occupancy at any crash prefix)
+        drop = jnp.iinfo(I32).max
+        sidx = jnp.where(in_stash, slot - cfg.total_bits, drop)
+        pw = jnp.where(in_stash, pair, drop)
+        table = table._replace(
+            version=table.version.at[pw].add(U32(1), mode="drop"),
+            stash_meta=table.stash_meta.at[sidx].set(U32(0), mode="drop"))
+        table = table._replace(
+            fp=table.fp.at[pw, 1].add(-(U32(1) << U32(STASH_CNT_SHIFT)),
+                                      mode="drop"))
+        pm = pm + jnp.where(in_stash, 2, 0).astype(I32)
+    return table._replace(count=table.count - ok.astype(I32)), ok, pm
 
 
 def _update_one(cfg, table: ContinuityTable, key, val, active=None):
-    """Out-of-place update: both bit-flips land in ONE atomic indicator store."""
+    """Out-of-place update: both bit-flips land in ONE atomic indicator store.
+
+    A key living in the stash relocates into an empty main/SBucket slot
+    (payload -> fp -> indicator commit makes the new copy win by probe
+    priority -> stash meta clear); with no empty candidate the update
+    fails rather than tearing the stash entry in place."""
     res = lookup(cfg, table, key[None])
     found, pair, old_slot = res.found[0], res.pair[0], res.slot[0]
     if active is not None:
@@ -433,25 +588,41 @@ def _update_one(cfg, table: ContinuityTable, key, val, active=None):
     has_empty = jnp.any(empty, axis=-1)[0]
     first = jnp.argmax(empty, axis=-1)
     new_slot = jnp.take_along_axis(cand, first[:, None], 1)[0, 0]
+    in_stash = found & (old_slot >= cfg.total_bits)
     ok = found & has_empty
+    okm = ok & ~in_stash
+    oks = ok & in_stash
     ext_idx = jnp.maximum(table.ext_map[pair], 0)
     table = _scatter_payload(table, ok, pair, new_slot, ext_idx, key, val,
                              cfg.slots_per_pair)
-    flip = (U32(1) << jnp.maximum(old_slot, 0).astype(U32)) | (U32(1) << new_slot.astype(U32))
+    table = _fp_store(table, ok & (new_slot < cfg.slots_per_pair), pair,
+                      new_slot, fingerprint(key[None])[0])
+    safe_old = jnp.minimum(jnp.maximum(old_slot, 0), cfg.total_bits - 1)
+    flip = jnp.where(okm, U32(1) << safe_old.astype(U32), U32(0)) | \
+        (U32(1) << new_slot.astype(U32))
     new_word = table.indicator[pair] ^ jnp.where(ok, flip, U32(0))
     table = _commit_indicator(table, ok, pair, new_word)
-    return table, ok
+    pm = jnp.where(okm, 2, 0).astype(I32)
+    if cfg.stash_slots:
+        drop = jnp.iinfo(I32).max
+        sidx = jnp.where(oks, old_slot - cfg.total_bits, drop)
+        pw = jnp.where(oks, pair, drop)
+        table = table._replace(
+            stash_meta=table.stash_meta.at[sidx].set(U32(0), mode="drop"),
+            fp=table.fp.at[pw, 1].add(-(U32(1) << U32(STASH_CNT_SHIFT)),
+                                      mode="drop"))
+        pm = pm + jnp.where(oks, 3, 0).astype(I32)
+    return table, ok, pm
 
 
-def _scan_op(cfg, one_fn, pm_per_op):
+def _scan_op(cfg, one_fn):
     def step(carry, kv):
         table, ctr = carry
         *args, active = kv
-        table, ok = one_fn(cfg, table, *args, active)
+        table, ok, pm = one_fn(cfg, table, *args, active)
         # masked-off ops count neither writes nor the ops denominator, so
         # per-op ledger averages stay meaningful for masked batches
-        ctr = ctr.add(pm_writes=jnp.where(ok, pm_per_op, 0),
-                      ops=jnp.where(active, 1, 0))
+        ctr = ctr.add(pm_writes=pm, ops=jnp.where(active, 1, 0))
         return (table, ctr), ok
     return step
 
@@ -466,12 +637,13 @@ def _active_mask(keys, mask):
 def insert_serial(cfg: ContinuityConfig, table: ContinuityTable, keys, vals,
                   mask=None):
     """Reference ``lax.scan`` insert (batch-order deterministic). 2 PM
-    writes/op. Kept as the crash-recovery path and equivalence oracle for
-    the wave engine; production batches use ``insert``."""
+    writes/op (3 on the stash-fallback path). Kept as the crash-recovery
+    path and equivalence oracle for the wave engine; production batches
+    use ``insert``."""
     keys = jnp.asarray(keys, U32).reshape(-1, KEY_LANES)
     vals = jnp.asarray(vals, U32).reshape(-1, VAL_LANES)
     (table, ctr), ok = jax.lax.scan(
-        _scan_op(cfg, _insert_one, 2), (table, pmem.CostLedger.zero()),
+        _scan_op(cfg, _insert_one), (table, pmem.CostLedger.zero()),
         (keys, vals, _active_mask(keys, mask)))
     return table, ok, ctr
 
@@ -479,10 +651,11 @@ def insert_serial(cfg: ContinuityConfig, table: ContinuityTable, keys, vals,
 @functools.partial(jax.jit, static_argnums=0)
 def delete_serial(cfg: ContinuityConfig, table: ContinuityTable, keys,
                   mask=None):
-    """Reference ``lax.scan`` delete. 1 PM write/op (indicator bit clear)."""
+    """Reference ``lax.scan`` delete. 1 PM write/op (indicator bit clear;
+    2 for stash entries: version bump + meta clear)."""
     keys = jnp.asarray(keys, U32).reshape(-1, KEY_LANES)
     (table, ctr), ok = jax.lax.scan(
-        _scan_op(cfg, _delete_one, 1), (table, pmem.CostLedger.zero()),
+        _scan_op(cfg, _delete_one), (table, pmem.CostLedger.zero()),
         (keys, _active_mask(keys, mask)))
     return table, ok, ctr
 
@@ -490,11 +663,12 @@ def delete_serial(cfg: ContinuityConfig, table: ContinuityTable, keys,
 @functools.partial(jax.jit, static_argnums=0)
 def update_serial(cfg: ContinuityConfig, table: ContinuityTable, keys, vals,
                   mask=None):
-    """Reference ``lax.scan`` out-of-place update. 2 PM writes/op."""
+    """Reference ``lax.scan`` out-of-place update. 2 PM writes/op (3 when
+    the op relocates a stash entry into the main row)."""
     keys = jnp.asarray(keys, U32).reshape(-1, KEY_LANES)
     vals = jnp.asarray(vals, U32).reshape(-1, VAL_LANES)
     (table, ctr), ok = jax.lax.scan(
-        _scan_op(cfg, _update_one, 2), (table, pmem.CostLedger.zero()),
+        _scan_op(cfg, _update_one), (table, pmem.CostLedger.zero()),
         (keys, vals, _active_mask(keys, mask)))
     return table, ok, ctr
 
@@ -663,6 +837,8 @@ def _insert_wave(cfg: ContinuityConfig, table: ContinuityTable, keys, vals,
         ext_map=ext_map, ext_count=table.ext_count + jnp.sum(grant).astype(I32))
     table = _scatter_payload(table, ok, pair, slot, ext_idx, keys, vals,
                              cfg.slots_per_pair)                    # phase 1
+    table = _fp_store(table, ok & (slot < cfg.slots_per_pair), pair, slot,
+                      fingerprint(keys))
     word = table.indicator[pair] | jnp.where(
         ok, U32(1) << slot.astype(U32), U32(0))
     table = _commit_indicator(table, ok, pair, word)                # phase 2
@@ -828,6 +1004,20 @@ def _insert_fused(cfg: ContinuityConfig, table: ContinuityTable, keys, vals,
     tek, tev = jax.lax.cond(jnp.any(ok & is_ext), ext_rows,
                             lambda kv: kv, (table.ext_keys, table.ext_vals))
 
+    # fingerprint fields of the committed main slots: committed ops claim
+    # pairwise-distinct (pair, slot), so their 2-bit fields are disjoint
+    # and two scatter-adds (clear mask, then new bits) compose exactly like
+    # the serial path's per-op read-modify-writes
+    okm = ok & ~is_ext
+    fpv = fingerprint(k_s)
+    fw = jnp.where(okm, jnp.minimum(slot, S - 1) // _FPW, 0)
+    fsh = (U32(FP_SLOT_BITS) * (slot % _FPW).astype(U32))
+    fpair = jnp.where(okm, pair_s, drop)
+    fclear = jnp.zeros((P, 2), U32).at[fpair, fw].add(
+        jnp.where(okm, U32(FP_MASK) << fsh, U32(0)), mode="drop")
+    fnew = jnp.zeros((P, 2), U32).at[fpair, fw].add(
+        jnp.where(okm, (fpv & U32(FP_MASK)) << fsh, U32(0)), mode="drop")
+
     # phase 2: one-word indicator commits (bits of one pair are disjoint,
     # so a scatter-add is the batch of independent atomic ORs)
     add = jnp.zeros((P,), U32).at[jnp.where(ok, pair_s, drop)].add(
@@ -841,6 +1031,7 @@ def _insert_fused(cfg: ContinuityConfig, table: ContinuityTable, keys, vals,
         keys=tkeys, vals=tvals, ext_keys=tek, ext_vals=tev,
         indicator=table.indicator | add,
         version=table.version + vadd,
+        fp=(table.fp & ~fclear) | fnew,
         count=table.count + jnp.sum(ok).astype(I32))
 
     okb = jnp.zeros((B,), jnp.bool_).at[idx_s].set(ok)
@@ -888,13 +1079,47 @@ def insert(cfg: ContinuityConfig, table: ContinuityTable, keys, vals,
     table, ok, gpos, gidx = jax.lax.cond(
         jnp.any(unsafe_s), contended, lambda a: a, (table, ok, gpos, gidx))
 
+    n_stash = jnp.zeros((), I32)
+    if cfg.stash_slots:
+        # stash fallback AFTER all main waves: probe outcomes never depend
+        # on stash state, so deferring the failed ops preserves serial
+        # byte-identity — op i's stash slot is the (rank_i+1)-th free slot
+        # in ascending order, exactly what the serial first-free scan picks
+        def stash_pass(args):
+            t, okb = args
+            T = cfg.stash_slots
+            fail = active & ~okb
+            free = t.stash_meta == U32(0)
+            nth = jnp.cumsum(fail.astype(I32)) - 1       # batch-order rank
+            sok = fail & (nth < jnp.sum(free.astype(I32)))
+            fs = jnp.sort(jnp.where(free, jnp.arange(T, dtype=I32), T))
+            sidx = fs[jnp.clip(nth, 0, T - 1)]
+            drop = jnp.iinfo(I32).max
+            w = jnp.where(sok, sidx, drop)
+            pair, _ = locate(cfg, keys)
+            pw = jnp.where(sok, pair, drop)
+            t = t._replace(
+                fp=t.fp.at[pw, 1].add(U32(1) << U32(STASH_CNT_SHIFT),
+                                      mode="drop"),
+                stash_keys=t.stash_keys.at[w].set(keys, mode="drop"),
+                stash_vals=t.stash_vals.at[w].set(vals, mode="drop"),
+                version=t.version.at[pw].add(U32(1), mode="drop"),
+                stash_meta=t.stash_meta.at[w].set(
+                    pair.astype(U32) + U32(1), mode="drop"),
+                count=t.count + jnp.sum(sok).astype(I32))
+            return t, okb | sok, jnp.sum(sok).astype(I32)
+
+        table, ok, n_stash = jax.lax.cond(
+            jnp.any(active & ~ok), stash_pass,
+            lambda a: (a[0], a[1], jnp.zeros((), I32)), (table, ok))
+
     if cfg.ext_frac > 0:
         # relabel pool rows into batch-grant order (== serial pool layout)
         table = jax.lax.cond(
             jnp.any(gpos >= 0),
             lambda t: _reorder_ext_pool(cfg, t, gpos, gidx),
             lambda t: t, table)
-    ctr = pmem.CostLedger.zero().add(pm_writes=2 * jnp.sum(ok),
+    ctr = pmem.CostLedger.zero().add(pm_writes=2 * jnp.sum(ok) + n_stash,
                                      ops=jnp.sum(active))
     return table, ok, ctr
 
@@ -920,6 +1145,13 @@ def _gather_candidate_keys(cfg: ContinuityConfig, table: ContinuityTable,
     return cand, cand_keys, valid, slot_ok
 
 
+def _stash_match(cfg, table: ContinuityTable, keys, pair):
+    """(B, T) bool: stash entries holding ``keys`` homed at ``pair``."""
+    home = pair.astype(U32) + U32(1)
+    return (table.stash_meta[None, :] == home[:, None]) & jnp.all(
+        table.stash_keys[None, :, :] == keys[:, None, :], axis=-1)
+
+
 def _delete_wave(cfg: ContinuityConfig, table: ContinuityTable, keys,
                  pair, parity, m):
     B = keys.shape[0]
@@ -933,24 +1165,45 @@ def _delete_wave(cfg: ContinuityConfig, table: ContinuityTable, keys,
     word = table.indicator[pair] & ~jnp.where(
         ok, U32(1) << jnp.maximum(slot, 0).astype(U32), U32(0))
     table = _commit_indicator(table, ok, pair, word)    # the ONE PM write
-    return table._replace(count=table.count - jnp.sum(ok).astype(I32)), ok
+    pm = jnp.sum(ok).astype(I32)
+    if cfg.stash_slots:
+        # stash delete (probe priority: only when the main row missed);
+        # active ops have distinct pairs, and a stash row belongs to one
+        # pair, so the scatters below are conflict-free
+        smatch = _stash_match(cfg, table, keys, pair)
+        sok = m & ~ok & jnp.any(smatch, -1)
+        sidx = jnp.argmax(smatch, -1).astype(I32)
+        drop = jnp.iinfo(I32).max
+        w = jnp.where(sok, sidx, drop)
+        pw = jnp.where(sok, pair, drop)
+        table = table._replace(
+            version=table.version.at[pw].add(U32(1), mode="drop"),
+            stash_meta=table.stash_meta.at[w].set(U32(0), mode="drop"))
+        table = table._replace(
+            fp=table.fp.at[pw, 1].add(-(U32(1) << U32(STASH_CNT_SHIFT)),
+                                      mode="drop"))
+        ok = ok | sok
+        pm = pm + 2 * jnp.sum(sok).astype(I32)
+    return table._replace(count=table.count - jnp.sum(ok).astype(I32)), ok, pm
 
 
 @functools.partial(jax.jit, static_argnums=0)
 def delete(cfg: ContinuityConfig, table: ContinuityTable, keys, mask=None):
-    """Server-side batched delete on the wave engine. 1 PM write/op."""
+    """Server-side batched delete on the wave engine. 1 PM write/op
+    (2 for stash entries)."""
     keys, _, active = _batch_arrays(keys, mask=mask)
     pair, parity, rank, num_waves = _plan_waves(cfg, keys, active)
 
     def body(c):
-        w, t, ok = c
-        t, wok = _delete_wave(cfg, t, keys, pair, parity, rank == w)
-        return w + 1, t, ok | wok
+        w, t, ok, pm = c
+        t, wok, wpm = _delete_wave(cfg, t, keys, pair, parity, rank == w)
+        return w + 1, t, ok | wok, pm + wpm
 
-    init = (jnp.zeros((), I32), table, jnp.zeros((keys.shape[0],), jnp.bool_))
-    _, table, ok = jax.lax.while_loop(lambda c: c[0] < num_waves, body, init)
-    ctr = pmem.CostLedger.zero().add(pm_writes=jnp.sum(ok),
-                                     ops=jnp.sum(active))
+    init = (jnp.zeros((), I32), table, jnp.zeros((keys.shape[0],), jnp.bool_),
+            jnp.zeros((), I32))
+    _, table, ok, pm = jax.lax.while_loop(
+        lambda c: c[0] < num_waves, body, init)
+    ctr = pmem.CostLedger.zero().add(pm_writes=pm, ops=jnp.sum(active))
     return table, ok, ctr
 
 
@@ -965,34 +1218,63 @@ def _update_wave(cfg: ContinuityConfig, table: ContinuityTable, keys, vals,
     old = jnp.take_along_axis(cand, jnp.argmax(match, -1)[:, None], 1)[:, 0]
     empty = (~valid) & slot_ok
     new = jnp.take_along_axis(cand, jnp.argmax(empty, -1)[:, None], 1)[:, 0]
-    ok = m & found & jnp.any(empty, -1)
+    has_empty = jnp.any(empty, -1)
+    if cfg.stash_slots:
+        smatch = _stash_match(cfg, table, keys, pair)
+        in_stash = ~found & jnp.any(smatch, -1)
+        sidx = jnp.argmax(smatch, -1).astype(I32)
+        found = found | in_stash
+    else:
+        in_stash = jnp.zeros((B,), jnp.bool_)
+        sidx = jnp.zeros((B,), I32)
+    ok = m & found & has_empty
+    okm = ok & ~in_stash
+    oks = ok & in_stash
     ext_idx = jnp.maximum(table.ext_map[pair], 0)
-    ok, old, new, ext_idx = _pin((ok, old, new, ext_idx))
+    ok, okm, oks, old, new, ext_idx = _pin((ok, okm, oks, old, new, ext_idx))
     table = _scatter_payload(table, ok, pair, new, ext_idx, keys, vals,
                              cfg.slots_per_pair)                    # phase 1
-    flip = (U32(1) << jnp.maximum(old, 0).astype(U32)) | \
-        (U32(1) << new.astype(U32))
+    table = _fp_store(table, ok & (new < cfg.slots_per_pair), pair, new,
+                      fingerprint(keys))
+    flip = jnp.where(okm, U32(1) << jnp.maximum(old, 0).astype(U32), U32(0)) \
+        | (U32(1) << new.astype(U32))
     word = table.indicator[pair] ^ jnp.where(ok, flip, U32(0))
-    return _commit_indicator(table, ok, pair, word), ok             # phase 2
+    table = _commit_indicator(table, ok, pair, word)                # phase 2
+    pm = 2 * jnp.sum(okm).astype(I32)
+    if cfg.stash_slots:
+        # stash relocation tail: the commit above made the main copy win by
+        # probe priority, so the meta clear only removes a shadowed entry
+        drop = jnp.iinfo(I32).max
+        w = jnp.where(oks, sidx, drop)
+        pw = jnp.where(oks, pair, drop)
+        table = table._replace(
+            stash_meta=table.stash_meta.at[w].set(U32(0), mode="drop"),
+            fp=table.fp.at[pw, 1].add(-(U32(1) << U32(STASH_CNT_SHIFT)),
+                                      mode="drop"))
+        pm = pm + 3 * jnp.sum(oks).astype(I32)
+    return table, ok, pm
 
 
 @functools.partial(jax.jit, static_argnums=0)
 def update(cfg: ContinuityConfig, table: ContinuityTable, keys, vals,
            mask=None):
     """Server-side batched out-of-place update on the wave engine.
-    2 PM writes/op; both bit-flips land in ONE atomic indicator store."""
+    2 PM writes/op; both bit-flips land in ONE atomic indicator store
+    (3 writes when the op relocates a stash entry into the main row)."""
     keys, vals, active = _batch_arrays(keys, vals, mask)
     pair, parity, rank, num_waves = _plan_waves(cfg, keys, active)
 
     def body(c):
-        w, t, ok = c
-        t, wok = _update_wave(cfg, t, keys, vals, pair, parity, rank == w)
-        return w + 1, t, ok | wok
+        w, t, ok, pm = c
+        t, wok, wpm = _update_wave(cfg, t, keys, vals, pair, parity,
+                                   rank == w)
+        return w + 1, t, ok | wok, pm + wpm
 
-    init = (jnp.zeros((), I32), table, jnp.zeros((keys.shape[0],), jnp.bool_))
-    _, table, ok = jax.lax.while_loop(lambda c: c[0] < num_waves, body, init)
-    ctr = pmem.CostLedger.zero().add(pm_writes=2 * jnp.sum(ok),
-                                     ops=jnp.sum(active))
+    init = (jnp.zeros((), I32), table, jnp.zeros((keys.shape[0],), jnp.bool_),
+            jnp.zeros((), I32))
+    _, table, ok, pm = jax.lax.while_loop(
+        lambda c: c[0] < num_waves, body, init)
+    ctr = pmem.CostLedger.zero().add(pm_writes=pm, ops=jnp.sum(active))
     return table, ok, ctr
 
 
@@ -1038,6 +1320,10 @@ def extract_items(cfg: ContinuityConfig, table: ContinuityTable):
     keys = jnp.concatenate([mkeys, ekeys], 0)
     vals = jnp.concatenate([mvals, evals], 0)
     mask = jnp.concatenate([mmask, pool_mask.reshape(PE * E)], 0)
+    if cfg.stash_slots:
+        keys = jnp.concatenate([keys, table.stash_keys], 0)
+        vals = jnp.concatenate([vals, table.stash_vals], 0)
+        mask = jnp.concatenate([mask, table.stash_meta != U32(0)], 0)
     return keys, vals, mask
 
 
@@ -1070,8 +1356,8 @@ def resize_stepwise(cfg, table, new_cfg, new_table, max_items: int):
         if not bool(mask[idx]):
             break
         k, v = keys[idx], vals[idx]
-        new_table, ok = _insert_one(new_cfg, new_table, k, v)
-        table, _ = _delete_one(cfg, table, k)
+        new_table, ok, _ = _insert_one(new_cfg, new_table, k, v)
+        table, _, _ = _delete_one(cfg, table, k)
         moved += int(ok)
     return table, new_table, moved
 
@@ -1087,8 +1373,8 @@ def recover(cfg, old_table, new_cfg, new_table):
         v = jnp.asarray(vn[i])
         res = lookup(new_cfg, new_table, k[None])
         if not bool(res.found[0]):
-            new_table, _ = _insert_one(new_cfg, new_table, k, v)
-        old_table, _ = _delete_one(cfg, old_table, k)
+            new_table, _, _ = _insert_one(new_cfg, new_table, k, v)
+        old_table, _, _ = _delete_one(cfg, old_table, k)
     return old_table, new_table
 
 
@@ -1100,3 +1386,117 @@ def items_host(cfg, table):
     for i in np.nonzero(mn)[0]:
         out[kn[i].tobytes()] = vn[i].tobytes()
     return out
+
+
+# ---------------------------------------------------------------------------
+# incremental split — online resize, one bucket-group cohort per step
+# ---------------------------------------------------------------------------
+# The intra-node port of cluster/migration.py's copy -> token-cutover ->
+# cleanup protocol.  Growing ``num_buckets`` by an even factor preserves a
+# key's bucket parity and maps every item homed at old pair p into a new
+# pair of the form p + k*P (k < factor), so ONE old pair is a closed
+# rehash cohort: copy its items into the new table (insert-if-absent, so a
+# replayed step is idempotent), flip the pair's 8-byte split token with ONE
+# atomic store — the commit point that switches routing — then delete the
+# moved items from the old table as cleanup.  Live traffic routes purely
+# by token: lookups and writes for a key go to the new table iff
+# ``token[old_pair] != 0``, so at every crash prefix the union of
+# {old items, token==0} and {new items, token==1} is exactly the original
+# item set, with zero log records (see repro.consistency.split).
+
+class SplitState(NamedTuple):
+    """In-flight incremental resize (functional, host-stepped)."""
+
+    token: jnp.ndarray      # (P_old,) uint32 — 1 = cohort cut over
+    next_pair: jnp.ndarray  # () int32 — first pair not yet moved
+
+
+def split_begin(cfg: ContinuityConfig, table: ContinuityTable,
+                factor: int = 2):
+    """Open an incremental split to a ``factor``x table.  Returns
+    ``(new_cfg, new_table, state)``; the old table is untouched."""
+    assert factor >= 2 and factor % 2 == 0, "parity-preserving factors only"
+    new_cfg = cfg.grow(factor)
+    new = create(new_cfg)
+    # seed versions strictly above the old table's max: stamps cached against
+    # the old geometry can then never compare equal to a post-split stamp
+    new = new._replace(version=jnp.full(
+        (new_cfg.num_pairs,), jnp.max(table.version) + U32(1), U32))
+    state = SplitState(token=jnp.zeros((cfg.num_pairs,), U32),
+                       next_pair=jnp.zeros((), I32))
+    return new_cfg, new, state
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def cohort_items(cfg: ContinuityConfig, table: ContinuityTable, pair):
+    """Fixed-shape candidate rows of ONE pair: (keys, vals, live) where the
+    row count S+E+T is static — so every split step jits to one program."""
+    S, E, T = cfg.slots_per_pair, cfg.ext_slots, cfg.stash_slots
+    pair = jnp.asarray(pair, I32)
+    ind = table.indicator[pair]
+    mmask = ((ind >> jnp.arange(S, dtype=U32)) & U32(1)) == 1
+    keys = table.keys[pair]
+    vals = table.vals[pair]
+    eidx = table.ext_map[pair]
+    ebits = ((ind >> (U32(S) + jnp.arange(E, dtype=U32))) & U32(1)) == 1
+    emask = ebits & (eidx >= 0)
+    safe_e = jnp.maximum(eidx, 0)
+    keys = jnp.concatenate([keys, table.ext_keys[safe_e]], 0)
+    vals = jnp.concatenate([vals, table.ext_vals[safe_e]], 0)
+    mask = jnp.concatenate([mmask, emask], 0)
+    if T:
+        smask = table.stash_meta == pair.astype(U32) + U32(1)
+        keys = jnp.concatenate([keys, table.stash_keys], 0)
+        vals = jnp.concatenate([vals, table.stash_vals], 0)
+        mask = jnp.concatenate([mask, smask], 0)
+    return keys, vals, mask
+
+
+def split_step(cfg: ContinuityConfig, table: ContinuityTable,
+               new_cfg: ContinuityConfig, new_table: ContinuityTable,
+               state: SplitState, budget: int = 1):
+    """Move up to ``budget`` cohorts (host loop; each cohort is the paper's
+    insert-to-new -> commit -> delete-from-old ordering, with the token
+    flip as the single routing commit point).  Returns
+    ``(table, new_table, state, moved)``."""
+    P = cfg.num_pairs
+    start = int(state.next_pair)
+    token = state.token
+    moved = 0
+    for p in range(start, min(start + int(budget), P)):
+        kc, vc, mc = cohort_items(cfg, table, p)
+        already = lookup(new_cfg, new_table, kc).found
+        new_table, okn, _ = insert(new_cfg, new_table, kc, vc,
+                                   mc & ~already)       # idempotent copy
+        token = token.at[p].set(U32(1))                 # atomic cutover
+        table, _, _ = delete(cfg, table, kc, mc)        # cleanup
+        moved += int(jnp.sum(mc))
+    state = SplitState(token=token,
+                       next_pair=jnp.asarray(min(start + int(budget), P), I32))
+    return table, new_table, state, moved
+
+
+def split_done(cfg: ContinuityConfig, state: SplitState) -> bool:
+    return int(state.next_pair) >= cfg.num_pairs
+
+
+def split_route(cfg: ContinuityConfig, state: SplitState, keys):
+    """(B,) bool — True where the key's cohort has cut over (route to new)."""
+    keys = jnp.asarray(keys, U32).reshape(-1, KEY_LANES)
+    pair, _ = locate(cfg, keys)
+    return state.token[pair] != U32(0)
+
+
+def split_lookup(cfg: ContinuityConfig, table: ContinuityTable,
+                 new_cfg: ContinuityConfig, new_table: ContinuityTable,
+                 state: SplitState, keys) -> LookupResult:
+    """Token-routed dual read during a split: each key consults exactly the
+    table its token names (the copy phase holds items in BOTH tables, but
+    the un-flipped token keeps the old copy authoritative until cutover)."""
+    keys = jnp.asarray(keys, U32).reshape(-1, KEY_LANES)
+    cut = split_route(cfg, state, keys)
+    r_old = lookup(cfg, table, keys)
+    r_new = lookup(new_cfg, new_table, keys)
+    pick = lambda a, b: jnp.where(
+        cut.reshape(cut.shape + (1,) * (a.ndim - 1)), b, a)
+    return LookupResult(*(pick(a, b) for a, b in zip(r_old, r_new)))

@@ -113,6 +113,12 @@ def lookup_plan(cfg: DenseConfig, t: DenseTable, keys, res: LookupResult):
     return rv.pack(keys.shape[0], [
         (rv.READ, rv.REGION_TABLE, 0, cfg.table_bytes, 0, False)])
 
+def version_read_plan(cfg: DenseConfig, t: DenseTable, keys):
+    """Verb plan pricing one stamp-validation batch: value-based stamps, so
+    a validation is a full (whole-table) lookup plan (unified
+    ``(cfg, table, keys)`` shape)."""
+    return lookup_plan(cfg, t, keys, lookup(cfg, t, keys))
+
 
 def scan_plan(cfg: DenseConfig, t: DenseTable, keys, spans):
     """Verb plan of a YCSB-E scan batch: dense storage is contiguous, so

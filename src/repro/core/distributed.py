@@ -34,7 +34,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import continuity as ch
 from repro.core import pmem
-from repro.core.continuity import (INDICATOR_BYTES, KEY_LANES, SLOT_BYTES,
+from repro.core.continuity import (FP_BYTES, INDICATOR_BYTES, KEY_LANES, SLOT_BYTES,
                                    VAL_LANES, ContinuityConfig,
                                    ContinuityTable, _commit_indicator,
                                    _gather_candidates, _scatter_payload,
@@ -83,7 +83,8 @@ def table_pspec(axes=("data",)) -> ContinuityTable:
     d = P(axes)
     return ContinuityTable(keys=d, vals=d, indicator=d, version=d,
                            ext_keys=P(), ext_vals=P(), ext_map=d,
-                           ext_count=P(), count=P())
+                           ext_count=P(), count=P(), fp=d,
+                           stash_keys=P(), stash_vals=P(), stash_meta=P())
 
 
 def sharded_count(table: ContinuityTable) -> jnp.ndarray:
@@ -196,7 +197,7 @@ def make_lookup(cfg: StoreConfig, mesh):
         # unrouted/masked rows count neither reads nor ops (the CostLedger
         # contract), and psum makes the ledger genuinely replicated (its
         # out-spec is P())
-        row_bytes = INDICATOR_BYTES + SL * SLOT_BYTES
+        row_bytes = INDICATOR_BYTES + FP_BYTES + SL * SLOT_BYTES
         plan = rv.pack(B, [(jnp.where(ok, rv.READ, rv.NOOP), rv.REGION_TABLE,
                             pair * row_bytes, row_bytes, 0, False)])
         ledger = rv.ledger_from_plan(plan)._replace(

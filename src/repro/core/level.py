@@ -172,6 +172,13 @@ def lookup_plan(cfg: LevelConfig, t: LevelTable, keys, res: LookupResult):
          off[:, j], cfg.bucket_bytes, rank[:, j], False)
         for j in range(4)])
 
+def version_read_plan(cfg: LevelConfig, t: LevelTable, keys):
+    """Verb plan pricing one stamp-validation batch.  Level hashing has no
+    per-key 8-byte commit word a client could poll — a stamp is the looked-
+    up VALUE — so validation costs the full scattered-bucket lookup plan
+    (same unified ``(cfg, table, keys)`` trio shape as every scheme)."""
+    return lookup_plan(cfg, t, keys, lookup(cfg, t, keys))
+
 
 def scan_plan(cfg: LevelConfig, t: LevelTable, keys, spans):
     """Verb plan of a YCSB-E short-scan batch: level hashing has NO

@@ -178,6 +178,12 @@ def lookup_plan(cfg: PFarmConfig, t: PFarmTable, keys, res: LookupResult):
         cur = t.onext[blk]
     return rv.pack(keys.shape[0], lanes)
 
+def version_read_plan(cfg: PFarmConfig, t: PFarmTable, keys):
+    """Verb plan pricing one stamp-validation batch.  P-FaRM-KV stamps are
+    value-based (no cheap version word), so validation costs the full
+    window-plus-chain lookup plan (unified ``(cfg, table, keys)`` shape)."""
+    return lookup_plan(cfg, t, keys, lookup(cfg, t, keys))
+
 
 def scan_plan(cfg: PFarmConfig, t: PFarmTable, keys, spans):
     """Verb plan of a YCSB-E short-scan batch: FaRM-KV's hopscotch layout

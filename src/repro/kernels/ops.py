@@ -53,26 +53,30 @@ def table_rows(table: ContinuityTable) -> jnp.ndarray:
 
 def probe_table(cfg: ContinuityConfig, table: ContinuityTable, keys,
                 *, interpret: bool = True, use_kernel: bool = True,
-                qblock: int = 8):
+                qblock: int = 8, use_fp: bool = False):
     """Probe the main segments of ``table`` for a batch of keys.
 
     ``qblock`` queries share one grid step (one VPU pass over their
-    DMA-gathered segment rows). Returns (match_slot, empty_slot, pair,
-    parity); slots are -1 on miss/full.
+    DMA-gathered segment rows). ``use_fp`` enables the fingerprint-word
+    pre-filter (same results — visible slots always carry the correct
+    field — but models the paper-style compare-reduction). Returns
+    (match_slot, empty_slot, pair, parity); slots are -1 on miss/full.
     """
-    from repro.core.continuity import locate  # local import to avoid cycle
+    from repro.core import continuity as ch  # local import to avoid cycle
     keys = jnp.asarray(keys, jnp.uint32).reshape(-1, KEY_LANES)
-    pair, parity = locate(cfg, keys)
+    pair, parity = ch.locate(cfg, keys)
     rows = table_rows(table)
     ind = table.indicator[:, None]
     prio = jnp.asarray(priority_table(cfg))
+    fps = table.fp if use_fp else None
+    qfp = ch.fingerprint(keys) if use_fp else None
     if use_kernel:
         match, empty = _probe.probe_segments(
-            rows, ind, prio, pair, parity, keys, interpret=interpret,
-            qblock=qblock)
+            rows, ind, prio, pair, parity, keys, fps, qfp,
+            interpret=interpret, qblock=qblock)
     else:
         match, empty = _probe_ref.probe_ref(rows, ind, prio, pair, parity,
-                                            keys)
+                                            keys, fps, qfp)
     return match, empty, pair, parity
 
 
@@ -83,14 +87,16 @@ def probe_lookup(cfg: ContinuityConfig, table: ContinuityTable, keys,
     probe stage; byte-identical to ``repro.core.continuity.lookup``.
 
     The kernel resolves the directional main-segment scan (one contiguous
-    row DMA per query); the rare extension-slot tail (the paper's "+1 fetch
-    iff the pair has added SBuckets and the main segment missed") is a tiny
-    jnp gather over the 12 ext candidates, exactly as the reference."""
+    row DMA per query, fingerprint pre-filter folded into the match rank);
+    the rare extension-slot tail (the paper's "+1 fetch iff the pair has
+    added SBuckets and the main segment missed") is a tiny jnp gather over
+    the 12 ext candidates, and stash-enabled geometries get the same
+    one-contiguous-fetch stash tail as the reference."""
     from repro.core import continuity as ch
     keys = jnp.asarray(keys, jnp.uint32).reshape(-1, KEY_LANES)
     match, _, pair, parity = probe_table(
         cfg, table, keys, interpret=interpret, use_kernel=use_kernel,
-        qblock=qblock)
+        qblock=qblock, use_fp=True)
     found_main = match >= 0
     safe_m = jnp.maximum(match, 0)
     vals_main = table.vals[pair, safe_m]
@@ -121,6 +127,20 @@ def probe_lookup(cfg: ContinuityConfig, table: ContinuityTable, keys,
     values = jnp.where(found_main[:, None], vals_main,
                        jnp.where(efound[:, None], evals, 0))
     reads = 1 + (has_ext & ~found_main).astype(jnp.int32)
+    if cfg.stash_slots:
+        # stash tail: one contiguous region fetch iff the pair's count byte
+        # is non-zero and both main and extension missed (mirrors ch.lookup)
+        found_me = found
+        home = pair.astype(jnp.uint32) + jnp.uint32(1)
+        smatch = (table.stash_meta[None, :] == home[:, None]) & jnp.all(
+            table.stash_keys[None, :, :] == keys[:, None, :], axis=-1)
+        sfound = jnp.any(smatch, axis=-1) & ~found
+        sfirst = jnp.argmax(smatch, axis=-1).astype(jnp.int32)
+        values = jnp.where(sfound[:, None], table.stash_vals[sfirst], values)
+        slot = jnp.where(sfound, cfg.total_bits + sfirst, slot)
+        found = found | sfound
+        reads = reads + ((ch.stash_count(table, pair) > 0)
+                         & ~found_me).astype(jnp.int32)
     return ch.LookupResult(found, values, slot, pair, reads)
 
 

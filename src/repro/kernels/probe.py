@@ -79,45 +79,113 @@ def _probe_kernel(pairs_ref, rows_ref, ind_ref, prio_ref, parity_ref, qk_ref,
     empty_ref[...] = jnp.where(jnp.min(erank, -1) < BIG, eslot, -1)[:, None]
 
 
+def _probe_kernel_fp(pairs_ref, rows_ref, ind_ref, fps_ref, prio_ref,
+                     parity_ref, qk_ref, qfp_ref, match_ref, empty_ref,
+                     seg_vmem, ind_vmem, fp_vmem, sem, *,
+                     slots: int, key_lanes: int, qblock: int):
+    """Fingerprint-filtering variant: the 8-byte fp word is indicator-
+    adjacent in the physical row, so its copy rides the SAME contiguous
+    region fetch — the match rank just gains a 2-bit field pre-filter.
+    Never drops a true match: visible slots always carry the correct field
+    (inserts/updates set the NEW slot's field before the commit)."""
+    i = pl.program_id(0)
+
+    def start(q, carry):
+        p = pairs_ref[i * qblock + q]
+        pltpu.make_async_copy(rows_ref.at[p], seg_vmem.at[q], sem).start()
+        pltpu.make_async_copy(ind_ref.at[p], ind_vmem.at[q], sem).start()
+        pltpu.make_async_copy(fps_ref.at[p], fp_vmem.at[q], sem).start()
+        return carry
+
+    def wait(q, carry):
+        p = pairs_ref[i * qblock + q]
+        pltpu.make_async_copy(rows_ref.at[p], seg_vmem.at[q], sem).wait()
+        pltpu.make_async_copy(ind_ref.at[p], ind_vmem.at[q], sem).wait()
+        pltpu.make_async_copy(fps_ref.at[p], fp_vmem.at[q], sem).wait()
+        return carry
+
+    jax.lax.fori_loop(0, qblock, start, 0)
+    jax.lax.fori_loop(0, qblock, wait, 0)
+
+    seg = seg_vmem[...].reshape(qblock, slots, key_lanes)
+    qk = qk_ref[...]                                          # (Q, KL)
+    eq = jnp.all(seg == qk[:, None, :], axis=-1)              # (Q, S)
+    iota = jax.lax.broadcasted_iota(U32, (qblock, slots), 1)
+    bits = (ind_vmem[...] >> iota) & U32(1)                   # (Q,1)>>(Q,S)
+    lane = jnp.where(iota < U32(16), fp_vmem[:, 0:1], fp_vmem[:, 1:2])
+    field = (lane >> (U32(2) * (iota % U32(16)))) & U32(3)    # (Q, S)
+    eq = eq & (field == qfp_ref[...])                         # fp pre-filter
+    pr = jnp.where(parity_ref[...] == 0,
+                   prio_ref[0][None, :], prio_ref[1][None, :])  # (Q, S)
+    cand = pr < BIG
+    mrank = jnp.where(eq & (bits == U32(1)) & cand, pr, BIG)
+    erank = jnp.where((bits == U32(0)) & cand, pr, BIG)
+    mslot = jnp.argmin(mrank, axis=-1).astype(I32)
+    eslot = jnp.argmin(erank, axis=-1).astype(I32)
+    match_ref[...] = jnp.where(jnp.min(mrank, -1) < BIG, mslot, -1)[:, None]
+    empty_ref[...] = jnp.where(jnp.min(erank, -1) < BIG, eslot, -1)[:, None]
+
+
 @functools.partial(jax.jit, static_argnames=("interpret", "qblock"))
-def probe_segments(rows, indicators, prio, pairs, parity, qkeys, *,
+def probe_segments(rows, indicators, prio, pairs, parity, qkeys,
+                   fps=None, qfp=None, *,
                    interpret: bool = True, qblock: int = 8):
     """Probe one contiguous segment row per query, ``qblock`` queries per
     grid step.
 
-    Args mirror ``probe_ref.probe_ref``. Returns (match_slot, empty_slot),
+    Args mirror ``probe_ref.probe_ref``; ``fps``/``qfp`` (both or neither)
+    enable the fingerprint pre-filter.  Returns (match_slot, empty_slot),
     each (B,) int32 with -1 for miss/full.
     """
     P, RL = rows.shape
     B, KL = qkeys.shape
     S = RL // KL
+    use_fp = fps is not None
     nb = max(1, -(-B // qblock))
     pad = nb * qblock - B
     pairs = jnp.pad(pairs.astype(I32), (0, pad))
     parity = jnp.pad(parity.astype(I32), (0, pad))[:, None]
     qkeys = jnp.pad(qkeys, ((0, pad), (0, 0)))
+    in_specs = [
+        pl.BlockSpec(memory_space=pl.ANY),         # rows stay in HBM
+        pl.BlockSpec(memory_space=pl.ANY),         # indicators stay in HBM
+    ]
+    scratch = [
+        pltpu.VMEM((qblock, RL), U32),             # per-block segment tile
+        pltpu.VMEM((qblock, 1), U32),              # per-block indicators
+    ]
+    operands = [rows, indicators]
+    if use_fp:
+        qfp = jnp.pad(qfp.astype(U32), (0, pad))[:, None]
+        in_specs.append(pl.BlockSpec(memory_space=pl.ANY))   # fp words in HBM
+        scratch.append(None)                       # placeholder, reordered below
+        operands.append(fps)
+    in_specs += [
+        pl.BlockSpec((2, S), lambda i, pairs: (0, 0)),
+        pl.BlockSpec((qblock, 1), lambda i, pairs: (i, 0)),
+        pl.BlockSpec((qblock, KL), lambda i, pairs: (i, 0)),
+    ]
+    operands += [prio, parity, qkeys]
+    if use_fp:
+        in_specs.append(pl.BlockSpec((qblock, 1), lambda i, pairs: (i, 0)))
+        operands.append(qfp)
+        scratch[2] = pltpu.VMEM((qblock, 2), U32)  # per-block fp words
+        kernel = functools.partial(_probe_kernel_fp, slots=S, key_lanes=KL,
+                                   qblock=qblock)
+    else:
+        scratch = scratch[:2]
+        kernel = functools.partial(_probe_kernel, slots=S, key_lanes=KL,
+                                   qblock=qblock)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,                     # pairs drive the row DMAs
         grid=(nb,),
-        in_specs=[
-            pl.BlockSpec(memory_space=pl.ANY),     # rows stay in HBM
-            pl.BlockSpec(memory_space=pl.ANY),     # indicators stay in HBM
-            pl.BlockSpec((2, S), lambda i, pairs: (0, 0)),
-            pl.BlockSpec((qblock, 1), lambda i, pairs: (i, 0)),
-            pl.BlockSpec((qblock, KL), lambda i, pairs: (i, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((qblock, 1), lambda i, pairs: (i, 0)),
             pl.BlockSpec((qblock, 1), lambda i, pairs: (i, 0)),
         ],
-        scratch_shapes=[
-            pltpu.VMEM((qblock, RL), U32),         # per-block segment tile
-            pltpu.VMEM((qblock, 1), U32),          # per-block indicators
-            pltpu.SemaphoreType.DMA(()),
-        ],
+        scratch_shapes=scratch + [pltpu.SemaphoreType.DMA(())],
     )
-    kernel = functools.partial(_probe_kernel, slots=S, key_lanes=KL,
-                               qblock=qblock)
     match, empty = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
@@ -126,5 +194,5 @@ def probe_segments(rows, indicators, prio, pairs, parity, qkeys, *,
             jax.ShapeDtypeStruct((nb * qblock, 1), I32),
         ],
         interpret=interpret,
-    )(pairs, rows, indicators, prio, parity, qkeys)
+    )(pairs, *operands)
     return match[:B, 0], empty[:B, 0]

@@ -5,11 +5,13 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 U32 = jnp.uint32
-BIG = jnp.int32(0x7FFFFFFF)
+BIG = 0x7FFFFFFF  # python int: safe to create at import time inside a trace
 
 
 def probe_ref(rows: jnp.ndarray, indicators: jnp.ndarray, prio: jnp.ndarray,
-              pairs: jnp.ndarray, parity: jnp.ndarray, qkeys: jnp.ndarray):
+              pairs: jnp.ndarray, parity: jnp.ndarray, qkeys: jnp.ndarray,
+              fps: jnp.ndarray | None = None,
+              qfp: jnp.ndarray | None = None):
     """Reference segment probe.
 
     Args:
@@ -19,6 +21,11 @@ def probe_ref(rows: jnp.ndarray, indicators: jnp.ndarray, prio: jnp.ndarray,
       pairs:      (B,) int32 — home pair per query
       parity:     (B,) int32
       qkeys:      (B, KL) uint32
+      fps:        optional (P, 2) uint32 fingerprint-word lanes (2-bit field
+                  per main slot); with ``qfp`` (B,) the probe pre-filters on
+                  the field before the full key compare — never drops a true
+                  match because visible slots always carry the correct field
+      qfp:        optional (B,) uint32 query fingerprints
     Returns:
       match_slot (B,) int32 (-1 = miss), empty_slot (B,) int32 (-1 = full)
     """
@@ -29,6 +36,11 @@ def probe_ref(rows: jnp.ndarray, indicators: jnp.ndarray, prio: jnp.ndarray,
     eq = jnp.all(seg == qkeys[:, None, :], axis=-1)
     ind = indicators[pairs, 0]
     bits = (ind[:, None] >> jnp.arange(S, dtype=U32)[None]) & U32(1)
+    if fps is not None:
+        s = jnp.arange(S)
+        lane = jnp.where(s[None] < 16, fps[pairs, 0:1], fps[pairs, 1:2])
+        field = (lane >> U32(2 * (s % 16))[None]) & U32(3)   # (B, S)
+        eq = eq & (field == qfp.astype(U32)[:, None])
     pr = prio[parity]                                    # (B, S)
     cand = pr < BIG
     mrank = jnp.where(eq & (bits == 1) & cand, pr, BIG)

@@ -43,8 +43,9 @@ NOOP, READ, WRITE, CAS = 0, 1, 2, 3
 VERB_NAMES = {NOOP: "noop", READ: "read", WRITE: "write", CAS: "cas"}
 
 # symbolic remote memory regions
-REGION_TABLE, REGION_EXT, REGION_LOG = 0, 1, 2
-REGION_NAMES = {REGION_TABLE: "table", REGION_EXT: "ext", REGION_LOG: "log"}
+REGION_TABLE, REGION_EXT, REGION_LOG, REGION_STASH = 0, 1, 2, 3
+REGION_NAMES = {REGION_TABLE: "table", REGION_EXT: "ext", REGION_LOG: "log",
+                REGION_STASH: "stash"}
 
 
 class VerbPlan(NamedTuple):

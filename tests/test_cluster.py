@@ -167,10 +167,11 @@ def test_replication_plan_shape_and_fences():
     assert plan.batch == 6
     verb = np.asarray(plan.verb)
     fence = np.asarray(plan.fence)
-    # every op: payload WRITE then commit WRITE in the SAME QP-ordered
-    # round, closed by the commit fence — continuity's 1-round write
-    assert (verb[:, 0] == rv.WRITE).all() and (verb[:, 1] == rv.WRITE).all()
-    assert not fence[:, 0].any() and fence[:, 1].all()
+    # every op: payload + fingerprint WRITEs then commit WRITE in the SAME
+    # QP-ordered round, closed by the ONE commit fence — continuity's
+    # 1-round write (the fp word rides the round for free)
+    assert (verb[:, :3] == rv.WRITE).all()
+    assert not fence[:, :2].any() and fence[:, 2].all()
     assert int(np.asarray(rv.round_trips(plan))) == 1
 
     # the logged baseline pays extra dependent rounds: each mid-op fence

@@ -23,7 +23,7 @@ def test_geometry_matches_paper():
     assert CFG.seg_slots == 16
     assert CFG.ext_slots == 12
     assert CFG.total_bits == 32
-    assert CFG.segment_bytes == 8 + 16 * 32
+    assert CFG.segment_bytes == 8 + 8 + 16 * 32   # indicator + fp word + slots
 
 
 def test_insert_lookup_roundtrip():
@@ -102,7 +102,7 @@ def test_crash_between_payload_and_commit_is_invisible():
     res = ch.lookup(CFG, crashed, K[5:6])
     assert not bool(res.found[0])
     # recovery = nothing to do; a fresh insert succeeds and commits
-    t2, ok2 = ch._insert_one(CFG, crashed, k, v)
+    t2, ok2, _ = ch._insert_one(CFG, crashed, k, v)
     assert bool(ok2)
     assert bool(ch.lookup(CFG, t2, K[5:6]).found[0])
 
@@ -115,8 +115,8 @@ def test_probe_direction_by_parity():
     for i in range(2000):
         k = ycsb.make_key(np.array([i]))
         pair, parity = ch.locate(CFG, jnp.asarray(k))
-        t2, ok = ch._insert_one(CFG, t, jnp.asarray(k[0]),
-                                jnp.asarray(k[0]))
+        t2, ok, _ = ch._insert_one(CFG, t, jnp.asarray(k[0]),
+                                   jnp.asarray(k[0]))
         slot = int(ch.lookup(CFG, t2, k).slot[0])
         if int(parity[0]) == 0 and not found_even:
             assert slot == 0                  # first even insert -> slot 0

@@ -1,0 +1,262 @@
+"""The incremental-resize surface: begin/step/cutover on every scheme,
+insert-during-split losslessness, the mid-split crash cell, the unified
+plan-emitting trio, and the fingerprint/stash tier's API-visible effects.
+"""
+
+import dataclasses
+import inspect
+import sys
+import warnings
+from pathlib import Path
+
+import jax
+import numpy as np
+import pytest
+
+sys.path.insert(0, str(Path(__file__).parent))
+from _propcheck import given, settings, st  # noqa: E402
+
+from repro import api  # noqa: E402
+from repro.api.types import ResizeState  # noqa: E402
+from repro.data import ycsb  # noqa: E402
+from repro.rdma.verbs import VerbPlan  # noqa: E402
+
+SCHEMES = ("continuity", "level", "pfarm", "dense")
+
+
+def _seeded(store, n, seed=3):
+    rng = np.random.RandomState(seed)
+    K = ycsb.make_key(np.arange(n))
+    V = ycsb.make_value(rng, n)
+    table, res = store.insert(store.create(), K, V)
+    okn = np.asarray(res.ok)
+    return table, K[okn], V[okn], rng
+
+
+# -- the begin/step/cutover triple ---------------------------------------
+
+@pytest.mark.parametrize("scheme", SCHEMES)
+def test_incremental_triple_preserves_members(scheme):
+    store = api.make_store(scheme, table_slots=160)
+    table, K, V, _ = _seeded(store, 40)
+    rs = store.begin_resize(table)
+    assert isinstance(rs, ResizeState) and not rs.done
+    assert rs.n_items == len(K)
+    steps = 0
+    while not rs.done:
+        rs = store.resize_step(rs, budget=1)
+        steps += 1
+        assert steps <= 10_000
+    new_store, new_table = store.resize_cutover(rs)
+    assert new_store.total_slots() > store.total_slots()
+    res = new_store.lookup(new_table, K)
+    assert np.asarray(res.ok).all()
+    assert (np.asarray(res.values) == V).all()
+
+
+@pytest.mark.parametrize("scheme", SCHEMES)
+def test_deprecated_resize_shim_warns_and_matches(scheme):
+    store = api.make_store(scheme, table_slots=160)
+    table, K, V, _ = _seeded(store, 40)
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        new_store, new_table = store.resize(table)
+    assert any(issubclass(w.category, DeprecationWarning) for w in caught)
+    res = new_store.lookup(new_table, K)
+    assert np.asarray(res.ok).all()
+    assert (np.asarray(res.values) == V).all()
+
+
+def test_continuity_split_is_actually_incremental():
+    """budget=1 advances exactly one cohort: the old table drains pair by
+    pair, and dual-read serves the full item set at EVERY intermediate."""
+    store = api.make_store("continuity", table_slots=160)
+    table, K, V, _ = _seeded(store, 40)
+    cohorts = store.cfg.num_pairs
+    rs = store.begin_resize(table)
+    for step in range(cohorts):
+        assert not rs.done
+        rs = store.resize_step(rs, budget=1)
+        res = store.resize_lookup(rs, K)
+        assert np.asarray(res.ok).all(), f"lost keys after cohort {step}"
+        assert (np.asarray(res.values) == V).all()
+    assert rs.done and rs.moved == len(K)
+    assert int(rs.table.count) == 0          # the source drained
+    new_store, new_table = store.resize_cutover(rs)
+    assert np.asarray(new_store.lookup(new_table, K).ok).all()
+
+
+# -- writes during the split window --------------------------------------
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10_000))
+def test_write_during_split_never_loses_or_duplicates(seed):
+    """Interleave foreground writes with cohort moves: after cutover the
+    grown table holds EXACTLY the oracle — no lost ack, no phantom, no
+    key present twice (the matrix-gated invariant, driven through the
+    public maintenance API)."""
+    rng = np.random.RandomState(seed)
+    store = api.make_store("continuity", table_slots=240)
+    n0 = 100
+    K = ycsb.make_key(np.arange(n0))
+    V = ycsb.make_value(rng, n0)
+    table, res = store.insert(store.create(), K, V)
+    okn = np.asarray(res.ok)
+    oracle = {int(i): v for i, v, o in zip(np.arange(n0), V, okn) if o}
+    rs = store.begin_resize(table)
+    next_new = 1000
+    while not rs.done:
+        op = ("insert", "update", "delete")[rng.randint(3)]
+        if op == "insert" or not oracle:
+            op, kid = "insert", next_new
+            next_new += 1
+        else:
+            kid = sorted(oracle)[rng.randint(len(oracle))]
+        k = ycsb.make_key(np.array([kid]))
+        v = ycsb.make_value(rng, 1)
+        rs, r = store.resize_write(rs, op, k,
+                                   None if op == "delete" else v)
+        if bool(np.asarray(r.ok)[0]):
+            if op == "delete":
+                oracle.pop(kid, None)
+            else:
+                oracle[kid] = v[0]
+        rs = store.resize_step(rs, budget=1)
+        if oracle:       # dual-read spot check mid-split
+            probe = sorted(oracle)[rng.randint(len(oracle))]
+            lr = store.resize_lookup(rs, ycsb.make_key(np.array([probe])))
+            assert bool(np.asarray(lr.ok)[0])
+            assert (np.asarray(lr.values)[0] == oracle[probe]).all()
+    new_store, new_table = store.resize_cutover(rs)
+    if oracle:
+        ids = np.array(sorted(oracle))
+        lr = new_store.lookup(new_table, ycsb.make_key(ids))
+        assert np.asarray(lr.ok).all(), "acked key lost across the split"
+        want = np.stack([oracle[int(i)] for i in ids])
+        assert (np.asarray(lr.values) == want).all()
+    k2, _, live = new_store._extract(new_table)
+    kl = np.asarray(k2, np.uint32)[np.asarray(live)]
+    kb = [bytes(k.tobytes()) for k in kl]
+    assert len(kb) == len(set(kb)), "duplicate key after cutover"
+    assert len(kb) == len(oracle), "phantom keys after cutover"
+
+
+def test_mid_split_crash_cell_green():
+    from repro.consistency.matrix import run_resize_cell
+    row = run_resize_cell("continuity")
+    assert row["ok"]
+    assert row["consistent"] and row["log_free"]
+    assert row["violations"] == 0
+    assert row["crash_points"] > 0 and row["torn_points"] > 0
+
+
+# -- cluster maintenance loop --------------------------------------------
+
+def test_cluster_maintenance_grows_shard_under_load():
+    from repro.cluster.sim import run_cluster
+    cell = run_cluster("continuity", "D", nodes=3, replicas=2,
+                       num_records=400, num_ops=2400, batch=200,
+                       node_slots=288, seed=3, resize_budget=4)
+    assert cell["committed_lost"] == 0
+    mnt = cell["maintenance"]
+    assert mnt["resizes_begun"] >= 1, "no shard ever crossed the trigger"
+    assert mnt["cutovers"] >= 1
+    assert mnt["steps"] > mnt["cutovers"], \
+        "splits completed in one step — not incremental"
+
+
+# -- the unified plan-emitting trio --------------------------------------
+
+@pytest.mark.parametrize("scheme", SCHEMES)
+def test_plan_trio_unified_signature(scheme):
+    """Every scheme module emits its three verb plans through ONE shape:
+    ``fn(cfg, table, keys, ...) -> VerbPlan`` with batch == B."""
+    store = api.make_store(scheme, table_slots=160)
+    table, K, _, _ = _seeded(store, 24)
+    mod = store._mod
+    B = K.shape[0]
+    for name in ("lookup_plan", "version_read_plan", "scan_plan"):
+        fn = getattr(mod, name)
+        params = list(inspect.signature(fn).parameters)
+        assert len(params) >= 3, (scheme, name)
+    plans = [
+        mod.lookup_plan(store.cfg, table, K, mod.lookup(store.cfg, table, K)),
+        mod.version_read_plan(store.cfg, table, K),
+        mod.scan_plan(store.cfg, table, K, np.ones((B,), np.int64)),
+    ]
+    for name, plan in zip(("lookup", "version_read", "scan"), plans):
+        assert isinstance(plan, VerbPlan), (scheme, name)
+        assert plan.batch == B, (scheme, name)
+    # and the store adapters surface the same trio uniformly
+    assert isinstance(store.version_read_plan(table, K), VerbPlan)
+    assert isinstance(store.scan_plan(table, K, np.ones((B,), np.int64)),
+                      VerbPlan)
+
+
+# -- fingerprint/stash tier at the API boundary --------------------------
+
+def test_stash_free_config_plan_bytes_unchanged():
+    """stash_frac=0 (the core default) keeps the pre-stash wire contract:
+    a (B, 2) plan — main segment + conditional ext lane — bit for bit."""
+    import repro.core.continuity as ch
+    cfg = ch.ContinuityConfig(num_buckets=16)
+    assert cfg.stash_frac == 0.0 and cfg.stash_slots == 0
+    rng = np.random.RandomState(0)
+    K = ycsb.make_key(np.arange(32))
+    out = ch.insert(cfg, ch.create(cfg), K, ycsb.make_value(rng, 32))
+    table = out[0]
+    res = ch.lookup(cfg, table, K)
+    plan = ch.lookup_plan(cfg, table, K, res)
+    assert plan.verb.shape == (32, 2)
+
+
+def test_api_store_carries_stash_tier():
+    store = api.make_store("continuity", table_slots=160)
+    assert store.cfg.stash_slots > 0        # from_slots defaults 1/8
+    table, K, V, _ = _seeded(store, 40)
+    res = store.lookup(table, K)
+    assert np.asarray(res.ok).all()
+    # the stash lane rides in the SAME plan as a third conditional lane
+    assert res.plan.verb.shape[1] == 3
+
+
+def test_wave_serial_identical_with_stash_engaged():
+    """Overfill a tiny table so inserts spill into the stash tier; the
+    wave and serial engines must still produce bit-identical state."""
+    tables = {}
+    for engine in ("serial", "wave"):
+        store = api.make_store(
+            "continuity", table_slots=64,
+            policy=api.ExecPolicy(engine=engine))
+        rng = np.random.RandomState(9)
+        K = ycsb.make_key(np.arange(90))
+        V = ycsb.make_value(rng, 90)
+        table, res = store.insert(store.create(), K, V)
+        tables[engine] = (table, np.asarray(res.ok))
+    t_s, ok_s = tables["serial"]
+    t_w, ok_w = tables["wave"]
+    assert (ok_s == ok_w).all()
+    assert int((np.asarray(t_s.stash_meta) != 0).sum()) > 0, \
+        "test did not actually engage the stash tier"
+    for ls, lw in zip(jax.tree.leaves(t_s), jax.tree.leaves(t_w)):
+        assert (np.asarray(ls) == np.asarray(lw)).all()
+
+
+def test_load_factor_first_trigger_past_085():
+    """The tentpole's capacity claim: with fingerprints + stash the first
+    insert failure lands past 0.85 load factor (the paper's band), vs the
+    ~0.70 floor of the plain layout."""
+    store = api.make_store("continuity", table_slots=256)
+    table = store.create()
+    rng = np.random.RandomState(4)
+    step = 16
+    first_reject_lf = None
+    for lo in range(0, 2048, step):
+        K = ycsb.make_key(np.arange(lo, lo + step))
+        V = ycsb.make_value(rng, step)
+        table, res = store.insert(table, K, V)
+        if not np.asarray(res.ok).all():
+            first_reject_lf = float(store.load_factor(table))
+            break
+    assert first_reject_lf is not None, "table never filled"
+    assert first_reject_lf >= 0.85, first_reject_lf
