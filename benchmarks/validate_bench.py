@@ -68,6 +68,11 @@ import sys
 OPS = ("insert", "update", "delete")
 PATHS = ("serial", "wave")
 
+# hard ordering band on the sweep: the wave engine must be at least as
+# fast as the serial oracle on EVERY op x batch cell (the fused
+# update/delete passes killed the last losing cells — keep them dead)
+WAVE_MIN_SPEEDUP = 1.0
+
 # scheme -> {op: (lo, hi)} inclusive acceptance band (paper Table I; level
 # insert/update have path-dependent ranges, dense is the repo's reference)
 TABLE1_BANDS = {
@@ -497,6 +502,14 @@ def validate(payload: dict) -> None:
         if not isinstance(v, (int, float)) or isinstance(v, bool) or v <= 0:
             _fail(f"wave_over_serial_speedup.{k}",
                   f"expected positive number, got {v!r}")
+        # the ordering band (ISSUE 9): with the fused single-pass
+        # update/delete there is no op x batch cell left where the wave
+        # engine loses to the serial scan — wave >= serial EVERYWHERE
+        if v < WAVE_MIN_SPEEDUP:
+            _fail(f"wave_over_serial_speedup.{k}",
+                  f"wave engine slower than serial ({v:.3f}x < "
+                  f"{WAVE_MIN_SPEEDUP}) — the fused mutation band requires "
+                  f"wave >= serial on every op x batch cell")
 
 
 def main(argv=None) -> int:

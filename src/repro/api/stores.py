@@ -145,13 +145,17 @@ class _ModuleStore:
     # wholesale at the new size); continuity overrides the triple with a
     # real cohort-at-a-time split.
 
-    def begin_resize(self, table, factor: int = 2) -> ResizeState:
+    def begin_resize(self, table, factor: int = 2,
+                     step_slo_us: Optional[float] = None) -> ResizeState:
+        # the baselines can't increment (their first step moves everything),
+        # so a stall SLO is unsatisfiable — accepted for protocol uniformity
         new = dataclasses.replace(self, cfg=self.cfg.grow(factor))
         return ResizeState(store=self, new_store=new, table=table,
                            new_table=new.create(), factor=factor,
                            n_items=int(table.count))
 
-    def resize_step(self, state: ResizeState, budget: int = 1) -> ResizeState:
+    def resize_step(self, state: ResizeState,
+                    budget: Optional[int] = None) -> ResizeState:
         if state.done:
             return state
         keys, vals, live = self._extract(state.table)
@@ -259,7 +263,10 @@ class ContinuityStore(_ModuleStore):
     engine; ``serial`` -> the byte-identical ``lax.scan`` reference.
     ``policy.probe``: ``gather`` -> pure-jnp lookup; ``pallas`` /
     ``reference`` -> the Pallas segment-probe kernel / its jnp oracle
-    (`repro.kernels.ops.probe_lookup`)."""
+    (`repro.kernels.ops.probe_lookup`), fingerprint pre-filter per
+    ``policy.use_fp`` (default on).  ``policy.mutate`` picks the match
+    backend of the fused update/delete the same way (the Pallas
+    mutation-plan kernel / its oracle / the jnp gather)."""
 
     cfg: ch.ContinuityConfig = ch.ContinuityConfig(num_buckets=256)
     name: ClassVar[str] = "continuity"
@@ -272,10 +279,18 @@ class ContinuityStore(_ModuleStore):
         return ch.insert_serial if self.policy.engine == "serial" else ch.insert
 
     def _update_fn(self):
-        return ch.update_serial if self.policy.engine == "serial" else ch.update
+        if self.policy.engine == "serial":
+            return ch.update_serial
+        return functools.partial(ch.update, probe=self.policy.mutate,
+                                 qblock=self.policy.qblock,
+                                 interpret=self.policy.interpret)
 
     def _delete_fn(self):
-        return ch.delete_serial if self.policy.engine == "serial" else ch.delete
+        if self.policy.engine == "serial":
+            return ch.delete_serial
+        return functools.partial(ch.delete, probe=self.policy.mutate,
+                                 qblock=self.policy.qblock,
+                                 interpret=self.policy.interpret)
 
     def _lookup_res(self, table, keys):
         if self.policy.probe == "gather":
@@ -284,7 +299,8 @@ class ContinuityStore(_ModuleStore):
         return K.probe_lookup(
             self.cfg, table, keys,
             use_kernel=self.policy.probe == "pallas",
-            interpret=self.policy.interpret, qblock=self.policy.qblock)
+            interpret=self.policy.interpret, qblock=self.policy.qblock,
+            use_fp=self.policy.use_fp)
 
     def _extract(self, table):
         return ch.extract_items(self.cfg, table)
@@ -295,18 +311,33 @@ class ContinuityStore(_ModuleStore):
         # the counter half (see ch.version_stamp)
         return ch.version_stamp(self.cfg, table, keys)
 
-    def begin_resize(self, table, factor: int = 2) -> ResizeState:
+    def begin_resize(self, table, factor: int = 2,
+                     step_slo_us: Optional[float] = None) -> ResizeState:
         # the paper's log-free resize as an ONLINE split: per-pair cutover
         # tokens route traffic while cohorts move one at a time
         new_cfg, new_table, split = ch.split_begin(self.cfg, table, factor)
+        step_budget = None
+        if step_slo_us is not None:
+            # SLO controller: cohorts per step = how many single-cohort
+            # moves fit in the stall budget under the calibrated LinkModel
+            # (each move reads one source row and writes its items + words
+            # + the cutover token); always >= 1 so the split progresses
+            from repro.rdma.transport import LinkModel
+            per = LinkModel().cohort_move_us(
+                read_bytes=float(self.cfg.row_bytes),
+                write_bytes=float(self.cfg.row_bytes + 16))
+            step_budget = max(1, int(step_slo_us / per))
         return ResizeState(
             store=self, new_store=dataclasses.replace(self, cfg=new_cfg),
             table=table, new_table=new_table, factor=factor, opaque=split,
-            n_items=int(table.count))
+            n_items=int(table.count), step_budget=step_budget)
 
-    def resize_step(self, state: ResizeState, budget: int = 1) -> ResizeState:
+    def resize_step(self, state: ResizeState,
+                    budget: Optional[int] = None) -> ResizeState:
         if state.done:
             return state
+        if budget is None:
+            budget = state.step_budget or 1
         table, new_table, split, moved = ch.split_step(
             self.cfg, state.table, state.new_store.cfg, state.new_table,
             state.opaque, budget)

@@ -50,6 +50,7 @@ from repro.core.pmem import CostLedger
 
 ENGINES = ("wave", "serial")
 PROBES = ("gather", "pallas", "reference")
+MUTATES = ("gather", "pallas", "reference")
 TRANSPORTS = ("none", "sim")
 
 
@@ -66,7 +67,15 @@ class ExecPolicy:
     * ``probe`` — client-side read strategy for schemes with a kernel:
       ``"gather"`` (pure-jnp vector gather), ``"pallas"`` (the Pallas
       segment-probe kernel), ``"reference"`` (the kernel's jnp oracle).
-    * ``qblock`` — queries per Pallas grid step (probe kernel only).
+    * ``mutate`` — match backend of the fused wave-engine update/delete
+      (continuity only): same three values, selecting the mutation-plan
+      kernel (``kernels/mutate.py``) / its jnp oracle / the vector
+      gather.  Ignored by the serial engine and kernel-less schemes.
+    * ``use_fp`` — fingerprint pre-filter in the probe path (default ON:
+      result-identical — visible slots always carry the correct 2-bit
+      field — and cuts negative-search key compares, paper Figs 7/14).
+      The mutation plan always filters regardless of this knob.
+    * ``qblock`` — queries per Pallas grid step (probe/mutate kernels).
     * ``interpret`` — run Pallas kernels in interpreter mode (True on CPU
       containers; set False on real TPU hardware).
     * ``transport`` — which transport host-side drivers attach to the verb
@@ -80,6 +89,8 @@ class ExecPolicy:
 
     engine: str = "wave"
     probe: str = "gather"
+    mutate: str = "gather"
+    use_fp: bool = True
     qblock: int = 8
     interpret: bool = True
     transport: str = "none"
@@ -87,6 +98,7 @@ class ExecPolicy:
     def __post_init__(self):
         assert self.engine in ENGINES, self.engine
         assert self.probe in PROBES, self.probe
+        assert self.mutate in MUTATES, self.mutate
         assert self.qblock >= 1
         assert self.transport in TRANSPORTS, self.transport
 
@@ -120,9 +132,12 @@ class ResizeState:
     scheme's private cursor (continuity: its per-pair cutover-token split
     state); ``done`` flips when every cohort has moved; ``moved`` counts
     relocated items and ``n_items`` records the live count at begin (the
-    cutover loss check).  The handle is immutable — each step returns a new
-    one — so a crash between steps simply resumes from the last handle (or
-    from recovery's token scan)."""
+    cutover loss check).  ``step_budget`` is the per-step cohort count the
+    SLO controller chose at begin (``begin_resize(step_slo_us=...)`` sizes
+    it from the `LinkModel` so one step's foreground stall stays under the
+    target; None means the caller passes an explicit budget).  The handle
+    is immutable — each step returns a new one — so a crash between steps
+    simply resumes from the last handle (or from recovery's token scan)."""
 
     store: "HashStore"
     new_store: "HashStore"
@@ -133,6 +148,7 @@ class ResizeState:
     done: bool = False
     n_items: int = 0
     moved: int = 0
+    step_budget: Optional[int] = None
 
 
 @runtime_checkable
@@ -158,9 +174,11 @@ class HashStore(Protocol):
     # bounded number of cohorts at a time (foreground traffic keeps
     # flowing between steps), then cut over.  ``resize`` is the deprecated
     # one-shot shim over the triple.
-    def begin_resize(self, table: Any, factor: int = 2) -> ResizeState: ...
+    def begin_resize(self, table: Any, factor: int = 2,
+                     step_slo_us: Optional[float] = None) -> ResizeState: ...
 
-    def resize_step(self, state: ResizeState, budget: int = 1) -> ResizeState: ...
+    def resize_step(self, state: ResizeState,
+                    budget: Optional[int] = None) -> ResizeState: ...
 
     def resize_cutover(self, state: ResizeState) -> Tuple["HashStore", Any]: ...
 

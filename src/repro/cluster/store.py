@@ -625,8 +625,9 @@ class ClusterStore:
         return ClusterReadResult(values, found, lat, round_us)
 
     # -- background maintenance: incremental per-shard resize ---------------
-    def maintenance_step(self, budget: int = 1, trigger_lf: float = 0.85,
-                         factor: int = 2) -> List[dict]:
+    def maintenance_step(self, budget: Optional[int] = 1,
+                         trigger_lf: float = 0.85, factor: int = 2,
+                         step_slo_us: Optional[float] = None) -> List[dict]:
         """One maintenance round, called between foreground batches: any
         serving shard past ``trigger_lf`` begins an incremental resize;
         shards mid-split advance ``budget`` cohorts and cut over when
@@ -635,7 +636,10 @@ class ClusterStore:
         — so growth never stops the world.  Schemes without mid-split
         routing (the baselines' one-shot ``resize_step``) are driven to
         cutover inside the round: the stop-the-world stall the resize
-        bench prices.  Returns one action dict per shard touched."""
+        bench prices.  ``step_slo_us`` hands sizing to the per-step stall
+        SLO controller instead of a fixed cohort count: ``begin_resize``
+        derives the budget from the `LinkModel` and ``budget=None`` lets
+        each step consume it.  Returns one action dict per shard touched."""
         actions: List[dict] = []
         for node in self._nodes.values():
             if not self._serving(node):
@@ -644,7 +648,11 @@ class ClusterStore:
                 lf = float(node.store.load_factor(node.table))
                 if lf <= trigger_lf:
                     continue
-                rs = node.store.begin_resize(node.table, factor)
+                try:
+                    rs = node.store.begin_resize(node.table, factor,
+                                                 step_slo_us=step_slo_us)
+                except TypeError:   # external store without the SLO kwarg
+                    rs = node.store.begin_resize(node.table, factor)
                 self.maintenance["resizes_begun"] += 1
                 if not hasattr(node.store, "resize_write"):
                     node.store, node.table = node.store.resize_cutover(rs)
@@ -660,7 +668,9 @@ class ClusterStore:
                 rs = node.store.resize_step(node.resize, budget)
                 node.table = rs.table
                 self.maintenance["steps"] += 1
-                self.maintenance["cohorts_moved"] += budget
+                self.maintenance["cohorts_moved"] += (
+                    budget if budget is not None
+                    else (node.resize.step_budget or 1))
                 if rs.done:
                     node.store, node.table = node.store.resize_cutover(rs)
                     node.resize = None

@@ -695,9 +695,20 @@ def update_serial(cfg: ContinuityConfig, table: ContinuityTable, keys, vals,
 #     same middle SBucket slots — is detected exactly (see
 #     ``_insert_fused``) and resolved by a residual wave ``while_loop``.
 #   * ``update`` / ``delete``: occupancy mutates non-monotonically (bits
-#     clear, items relocate), so the waves execute sequentially in a
-#     ``while_loop`` whose trip count is max_collisions_per_pair — 1 for
-#     the all-distinct batches of the serving page table.
+#     clear, items relocate), but with distinct keys every op's MATCH slot
+#     is fixed by the pre-batch table — a slot's bit is only cleared by its
+#     own unique matcher — so both ops also run FUSED from one pre-state
+#     match pass.  ``delete`` needs no sequencing at all (clear masks of
+#     distinct slots compose by OR); ``update``'s new-slot choices evolve
+#     with the pair word, so a tiny rank loop over a (P,) word COPY
+#     replays the allocation order — O(B) vector work per trip, none of
+#     the table-wide gathers/scatters the old per-wave loop paid.  The one
+#     genuine serialization point is a duplicate target (two ops resolving
+#     to the SAME slot/stash row, i.e. the same key twice in a batch):
+#     those run the exact residual wave ``while_loop``, whose trip count
+#     is bounded by the contended cohorts alone — a hot pair no longer
+#     serializes the full batch width (the old loop ran every cohort
+#     ``max_collisions_per_pair`` heavy waves).
 
 def _stable_order(cls: jnp.ndarray, num_class: int):
     """Stable ascending order of small int class ids.
@@ -1152,6 +1163,17 @@ def _stash_match(cfg, table: ContinuityTable, keys, pair):
         table.stash_keys[None, :, :] == keys[:, None, :], axis=-1)
 
 
+def _stash_match_gated(cfg, table: ContinuityTable, keys, pair):
+    """`_stash_match`, skipped entirely (all-False) while no pair has a
+    live stash entry — one count-byte reduction gates the (B, T) full-key
+    compare the common stash-empty batch would otherwise pay."""
+    B = keys.shape[0]
+    return jax.lax.cond(
+        jnp.any((table.fp[:, 1] >> U32(STASH_CNT_SHIFT)) != U32(0)),
+        lambda _: _stash_match(cfg, table, keys, pair),
+        lambda _: jnp.zeros((B, cfg.stash_slots), jnp.bool_), 0)
+
+
 def _delete_wave(cfg: ContinuityConfig, table: ContinuityTable, keys,
                  pair, parity, m):
     B = keys.shape[0]
@@ -1187,22 +1209,163 @@ def _delete_wave(cfg: ContinuityConfig, table: ContinuityTable, keys,
     return table._replace(count=table.count - jnp.sum(ok).astype(I32)), ok, pm
 
 
-@functools.partial(jax.jit, static_argnums=0)
-def delete(cfg: ContinuityConfig, table: ContinuityTable, keys, mask=None):
+def _mutation_match(cfg: ContinuityConfig, table: ContinuityTable, keys,
+                    pair, parity, *, probe="gather", qblock=8,
+                    interpret=True):
+    """Pre-batch match resolution shared by the fused update/delete passes.
+
+    Returns ``(found, mslot)``: the first main/extension slot (pair
+    coordinates, probe order) holding each key, -1 on miss.  ``probe``
+    selects the backend: ``"gather"`` is the pure-jnp candidate gather;
+    ``"pallas"``/``"reference"`` run the mutation-plan kernel
+    (`repro.kernels.mutate`) / its jnp oracle over the main segment (with
+    the fingerprint pre-filter) plus the same jnp extension tail the
+    kernel lookup path uses.  All backends are result-identical — visible
+    slots always carry correct fingerprint fields."""
+    B = keys.shape[0]
+    if probe == "gather":
+        no = jnp.zeros((B,), jnp.bool_)
+        cand, ckeys, valid, _ = _gather_candidate_keys(
+            cfg, table, pair, parity, ext_allowed=no)
+        match = valid & jnp.all(ckeys == keys[:, None, :], axis=-1)
+        found = jnp.any(match, -1)
+        mslot = jnp.where(found, jnp.take_along_axis(
+            cand, jnp.argmax(match, -1)[:, None], 1)[:, 0], -1)
+        return found, mslot
+    from repro.kernels import ops as K        # deferred: pallas import
+    mmain, _, _ = K.mutation_plan(cfg, table, keys,
+                                  use_kernel=probe == "pallas",
+                                  interpret=interpret, qblock=qblock)
+    found_m = mmain >= 0
+    S, E = cfg.slots_per_pair, cfg.ext_slots
+    if E:
+        eidx = table.ext_map[pair]
+        has_ext = eidx >= 0
+        ebits = (table.indicator[pair][:, None]
+                 >> (S + jnp.arange(E, dtype=U32))[None]) & U32(1)
+        ekeys = table.ext_keys[jnp.maximum(eidx, 0)]
+        ematch = has_ext[:, None] & (ebits == 1) & jnp.all(
+            ekeys == keys[:, None, :], axis=-1)
+        efound = jnp.any(ematch, -1)
+        eslot = S + jnp.argmax(ematch, -1).astype(I32)
+    else:
+        efound = jnp.zeros((B,), jnp.bool_)
+        eslot = jnp.zeros((B,), I32)
+    found = found_m | efound
+    return found, jnp.where(found_m, mmain, jnp.where(efound, eslot, -1))
+
+
+def _dup_targets(cfg: ContinuityConfig, pair, cm, mslot, cs, sidx):
+    """Per-op flag: does another active op resolve to the SAME target (main
+    or extension slot, or stash row)?
+
+    A slot holds one key and pre-state probes of equal keys are identical,
+    so duplicate targets <=> duplicate keys in the batch — the one case
+    where update/delete waves genuinely interact.  One scatter-count over
+    a flat (P * total_bits + stash) location space."""
+    P, TB, T = cfg.num_pairs, cfg.total_bits, cfg.stash_slots
+    drop = jnp.iinfo(I32).max
+    loc = jnp.where(cm, pair * TB + jnp.maximum(mslot, 0),
+                    jnp.where(cs, P * TB + sidx, drop))
+    hit = cm | cs
+    cnt = jnp.zeros((P * TB + max(T, 1),), I32).at[loc].add(1, mode="drop")
+    return hit & (cnt[jnp.where(hit, loc, 0)] > 1)
+
+
+def _delete_fused(cfg: ContinuityConfig, table: ContinuityTable, keys,
+                  active, *, probe, qblock, interpret):
+    """All delete waves fused into one pass.
+
+    With distinct keys, each op's match slot comes from the PRE-batch table
+    (a slot's bit is only ever cleared by its own unique matcher), cleared
+    bits of one pair are disjoint (they OR-compose in any order), and
+    version bumps are order-independent per-pair sums — so the whole batch
+    commits in one scatter round.  Ops with duplicate targets (same key
+    twice) are flagged ``unsafe`` and left untouched for the residual wave
+    loop.  Returns ``(table, ok, pm, unsafe)``."""
+    B = keys.shape[0]
+    P = cfg.num_pairs
+    drop = jnp.iinfo(I32).max
+    pair, parity = locate(cfg, keys)
+    found, mslot = _mutation_match(cfg, table, keys, pair, parity,
+                                   probe=probe, qblock=qblock,
+                                   interpret=interpret)
+    cm = active & found
+    if cfg.stash_slots:
+        smatch = _stash_match_gated(cfg, table, keys, pair)
+        cs = active & ~found & jnp.any(smatch, -1)
+        sidx = jnp.argmax(smatch, -1).astype(I32)
+    else:
+        cs = jnp.zeros((B,), jnp.bool_)
+        sidx = jnp.zeros((B,), I32)
+    unsafe = _dup_targets(cfg, pair, cm, mslot, cs, sidx)
+    okm = cm & ~unsafe
+    oks = cs & ~unsafe
+    okm, oks, mslot, sidx, pair = _pin((okm, oks, mslot, sidx, pair))
+
+    # phase 2 only — a delete's ONE counted PM write is the indicator
+    # commit; committed ops clear pairwise-distinct bits, so a scatter-add
+    # composes them exactly like the serial per-op stores.  ONE flat
+    # scatter carries both halves of the 8-byte word (bit clears in [0,P),
+    # version bumps in [P,2P)) — scatter dispatch is most of this pass's
+    # cost on CPU, so the fewer the better
+    idx = jnp.concatenate([jnp.where(okm, pair, drop),
+                           jnp.where(okm | oks, pair + P, drop)])
+    upd = jnp.concatenate([U32(1) << jnp.maximum(mslot, 0).astype(U32),
+                           jnp.ones((B,), U32)])
+    buf = jnp.zeros((2 * P,), U32).at[idx].add(upd, mode="drop")
+    table = table._replace(indicator=table.indicator & ~buf[:P],
+                           version=table.version + buf[P:])
+    pm = jnp.sum(okm).astype(I32)
+    if cfg.stash_slots:
+        # stash tail gated on an actual stash hit: the common all-main
+        # batch skips both scatters
+        def stash_tail(sm_fp):
+            sm, fp = sm_fp
+            w = jnp.where(oks, sidx, drop)
+            pw = jnp.where(oks, pair, drop)
+            return (sm.at[w].set(U32(0), mode="drop"),
+                    fp.at[pw, 1].add(-(U32(1) << U32(STASH_CNT_SHIFT)),
+                                     mode="drop"))
+        sm, fp = jax.lax.cond(jnp.any(oks), stash_tail, lambda x: x,
+                              (table.stash_meta, table.fp))
+        table = table._replace(stash_meta=sm, fp=fp)
+        pm = pm + 2 * jnp.sum(oks).astype(I32)
+    ok = okm | oks
+    table = table._replace(count=table.count - jnp.sum(ok).astype(I32))
+    return table, ok, pm, unsafe
+
+
+@functools.partial(jax.jit, static_argnums=0,
+                   static_argnames=("probe", "qblock", "interpret"))
+def delete(cfg: ContinuityConfig, table: ContinuityTable, keys, mask=None,
+           *, probe: str = "gather", qblock: int = 8,
+           interpret: bool = True):
     """Server-side batched delete on the wave engine. 1 PM write/op
-    (2 for stash entries)."""
+    (2 for stash entries).
+
+    One fused pass commits the whole batch; only duplicate-target cohorts
+    (the same key deleted twice in one batch) fall back to the exact
+    residual wave loop, whose trip count is bounded by those cohorts alone.
+    ``probe`` selects the match backend (see `_mutation_match`)."""
     keys, _, active = _batch_arrays(keys, mask=mask)
-    pair, parity, rank, num_waves = _plan_waves(cfg, keys, active)
+    table, ok, pm, unsafe = _delete_fused(cfg, table, keys, active,
+                                          probe=probe, qblock=qblock,
+                                          interpret=interpret)
+
+    # residual wave loop: ranks are planned over the UNSAFE ops alone, so
+    # the trip count is bounded by the contended cohorts (zero trips — the
+    # loop body never executes — for the common duplicate-free batch)
+    pair, parity, rank, num_waves = _plan_waves(cfg, keys, unsafe)
 
     def body(c):
-        w, t, ok, pm = c
+        w, t, okw, pmw = c
         t, wok, wpm = _delete_wave(cfg, t, keys, pair, parity, rank == w)
-        return w + 1, t, ok | wok, pm + wpm
+        return w + 1, t, okw | wok, pmw + wpm
 
-    init = (jnp.zeros((), I32), table, jnp.zeros((keys.shape[0],), jnp.bool_),
-            jnp.zeros((), I32))
     _, table, ok, pm = jax.lax.while_loop(
-        lambda c: c[0] < num_waves, body, init)
+        lambda c: c[0] < num_waves, body,
+        (jnp.zeros((), I32), table, ok, pm))
     ctr = pmem.CostLedger.zero().add(pm_writes=pm, ops=jnp.sum(active))
     return table, ok, ctr
 
@@ -1255,25 +1418,188 @@ def _update_wave(cfg: ContinuityConfig, table: ContinuityTable, keys, vals,
     return table, ok, pm
 
 
-@functools.partial(jax.jit, static_argnums=0)
-def update(cfg: ContinuityConfig, table: ContinuityTable, keys, vals,
-           mask=None):
-    """Server-side batched out-of-place update on the wave engine.
-    2 PM writes/op; both bit-flips land in ONE atomic indicator store
-    (3 writes when the op relocates a stash entry into the main row)."""
-    keys, vals, active = _batch_arrays(keys, vals, mask)
-    pair, parity, rank, num_waves = _plan_waves(cfg, keys, active)
+def _update_fused(cfg: ContinuityConfig, table: ContinuityTable, keys, vals,
+                  active, *, probe, qblock, interpret):
+    """All update waves fused into one rank-indexed pass.
+
+    With distinct keys, each op's OLD slot is fixed by the pre-batch table
+    (only an op's own matcher frees its slot), so the one state that
+    genuinely evolves mid-batch is the pair's occupancy word: op r's new
+    slot is the first empty probe candidate of the word AFTER ranks < r
+    applied.  That allocation order is replayed on a (P,) COPY of the
+    indicator words — O(B) gathers + one (P,) scatter per trip, none of
+    the table-wide key/value traffic the old per-wave loop paid — and the
+    batch then commits in one scatter round: payload stores to
+    pairwise-distinct slots (each slot is freed at most once, by its
+    unique matcher, and claimed at most once), fingerprint fields as two
+    disjoint scatter-adds, indicator words from the evolved copy, version
+    bumps as per-pair sums.  Duplicate-target cohorts poison their whole
+    pair (allocation order entangles every op of the pair) and fall back
+    to the residual wave loop.  Returns ``(table, ok, pm, unsafe)``."""
+    B = keys.shape[0]
+    P = cfg.num_pairs
+    S, seg, E = cfg.slots_per_pair, cfg.seg_slots, cfg.ext_slots
+    drop = jnp.iinfo(I32).max
+    pair, parity = locate(cfg, keys)
+    found, mslot = _mutation_match(cfg, table, keys, pair, parity,
+                                   probe=probe, qblock=qblock,
+                                   interpret=interpret)
+    if cfg.stash_slots:
+        smatch = _stash_match_gated(cfg, table, keys, pair)
+        in_stash = ~found & jnp.any(smatch, -1)
+        sidx = jnp.argmax(smatch, -1).astype(I32)
+    else:
+        in_stash = jnp.zeros((B,), jnp.bool_)
+        sidx = jnp.zeros((B,), I32)
+    cm = active & found
+    cs = active & in_stash
+    dup = _dup_targets(cfg, pair, cm, mslot, cs, sidx)
+    # unlike delete, a duplicate target serializes its WHOLE pair: new-slot
+    # allocation threads through every op of the cohort in batch order
+    pdup = jnp.zeros((P,), jnp.bool_).at[
+        jnp.where(dup, pair, drop)].set(True, mode="drop")
+    unsafe = active & pdup[pair]
+    cand_op = (cm | cs) & ~unsafe
+    cand_op, found, mslot, in_stash, sidx = _pin(
+        (cand_op, found, mslot, in_stash, sidx))
+
+    # rank-sequential new-slot allocation on the word copy
+    _, _, rank, num_waves = _plan_waves(cfg, keys, cand_op)
+    main_mask = U32((1 << seg) - 1)
+    ext_bits = U32(((1 << E) - 1) << seg) if E else U32(0)
+    has_ext = table.ext_map[pair] >= 0
+    is_m = cand_op & found                   # main/ext match frees its bit
 
     def body(c):
-        w, t, ok, pm = c
+        w, evo, new_slot, okv = c
+        sel = cand_op & (rank == w)
+        word = evo[pair]
+        canon = _canonical_occupancy(cfg, word, parity)
+        empty = ~canon & (main_mask | jnp.where(has_ext, ext_bits, U32(0)))
+        okw = sel & (empty != U32(0))
+        pos = _select_bit(empty, jnp.zeros((B,), I32))
+        ns = jnp.where(pos < seg,
+                       jnp.where(parity == 0, pos, S - 1 - pos),
+                       S + (pos - seg))
+        flip = (U32(1) << ns.astype(U32)) | jnp.where(
+            is_m, U32(1) << jnp.maximum(mslot, 0).astype(U32), U32(0))
+        evo = evo.at[jnp.where(okw, pair, drop)].set(
+            word ^ flip, mode="drop")
+        return w + 1, evo, jnp.where(okw, ns, new_slot), okv | okw
+
+    _, evo, new_slot, ok = jax.lax.while_loop(
+        lambda c: c[0] < num_waves, body,
+        (jnp.zeros((), I32), table.indicator, jnp.zeros((B,), I32),
+         jnp.zeros((B,), jnp.bool_)))
+    okm = ok & ~in_stash
+    oks = ok & in_stash
+    eidx = jnp.maximum(table.ext_map[pair], 0)
+    ok, okm, oks, new_slot, eidx, evo = _pin(
+        (ok, okm, oks, new_slot, eidx, evo))
+
+    # phase 1: payload rows (ONE flat scatter covers keys and values —
+    # key rows in [0, P*S), value rows in [P*S, 2*P*S); ext rows
+    # cond-skipped)
+    is_ext = new_slot >= S
+    okp = ok & ~is_ext
+    slotf = pair * S + jnp.minimum(new_slot, S - 1)
+    pay = jnp.concatenate([table.keys.reshape(P * S, KEY_LANES),
+                           table.vals.reshape(P * S, VAL_LANES)]).at[
+        jnp.concatenate([jnp.where(okp, slotf, drop),
+                         jnp.where(okp, slotf + P * S, drop)])].set(
+        jnp.concatenate([keys, vals]), mode="drop")
+    tkeys = pay[:P * S].reshape(P, S, KEY_LANES)
+    tvals = pay[P * S:].reshape(P, S, VAL_LANES)
+
+    def ext_rows(kv):
+        ek, ev = kv
+        PE, EX = ek.shape[0], ek.shape[1]
+        eix = jnp.where(ok & is_ext,
+                        eidx * EX + jnp.maximum(new_slot - S, 0), drop)
+        return (ek.reshape(PE * EX, KEY_LANES).at[eix].set(
+                    keys, mode="drop").reshape(ek.shape),
+                ev.reshape(PE * EX, VAL_LANES).at[eix].set(
+                    vals, mode="drop").reshape(ev.shape))
+    tek, tev = jax.lax.cond(jnp.any(ok & is_ext), ext_rows,
+                            lambda kv: kv, (table.ext_keys, table.ext_vals))
+
+    # fingerprint fields of the claimed slots (disjoint 2-bit fields) and
+    # the per-pair version bumps: ONE flat scatter-add carries all three
+    # side words (version bumps in [0,P), fp clear masks in [P,3P), fp new
+    # fields in [3P,5P)) — scatter dispatch dominates this pass on CPU
+    okf = ok & ~is_ext
+    fpv = fingerprint(keys)
+    fw = jnp.minimum(new_slot, S - 1) // _FPW
+    fsh = U32(FP_SLOT_BITS) * (new_slot % _FPW).astype(U32)
+    fflat = pair * 2 + fw
+    sidxs = jnp.concatenate([jnp.where(ok, pair, drop),
+                             jnp.where(okf, P + fflat, drop),
+                             jnp.where(okf, 3 * P + fflat, drop)])
+    supd = jnp.concatenate([jnp.ones((B,), U32),
+                            U32(FP_MASK) << fsh,
+                            (fpv & U32(FP_MASK)) << fsh])
+    buf = jnp.zeros((5 * P,), U32).at[sidxs].add(supd, mode="drop")
+    vadd, fclear, fnew = (buf[:P], buf[P:3 * P].reshape(P, 2),
+                          buf[3 * P:].reshape(P, 2))
+
+    # phase 2: indicator words straight from the evolved copy (equal to the
+    # serial per-op XOR chain), version bumps as per-pair sums
+    table = table._replace(
+        keys=tkeys, vals=tvals, ext_keys=tek, ext_vals=tev,
+        indicator=evo, version=table.version + vadd,
+        fp=(table.fp & ~fclear) | fnew)
+    pm = 2 * jnp.sum(okm).astype(I32)
+    if cfg.stash_slots:
+        # stash relocation tail (commit first: the main copy wins by probe
+        # priority, so the meta clear only removes a shadowed entry),
+        # gated on an actual relocation so all-main batches skip it
+        def stash_tail(sm_fp):
+            sm, fp = sm_fp
+            w = jnp.where(oks, sidx, drop)
+            pw = jnp.where(oks, pair, drop)
+            return (sm.at[w].set(U32(0), mode="drop"),
+                    fp.at[pw, 1].add(-(U32(1) << U32(STASH_CNT_SHIFT)),
+                                     mode="drop"))
+        sm, fp = jax.lax.cond(jnp.any(oks), stash_tail, lambda x: x,
+                              (table.stash_meta, table.fp))
+        table = table._replace(stash_meta=sm, fp=fp)
+        pm = pm + 3 * jnp.sum(oks).astype(I32)
+    return table, ok, pm, unsafe
+
+
+@functools.partial(jax.jit, static_argnums=0,
+                   static_argnames=("probe", "qblock", "interpret"))
+def update(cfg: ContinuityConfig, table: ContinuityTable, keys, vals,
+           mask=None, *, probe: str = "gather", qblock: int = 8,
+           interpret: bool = True):
+    """Server-side batched out-of-place update on the wave engine.
+    2 PM writes/op; both bit-flips land in ONE atomic indicator store
+    (3 writes when the op relocates a stash entry into the main row).
+
+    One fused pass commits the whole batch (new-slot allocation replayed
+    on a (P,) word copy); only pairs with duplicate targets fall back to
+    the exact residual wave loop, whose trip count is bounded by those
+    cohorts alone.  ``probe`` selects the match backend
+    (see `_mutation_match`)."""
+    keys, vals, active = _batch_arrays(keys, vals, mask)
+    table, ok, pm, unsafe = _update_fused(cfg, table, keys, vals, active,
+                                          probe=probe, qblock=qblock,
+                                          interpret=interpret)
+
+    # residual wave loop: ranks are planned over the UNSAFE (duplicate-
+    # target-pair) ops alone, so the trip count is bounded by the
+    # contended cohorts — zero trips for the common duplicate-free batch
+    pair, parity, rank, num_waves = _plan_waves(cfg, keys, unsafe)
+
+    def body(c):
+        w, t, okw, pmw = c
         t, wok, wpm = _update_wave(cfg, t, keys, vals, pair, parity,
                                    rank == w)
-        return w + 1, t, ok | wok, pm + wpm
+        return w + 1, t, okw | wok, pmw + wpm
 
-    init = (jnp.zeros((), I32), table, jnp.zeros((keys.shape[0],), jnp.bool_),
-            jnp.zeros((), I32))
     _, table, ok, pm = jax.lax.while_loop(
-        lambda c: c[0] < num_waves, body, init)
+        lambda c: c[0] < num_waves, body,
+        (jnp.zeros((), I32), table, ok, pm))
     ctr = pmem.CostLedger.zero().add(pm_writes=pm, ops=jnp.sum(active))
     return table, ok, ctr
 

@@ -23,6 +23,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.continuity import ContinuityConfig, ContinuityTable, KEY_LANES
+from repro.kernels import mutate as _mutate
+from repro.kernels import mutate_ref as _mutate_ref
 from repro.kernels import paged_attn as _pa
 from repro.kernels import probe as _probe
 from repro.kernels import probe_ref as _probe_ref
@@ -80,9 +82,74 @@ def probe_table(cfg: ContinuityConfig, table: ContinuityTable, keys,
     return match, empty, pair, parity
 
 
+def mutation_plan(cfg: ContinuityConfig, table: ContinuityTable, keys,
+                  *, interpret: bool = True, use_kernel: bool = True,
+                  qblock: int = 8):
+    """Resolve the main-segment mutation plan for a batch of keys.
+
+    The write-path peer of ``probe_table``: one contiguous row DMA per
+    query resolves both the MATCH slot (the key's current home — the bit
+    update/delete clears) and the VICTIM slot (first empty probe candidate
+    — the bit update sets), plus ``flip``, the one-word XOR commit mask an
+    uncontended update would store.  The fingerprint filter is always on
+    (pure compare-reduction; visible slots carry correct fields).  The
+    fused mutation engine (``continuity.update``/``delete`` with
+    ``probe="pallas"``) consumes the match side and replays victim
+    allocation only for multi-op pairs.  Returns (match, victim, flip),
+    each (B,), slots -1 on miss/full.
+    """
+    from repro.core import continuity as ch  # local import to avoid cycle
+    keys = jnp.asarray(keys, jnp.uint32).reshape(-1, KEY_LANES)
+    pair, parity = ch.locate(cfg, keys)
+    rows = table_rows(table)
+    ind = table.indicator[:, None]
+    prio = jnp.asarray(priority_table(cfg))
+    qfp = ch.fingerprint(keys)
+    if use_kernel:
+        return _mutate.mutate_segments(rows, ind, table.fp, prio, pair,
+                                       parity, keys, qfp,
+                                       interpret=interpret, qblock=qblock)
+    return _mutate_ref.mutate_ref(rows, ind, table.fp, prio, pair, parity,
+                                  keys, qfp)
+
+
+def fp_filter_stats(cfg: ContinuityConfig, table: ContinuityTable, keys):
+    """Main-segment key compares a probe batch performs with vs without the
+    fingerprint pre-filter (the paper's Figs 7/14 quantity).
+
+    Without the filter every OCCUPIED probe-candidate slot costs a 16-byte
+    key compare; with it only slots whose 2-bit field equals the query's
+    fingerprint do.  Returns a host-side dict with both totals and the
+    reduction ratio — run it on a negative-search batch to reproduce the
+    paper's claim (positive searches stop at the match either way).
+    """
+    from repro.core import continuity as ch
+    keys = jnp.asarray(keys, jnp.uint32).reshape(-1, KEY_LANES)
+    pair, parity = ch.locate(cfg, keys)
+    S = cfg.slots_per_pair
+    iota = jnp.arange(S, dtype=jnp.uint32)[None, :]
+    bits = (table.indicator[pair][:, None] >> iota) & jnp.uint32(1)
+    prio = jnp.asarray(priority_table(cfg))
+    pr = jnp.where(parity[:, None] == 0, prio[0][None, :], prio[1][None, :])
+    occ = (bits == jnp.uint32(1)) & (pr < BIG)
+    lane = jnp.where(iota < jnp.uint32(16),
+                     table.fp[pair, 0:1], table.fp[pair, 1:2])
+    field = (lane >> (jnp.uint32(2) * (iota % jnp.uint32(16)))) & jnp.uint32(3)
+    qfp = ch.fingerprint(keys)
+    pass_fp = occ & (field == qfp[:, None])
+    no_fp = int(jnp.sum(occ))
+    with_fp = int(jnp.sum(pass_fp))
+    return {
+        "queries": int(keys.shape[0]),
+        "compares_no_fp": no_fp,
+        "compares_with_fp": with_fp,
+        "reduction": 1.0 - (with_fp / no_fp if no_fp else 0.0),
+    }
+
+
 def probe_lookup(cfg: ContinuityConfig, table: ContinuityTable, keys,
                  *, interpret: bool = True, use_kernel: bool = True,
-                 qblock: int = 8):
+                 qblock: int = 8, use_fp: bool = True):
     """Full continuity lookup with the Pallas kernel as the main-segment
     probe stage; byte-identical to ``repro.core.continuity.lookup``.
 
@@ -96,7 +163,7 @@ def probe_lookup(cfg: ContinuityConfig, table: ContinuityTable, keys,
     keys = jnp.asarray(keys, jnp.uint32).reshape(-1, KEY_LANES)
     match, _, pair, parity = probe_table(
         cfg, table, keys, interpret=interpret, use_kernel=use_kernel,
-        qblock=qblock, use_fp=True)
+        qblock=qblock, use_fp=use_fp)
     found_main = match >= 0
     safe_m = jnp.maximum(match, 0)
     vals_main = table.vals[pair, safe_m]

@@ -133,6 +133,20 @@ class LinkModel:
         return (active * self.verb_us + wire + media
                 + (fence & is_write) * self.fence_us)
 
+    def cohort_move_us(self, read_bytes: float, write_bytes: float,
+                       verbs: int = 4, fences: int = 3) -> float:
+        """Stall cost of relocating ONE resize cohort (one bucket-pair row):
+        read the source row, write its items + the new indicator words, CAS
+        the cutover token — one dependent round on the wire plus the verb /
+        media / fence service times.  This is the unit the ``resize_step``
+        SLO controller divides a per-step stall budget by (see
+        ``api.stores.ContinuityStore.begin_resize(step_slo_us=...)``)."""
+        wire = (read_bytes + write_bytes) / self.nic_bytes_per_us
+        media = (read_bytes / self.pm_read_bytes_per_us
+                 + write_bytes / self.pm_write_bytes_per_us)
+        return (self.rtt_us + verbs * self.verb_us + wire + media
+                + fences * self.fence_us)
+
 
 class Completion(NamedTuple):
     """Result of one ``post()`` (one client batch through the transport).

@@ -1,0 +1,20 @@
+"""Suite-level hygiene for the CPU-only container.
+
+The full tier-1 run compiles several hundred distinct XLA CPU
+executables (every scheme x op x batch-shape combination across ~20
+modules). jaxlib 0.4.37's CPU backend can segfault inside
+``backend_compile`` once that much JIT state has accumulated in one
+process — deterministic at suite scale, unreproducible for any module
+in isolation. Dropping the executable caches at module boundaries
+bounds the accumulation; each module recompiles its own shapes, which
+it overwhelmingly does anyway.
+"""
+
+import jax
+import pytest
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _bound_jit_accumulation():
+    yield
+    jax.clear_caches()
