@@ -2,7 +2,10 @@
 
 One `repro.cache.fanin.run_fanin` drill — O(100) clients behind
 version-stamped `ClientCache` instances vs the uncached request-per-post
-edge, same seeded stream and chaos schedule on both sides.  The payload
+edge, same seeded stream and chaos schedule on both sides.  The cell's
+p50/p99 come out of the shared `repro.obs` histogram sketch (fanin
+records every served op into it), so this section and a traced export
+derive their percentiles from the same buckets.  The payload
 lands in the BENCH json under ``cache`` and `validate_bench.py` gates
 the ISSUE's acceptance criteria on it: >= 2x per-node read-doorbell
 reduction, cached p99 <= uncached p99, hit rate above the honesty floor,

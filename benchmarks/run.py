@@ -29,6 +29,11 @@ Prints ``name,us_per_call,derived`` CSV. Sections:
                     the uncached request-per-post edge under membership
                     chaos (repro.cache; doorbell/p99 collapse + the
                     zero-stale gate; --e2e-scale smoke shrinks it)
+  * obs           — telemetry-sketch headline numbers (repro.obs): the
+                    e2e scheme trio's p50/p99 read back OUT of the
+                    e2e.op_us registry histograms, plus the
+                    maintenance-SLO drill (validate_bench gates the
+                    YCSB-A ordering chain and zero SLO burns)
   * crash_consistency — recovery work per scheme from the crash/scheme
                     matrix (repro.consistency; EXPERIMENTS.md §Crash)
   * bench_serving — technique-on-the-hot-path serving numbers
@@ -40,7 +45,10 @@ The serial-vs-wave write-batch sweep always runs and is written to
 ``--bench-json`` (default BENCH_hash.json; ops/s + PM-write counters at
 ``--sweep-batches``) so successive PRs accumulate a perf trajectory — see
 EXPERIMENTS.md §Perf.  ``benchmarks/validate_bench.py`` checks the emitted
-artifact against its schema (CI runs it on the smoke sweep).
+artifact against its schema (CI runs it on the smoke sweep).  ``--merge``
+updates the existing artifact in place with just this run's sections; an
+EMPTY ``--sweep-batches`` under ``--merge`` skips the sweep and keeps the
+artifact's committed one.
 """
 
 from __future__ import annotations
@@ -50,8 +58,8 @@ import json
 
 HASH_SECTIONS = ("pm_writes", "access_amp", "search", "update_micro",
                  "ycsb", "end_to_end", "load_factor", "resize")
-SECTIONS = HASH_SECTIONS + ("cluster", "cache", "crash_consistency", "hash",
-                            "serving", "roofline")
+SECTIONS = HASH_SECTIONS + ("cluster", "cache", "obs", "crash_consistency",
+                            "hash", "serving", "roofline")
 
 
 def main(argv=None) -> None:
@@ -67,6 +75,11 @@ def main(argv=None) -> None:
                         "(smoke CI uses a small subset)")
     p.add_argument("--e2e-scale", default="full", choices=("full", "smoke"),
                    help="workload sizes for the end_to_end section")
+    p.add_argument("--merge", action="store_true",
+                   help="load the existing --bench-json and update it "
+                        "with this run's sections (instead of rewriting "
+                        "the whole artifact) — lets a single section "
+                        "refresh without regenerating the sweep")
     args = p.parse_args(argv)
     sections = {s for s in args.sections.split(",") if s}
     unknown = sections - set(SECTIONS)
@@ -76,11 +89,14 @@ def main(argv=None) -> None:
     if "hash" in sections:
         sections |= set(HASH_SECTIONS)
     batches = tuple(int(b) for b in args.sweep_batches.split(",") if b)
+    if not batches and not args.merge:
+        p.error("an empty --sweep-batches (skip the sweep) requires "
+                "--merge: the artifact must keep its existing sweep")
 
     rows = []
-    table1 = crash = e2e = lf = rz = cluster = cache = None
+    table1 = crash = e2e = lf = rz = cluster = cache = obs_sec = None
     from benchmarks import (bench_cache, bench_cluster, bench_crash,
-                            bench_hash, bench_serving, roofline)
+                            bench_hash, bench_obs, bench_serving, roofline)
     if "pm_writes" in sections:
         table1 = bench_hash.bench_pm_writes(rows)
     if "crash_consistency" in sections:
@@ -91,6 +107,8 @@ def main(argv=None) -> None:
         cluster = bench_cluster.run(rows, scale=args.e2e_scale)
     if "cache" in sections:
         cache = bench_cache.run(rows, scale=args.e2e_scale)
+    if "obs" in sections:
+        obs_sec = bench_obs.run(rows, scale=args.e2e_scale)
     if "access_amp" in sections:
         bench_hash.bench_access_amp(rows)
     if "search" in sections:
@@ -107,7 +125,13 @@ def main(argv=None) -> None:
         bench_serving.run(rows)
     if "roofline" in sections:
         roofline.run(rows)
-    payload = bench_hash.bench_write_batch_sweep(rows, batches=batches)
+    payload = (bench_hash.bench_write_batch_sweep(rows, batches=batches)
+               if batches else {})
+    if args.merge:
+        with open(args.bench_json) as f:
+            base = json.load(f)
+        base.update(payload)
+        payload = base
     if table1 is not None:
         payload["table1"] = table1
     if crash is not None:
@@ -122,6 +146,8 @@ def main(argv=None) -> None:
         payload["cluster"] = cluster
     if cache is not None:
         payload["cache"] = cache
+    if obs_sec is not None:
+        payload["obs"] = obs_sec
     with open(args.bench_json, "w") as f:
         json.dump(payload, f, indent=2, sort_keys=True)
     print("name,us_per_call,derived")

@@ -14,7 +14,9 @@ the container) over the payload ``benchmarks/run.py`` emits:
       "resize": {<scheme>: {"steps_per_cutover": int, ...}},        # optional
       "cluster": {"cells": ..., "durability": ..., "migration": ...}, # optional
       "cache": {"doorbell_reduction": ..., "hit_rate": ...,
-                "stale_served": 0, "uncached": ..., "cached": ...}    # optional
+                "stale_served": 0, "uncached": ..., "cached": ...},   # optional
+      "obs": {"e2e": {<wl>: {<scheme>: {"p50_us", "p99_us"}}},
+              "slo": {"steps", "slo_burns", "worst_step_us", ...}}    # optional
     }
 
     CELL = {"ops_per_s": float > 0, "us_per_op": float > 0,
@@ -48,6 +50,11 @@ control caught losing acked ops, the migration crash sweep clean.
 read-doorbell reduction, cached p99 <= uncached p99, hit rate >= the
 honesty floor, ``stale_served`` exactly 0, and zero wrong reads on
 both passes.
+``obs``, when present, gates the telemetry section: the e2e p50s read
+back out of the metric sketches must rank continuity <= level <= pfarm
+on YCSB-A (continuity <= pfarm on the read-only C), and the
+maintenance-SLO drill must report >= 1 resize step with exactly zero
+SLO burns at the default budget.
 
 The script also recognises a ``repro.chaos.matrix --json`` artifact
 (top-level ``cells``/``totals``/``gates``) and gates it on the chaos
@@ -416,6 +423,62 @@ def _check_cache(ca) -> None:
         _fail("cache.gate_failures", f"fan-in run reported {gf!r}")
 
 
+# the obs-section gates: the telemetry sketches must reproduce the same
+# relative ordering the raw end_to_end section bands — full p50 chain
+# continuity <= level <= pfarm on the write-mixed YCSB-A (the paper's
+# ~1.7x latency ordering), headline contrast continuity <= pfarm on the
+# read-only C (level's shorter probe chains legitimately undercut
+# continuity's read p50 there, as in the committed end_to_end artifact)
+# — and the maintenance-SLO drill must finish with ZERO burned steps
+OBS_SCHEMES = ("continuity", "level", "pfarm")
+OBS_SLO_FIELDS = ("steps", "cohorts_moved", "resizes_begun", "cutovers",
+                  "slo_burns", "slo_us", "worst_step_us")
+
+
+def _check_obs(ob) -> None:
+    if not isinstance(ob, dict):
+        _fail("obs", f"expected object, got {type(ob).__name__}")
+    e2e = ob.get("e2e")
+    if not isinstance(e2e, dict) or not e2e:
+        _fail("obs.e2e", "missing or empty")
+    for wl, by_s in e2e.items():
+        missing = set(OBS_SCHEMES) - set(by_s)
+        if missing:
+            _fail(f"obs.e2e.{wl}", f"schemes missing: {sorted(missing)}")
+        for s, cell in by_s.items():
+            here = f"obs.e2e.{wl}.{s}"
+            for field in ("p50_us", "p99_us"):
+                v = cell.get(field)
+                if not isinstance(v, (int, float)) or isinstance(v, bool) \
+                        or v <= 0:
+                    _fail(f"{here}.{field}",
+                          f"expected positive number, got {v!r}")
+            if cell["p99_us"] < cell["p50_us"]:
+                _fail(here, f"p99 {cell['p99_us']!r} < p50 "
+                            f"{cell['p50_us']!r}")
+        names = OBS_SCHEMES if wl == "A" else ("continuity", "pfarm")
+        chain = [(s, by_s[s]["p50_us"]) for s in names]
+        for (sa, a), (sb, b) in zip(chain, chain[1:]):
+            if a > b * (1 + 1e-9):
+                _fail(f"obs.e2e.{wl}",
+                      f"p50 ordering violated: {sa} {a:.2f}us > "
+                      f"{sb} {b:.2f}us")
+    slo = ob.get("slo")
+    if not isinstance(slo, dict):
+        _fail("obs.slo", "missing or non-object")
+    for field in OBS_SLO_FIELDS:
+        v = slo.get(field)
+        if not isinstance(v, (int, float)) or isinstance(v, bool) or v < 0:
+            _fail(f"obs.slo.{field}",
+                  f"expected non-negative number, got {v!r}")
+    if slo["steps"] < 1:
+        _fail("obs.slo.steps", "the drill never advanced a resize step")
+    if slo["slo_burns"] != 0:
+        _fail("obs.slo.slo_burns",
+              f"{slo['slo_burns']!r} maintenance steps burned the "
+              f"{slo['slo_us']!r}us SLO at default budget (must be 0)")
+
+
 def _check_crash(cc) -> None:
     if not isinstance(cc, dict) or not cc:
         _fail("crash_consistency", "must be a non-empty object")
@@ -468,6 +531,8 @@ def validate(payload: dict) -> None:
         _check_cluster(payload["cluster"])
     if "cache" in payload:
         _check_cache(payload["cache"])
+    if "obs" in payload:
+        _check_obs(payload["obs"])
 
     sweep = payload["write_batch_sweep"]
     if set(sweep) - set(OPS) or not sweep:
@@ -534,7 +599,8 @@ def main(argv=None) -> int:
         print(f"INVALID {args.file}: {e}", file=sys.stderr)
         return 1
     extras = [k for k in ("table1", "crash_consistency", "end_to_end",
-                          "load_factor", "resize", "cluster", "cache")
+                          "load_factor", "resize", "cluster", "cache",
+                          "obs")
               if k in payload]
     print(f"OK {args.file}: valid write-batch sweep artifact "
           f"({len(payload['write_batch_sweep'])} ops"

@@ -50,6 +50,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro import obs
 from repro.cache.client import CacheConfig, ClientCache, ClusterBackend
 from repro.cluster.store import ClusterStore
 from repro.data import ycsb
@@ -149,7 +150,9 @@ def _run_pass(cached: bool, *, scheme: str, clients: int, rounds: int,
                                               seed=cache_cfg.seed + c),
                           backend) for c in range(clients)] if cached else []
 
-    lats: List[float] = []
+    mode = "cached" if cached else "uncached"
+    reg = obs.get_registry()
+    h_lat = obs.Histogram()          # per-op serve latency (queue + wire)
     reports: List[dict] = []
     partitioned: List[str] = []
     killed: List[str] = []
@@ -226,41 +229,50 @@ def _run_pass(cached: bool, *, scheme: str, clients: int, rounds: int,
                 truth[int(i)] = v
 
         q: Dict[str, float] = {}           # per-node round FIFO queue (us)
-        for c in range(clients):
-            ranks = stream.sample(rng, ops_per_round) % len(scramble)
-            ids = order[scramble[ranks] % len(order)]
-            keys = ycsb.make_key(ids)
-            if cached:
-                backend.last.clear()
-                r = caches[c].read_round(keys)
-                touched: set = set()
-                for _, srcs, _ in backend.last:
-                    touched |= srcs
-                before = max((q.get(n, 0.0) for n in touched), default=0.0)
-                for _, srcs, rus in backend.last:
-                    for nm in srcs:
-                        q[nm] = q.get(nm, 0.0) + rus
-                for i in range(len(ids)):
-                    if not r.served[i]:
-                        continue           # shed: counted by the valve
-                    if not r.found[i]:
-                        unserved += 1
-                        continue
-                    lats.append(before + float(r.op_us[i]))
-                    if not np.array_equal(r.values[i], truth[int(ids[i])]):
-                        if r.hit[i]:
-                            stale_served += 1   # the cardinal sin: gated == 0
-                        else:
+        with obs.span("fanin.round", round=rnd, mode=mode):
+            for c in range(clients):
+                ranks = stream.sample(rng, ops_per_round) % len(scramble)
+                ids = order[scramble[ranks] % len(order)]
+                keys = ycsb.make_key(ids)
+                if cached:
+                    backend.last.clear()
+                    r = caches[c].read_round(keys)
+                    touched: set = set()
+                    for _, srcs, _ in backend.last:
+                        touched |= srcs
+                    before = max((q.get(n, 0.0) for n in touched),
+                                 default=0.0)
+                    for _, srcs, rus in backend.last:
+                        for nm in srcs:
+                            q[nm] = q.get(nm, 0.0) + rus
+                    for i in range(len(ids)):
+                        if not r.served[i]:
+                            continue       # shed: counted by the valve
+                        if not r.found[i]:
+                            unserved += 1
+                            continue
+                        h_lat.record(before + float(r.op_us[i]))
+                        if not np.array_equal(r.values[i],
+                                              truth[int(ids[i])]):
+                            if r.hit[i]:
+                                stale_served += 1   # the cardinal sin:
+                            else:                   # gated == 0
+                                wrong_reads += 1
+                else:
+                    values, found, lat, posted = _uncached_round(cluster,
+                                                                 keys, q)
+                    for i in range(len(ids)):
+                        if not (posted[i] and found[i]):
+                            unserved += 1
+                            continue
+                        h_lat.record(float(lat[i]))
+                        if not np.array_equal(values[i],
+                                              truth[int(ids[i])]):
                             wrong_reads += 1
-            else:
-                values, found, lat, posted = _uncached_round(cluster, keys, q)
-                for i in range(len(ids)):
-                    if not (posted[i] and found[i]):
-                        unserved += 1
-                        continue
-                    lats.append(float(lat[i]))
-                    if not np.array_equal(values[i], truth[int(ids[i])]):
-                        wrong_reads += 1
+        # the round's deepest per-node NIC backlog, as a gauge lane:
+        # .value is the LAST round's depth, .max the worst across the run
+        for nm in sorted(q):
+            reg.gauge("fanin.queue_us", node=nm, mode=mode).set(q[nm])
 
     # read-tagged wire counters per node (writes/load are untagged, so the
     # comparison isolates exactly the read path the cache replaces)
@@ -275,14 +287,19 @@ def _run_pass(cached: bool, *, scheme: str, clients: int, rounds: int,
         for k in tot:
             tot[k] += row[k]
 
-    la = np.array(lats) if lats else np.zeros(1)
+    # percentiles come from the shared obs sketch (the same buckets the
+    # export carries), and the sketch is folded into the installed
+    # registry so a traced run exports it under fanin.op_us{mode=...}
+    reg.histogram("fanin.op_us", mode=mode).merge(h_lat)
+    reg.counter("fanin.unserved", mode=mode).inc(unserved)
+    reg.counter("fanin.wrong_reads", mode=mode).inc(wrong_reads)
     out = {
         "read_posts": tot["posts"], "read_doorbells": tot["doorbells"],
         "read_verbs": tot["verbs"], "read_bytes": tot["bytes"],
         "per_node": per_node,
-        "p50_us": float(np.percentile(la, 50)),
-        "p99_us": float(np.percentile(la, 99)),
-        "reads_served": len(lats), "unserved": unserved,
+        "p50_us": h_lat.percentile(50) if h_lat.count else 0.0,
+        "p99_us": h_lat.percentile(99) if h_lat.count else 0.0,
+        "reads_served": h_lat.count, "unserved": unserved,
         "wrong_reads": wrong_reads,
         "chaos": dict(cluster.chaos), "events": reports,
     }
@@ -292,6 +309,11 @@ def _run_pass(cached: bool, *, scheme: str, clients: int, rounds: int,
         out["cache"] = agg
         out["hit_rate"] = agg["hits"] / max(1, denom)
         out["stale_served"] = stale_served
+        reg.counter("fanin.hits").inc(agg["hits"])
+        reg.counter("fanin.misses").inc(agg["misses"])
+        reg.counter("fanin.shed").inc(agg["shed"])
+        reg.counter("fanin.unresolved").inc(agg["unresolved_validations"])
+        reg.counter("fanin.stale_served").inc(stale_served)
     return out
 
 

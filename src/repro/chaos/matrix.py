@@ -119,13 +119,32 @@ def main(argv=None) -> int:
                         "--full runs the larger grid)")
     p.add_argument("--full", action="store_true")
     p.add_argument("--json", default=None, help="write the artifact here")
+    p.add_argument("--trace", default=None, metavar="BASE",
+                   help="trace the grid under a deterministic TickClock "
+                        "and write BASE.trace.json + BASE.metrics.json "
+                        "(the EXPERIMENTS.md top-spans table; NOT gated "
+                        "by `repro.obs.report --check` — the blocking-"
+                        "resize baselines legitimately burn the "
+                        "maintenance SLO)")
     args = p.parse_args(argv)
 
     profile = "full" if args.full else "smoke"
     print(f"chaos matrix: {len(GRID)} cells, scheme={args.scheme}, "
           f"seed={args.seed}, profile={profile}")
-    payload = run_matrix(seed=args.seed, scheme=args.scheme,
-                         profile=profile)
+    if args.trace:
+        from repro import obs
+        with obs.scope(obs.Tracer(obs.TickClock())) as (tracer, reg):
+            payload = run_matrix(seed=args.seed, scheme=args.scheme,
+                                 profile=profile)
+            tpath, mpath = obs.write_export(
+                args.trace, tracer, reg,
+                meta={"scheme": args.scheme, "seed": args.seed,
+                      "profile": profile, "grid_cells": len(GRID)})
+        payload["obs_export"] = {"trace": tpath, "metrics": mpath}
+        print(f"obs export: {tpath} + {mpath}")
+    else:
+        payload = run_matrix(seed=args.seed, scheme=args.scheme,
+                             profile=profile)
     if args.json:
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=2, sort_keys=True, default=str)

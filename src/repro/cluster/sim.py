@@ -48,6 +48,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro import obs
 from repro.cluster.failover import FailoverController
 from repro.cluster.store import ClusterStore
 from repro.data import ycsb
@@ -114,13 +115,15 @@ def run_cluster(scheme: str = "continuity", workload: str = "A", *,
         okn = np.asarray(res.ok)
         if record:              # mid-run inserts count toward the metrics
             wall_us += res.round_us
-            write_lat.append(res.op_us[okn])
+            h_write.record_many(res.op_us[okn])
         for i, v in zip(ids[okn], vals[okn]):
             acked[int(i)] = v
             order.append(int(i))
         return okn
 
-    read_lat, write_lat = [], []
+    # per-op-type latency sketches: the ONE percentile path for this
+    # cell (the payload's p50/p99 AND the obs export read these buckets)
+    h_read, h_write = obs.Histogram(), obs.Histogram()
     wall_us = 0.0
     for lo in range(0, num_records, batch):
         ids = np.arange(lo, min(lo + batch, num_records))
@@ -143,117 +146,118 @@ def run_cluster(scheme: str = "continuity", workload: str = "A", *,
 
     while ops_done < num_ops:
         step += 1
-        clock.t += 1.0
-        ctl.beat(step)
-        for rep in ctl.tick():
-            reports.append({"event": "failover", "dead": rep.dead,
-                            "promoted_keys": rep.promoted_keys,
-                            "recopied": rep.recopied,
-                            "recovery_log_free": rep.recovery_log_free()})
-        if pending_complete_join and not cluster.migrating:
-            pending_complete_join = False   # the joiner died mid-window
-        if pending_complete_join:       # cutover one full round after COPY:
-            rb = cluster.complete_join()    # the dual-read window was live
-            pending_complete_join = False
-            rebalance_ok &= rb.within_bound
-            reports.append({"event": "join", "node": rb.node,
-                            "resident": rb.resident,
-                            "moved_primary": rb.moved_primary,
-                            "moved_frac": rb.moved_frac, "bound": rb.bound,
-                            "copied": rb.copied, "cleaned": rb.cleaned,
-                            "within_bound": rb.within_bound})
-        while pending and pending[0][1] <= ops_done:
-            kind, _, name = pending.pop(0)
-            if kind == "join":
-                cluster.begin_join(name, node_slots)
-                ctl.monitor.register(name)
-                pending_complete_join = True
-            elif kind == "leave":
-                rb = cluster.leave(name)
-                reports.append({"event": "leave", "node": rb.node,
-                                "moved_frac": rb.moved_frac,
-                                "copied": rb.copied})
-                ctl.monitor.hosts.pop(name, None)
-            elif kind == "partition":
-                name = hottest_primary() if name == "primary" else name
-                cluster.partition(name)
-                partitioned.append(name)
-                reports.append({"event": "partition", "node": name,
-                                "epoch": cluster.epoch})
-            elif kind == "stale":
-                # clients that missed the partition keep writing through
-                # the stale ex-primary: divergent values on HOT keys (the
-                # worst case — if fencing leaked, the audit would read
-                # them).  None of these acks is legitimate, so none
-                # enters `acked`.
-                ranks = stream.sample(rng, 16) % len(scramble)
-                sids = np.array(order)[scramble[ranks] % len(order)]
-                n = cluster.stale_write(name, ycsb.make_key(sids),
-                                        ycsb.make_value(rng, len(sids)))
-                reports.append({"event": "stale", "node": name,
-                                "acks_injected": n})
-            elif kind == "heal":
-                cluster.heal(name)
-                reports.append({"event": "heal", "node": name})
-            elif kind == "resync":
-                hr = cluster.resync(name)
-                reports.append({"event": "resync", "node": hr.node,
-                                "stale_acks_detected":
-                                    hr.stale_acks_detected,
-                                "resynced": hr.resynced})
-            else:
-                assert kind == "kill", kind
-                name = hottest_primary() if name == "primary" else name
-                cluster.kill(name)
-                killed.append(name)
+        with obs.span("cluster.round", round=step):
+            clock.t += 1.0
+            ctl.beat(step)
+            for rep in ctl.tick():
+                reports.append({"event": "failover", "dead": rep.dead,
+                                "promoted_keys": rep.promoted_keys,
+                                "recopied": rep.recopied,
+                                "recovery_log_free": rep.recovery_log_free()})
+            if pending_complete_join and not cluster.migrating:
+                pending_complete_join = False   # the joiner died mid-window
+            if pending_complete_join:       # cutover one full round after COPY:
+                rb = cluster.complete_join()    # the dual-read window was live
+                pending_complete_join = False
+                rebalance_ok &= rb.within_bound
+                reports.append({"event": "join", "node": rb.node,
+                                "resident": rb.resident,
+                                "moved_primary": rb.moved_primary,
+                                "moved_frac": rb.moved_frac, "bound": rb.bound,
+                                "copied": rb.copied, "cleaned": rb.cleaned,
+                                "within_bound": rb.within_bound})
+            while pending and pending[0][1] <= ops_done:
+                kind, _, name = pending.pop(0)
+                if kind == "join":
+                    cluster.begin_join(name, node_slots)
+                    ctl.monitor.register(name)
+                    pending_complete_join = True
+                elif kind == "leave":
+                    rb = cluster.leave(name)
+                    reports.append({"event": "leave", "node": rb.node,
+                                    "moved_frac": rb.moved_frac,
+                                    "copied": rb.copied})
+                    ctl.monitor.hosts.pop(name, None)
+                elif kind == "partition":
+                    name = hottest_primary() if name == "primary" else name
+                    cluster.partition(name)
+                    partitioned.append(name)
+                    reports.append({"event": "partition", "node": name,
+                                    "epoch": cluster.epoch})
+                elif kind == "stale":
+                    # clients that missed the partition keep writing through
+                    # the stale ex-primary: divergent values on HOT keys (the
+                    # worst case — if fencing leaked, the audit would read
+                    # them).  None of these acks is legitimate, so none
+                    # enters `acked`.
+                    ranks = stream.sample(rng, 16) % len(scramble)
+                    sids = np.array(order)[scramble[ranks] % len(order)]
+                    n = cluster.stale_write(name, ycsb.make_key(sids),
+                                            ycsb.make_value(rng, len(sids)))
+                    reports.append({"event": "stale", "node": name,
+                                    "acks_injected": n})
+                elif kind == "heal":
+                    cluster.heal(name)
+                    reports.append({"event": "heal", "node": name})
+                elif kind == "resync":
+                    hr = cluster.resync(name)
+                    reports.append({"event": "resync", "node": hr.node,
+                                    "stale_acks_detected":
+                                        hr.stale_acks_detected,
+                                    "resynced": hr.resynced})
+                else:
+                    assert kind == "kill", kind
+                    name = hottest_primary() if name == "primary" else name
+                    cluster.kill(name)
+                    killed.append(name)
 
-        if n_read:
-            ranks = stream.sample(rng, n_read) % len(order)
-            ids = np.array(order)[scramble[ranks % len(scramble)]
-                                  % len(order)] \
-                if workload != "D" else \
-                np.array(order)[len(order) - 1 - ranks]
-            res = cluster.lookup(ycsb.make_key(ids))
-            read_lat.append(res.op_us[np.asarray(res.found)])
-            wall_us += res.round_us
-        if n_scan:
-            # YCSB-E short scans: zipf-ranked start keys, uniform spans
-            ranks = stream.sample(rng, n_scan) % len(scramble)
-            sids = np.array(order)[scramble[ranks] % len(order)]
-            spans = ycsb.scan_lengths(rng, n_scan)
-            res = cluster.scan(ycsb.make_key(sids), spans)
-            read_lat.append(res.op_us[np.asarray(res.found)])
-            wall_us += res.round_us
-        if n_upd:
-            # F's updates are the write half of read-modify-write: they
-            # hit the keys the SAME round just read, not a fresh draw
-            if n_rmw:
-                ids = ids[-n_upd:]
-            else:
-                ranks = stream.sample(rng, n_upd) % len(scramble)
-                ids = np.array(order)[scramble[ranks] % len(order)]
-            vals = ycsb.make_value(rng, n_upd)
-            res = cluster.update(ycsb.make_key(ids), vals)
-            okn = np.asarray(res.ok)
-            for i, v in zip(ids[okn], vals[okn]):
-                acked[int(i)] = v
-            write_lat.append(res.op_us[okn])
-            wall_us += res.round_us
-        if n_ins:
-            base = max(order) + 1
-            ids = np.arange(base, base + n_ins)
-            load(ids, ycsb.make_value(rng, n_ins), record=True)
-            stream = _stream(dist, len(order), theta, hot_frac, hot_op_frac)
-        if maintenance:
-            # between-rounds shard growth: any shard past the trigger
-            # load factor splits `resize_budget` cohorts per round while
-            # the YCSB stream above keeps flowing (writes/reads route by
-            # the split's cutover tokens)
-            for act in cluster.maintenance_step(budget=resize_budget,
-                                                trigger_lf=resize_trigger_lf):
-                if act["action"] != "step":
-                    reports.append({"event": "resize", "round": step, **act})
-        ops_done += n_logical
+            if n_read:
+                ranks = stream.sample(rng, n_read) % len(order)
+                ids = np.array(order)[scramble[ranks % len(scramble)]
+                                      % len(order)] \
+                    if workload != "D" else \
+                    np.array(order)[len(order) - 1 - ranks]
+                res = cluster.lookup(ycsb.make_key(ids))
+                h_read.record_many(res.op_us[np.asarray(res.found)])
+                wall_us += res.round_us
+            if n_scan:
+                # YCSB-E short scans: zipf-ranked start keys, uniform spans
+                ranks = stream.sample(rng, n_scan) % len(scramble)
+                sids = np.array(order)[scramble[ranks] % len(order)]
+                spans = ycsb.scan_lengths(rng, n_scan)
+                res = cluster.scan(ycsb.make_key(sids), spans)
+                h_read.record_many(res.op_us[np.asarray(res.found)])
+                wall_us += res.round_us
+            if n_upd:
+                # F's updates are the write half of read-modify-write: they
+                # hit the keys the SAME round just read, not a fresh draw
+                if n_rmw:
+                    ids = ids[-n_upd:]
+                else:
+                    ranks = stream.sample(rng, n_upd) % len(scramble)
+                    ids = np.array(order)[scramble[ranks] % len(order)]
+                vals = ycsb.make_value(rng, n_upd)
+                res = cluster.update(ycsb.make_key(ids), vals)
+                okn = np.asarray(res.ok)
+                for i, v in zip(ids[okn], vals[okn]):
+                    acked[int(i)] = v
+                h_write.record_many(res.op_us[okn])
+                wall_us += res.round_us
+            if n_ins:
+                base = max(order) + 1
+                ids = np.arange(base, base + n_ins)
+                load(ids, ycsb.make_value(rng, n_ins), record=True)
+                stream = _stream(dist, len(order), theta, hot_frac, hot_op_frac)
+            if maintenance:
+                # between-rounds shard growth: any shard past the trigger
+                # load factor splits `resize_budget` cohorts per round while
+                # the YCSB stream above keeps flowing (writes/reads route by
+                # the split's cutover tokens)
+                for act in cluster.maintenance_step(budget=resize_budget,
+                                                    trigger_lf=resize_trigger_lf):
+                    if act["action"] != "step":
+                        reports.append({"event": "resize", "round": step, **act})
+            ops_done += n_logical
 
     # let a terminal kill drain through detection before the audit (the
     # horizon includes the suspicion grace window: a node is only
@@ -276,15 +280,25 @@ def run_cluster(scheme: str = "continuity", workload: str = "A", *,
     cluster.quiesce_faults()
     audit_ids = np.array(sorted(acked))
     lost = 0
-    for lo in range(0, len(audit_ids), batch):
-        ids = audit_ids[lo:lo + batch]
-        res = cluster.lookup(ycsb.make_key(ids))
-        vals = np.stack([acked[int(i)] for i in ids])
-        good = np.asarray(res.found) & (res.values == vals).all(axis=1)
-        lost += int((~good).sum())
+    with obs.span("cluster.audit", n=len(audit_ids)):
+        for lo in range(0, len(audit_ids), batch):
+            ids = audit_ids[lo:lo + batch]
+            res = cluster.lookup(ycsb.make_key(ids))
+            vals = np.stack([acked[int(i)] for i in ids])
+            good = np.asarray(res.found) & (res.values == vals).all(axis=1)
+            lost += int((~good).sum())
 
-    lat = (np.concatenate(read_lat + write_lat)
-           if read_lat or write_lat else np.zeros(1))
+    merged = obs.Histogram()
+    merged.merge(h_read)
+    merged.merge(h_write)
+    reg = obs.get_registry()
+    reg.histogram("cluster.op_us", scheme=scheme, workload=workload,
+                  op="read", seed=seed).merge(h_read)
+    reg.histogram("cluster.op_us", scheme=scheme, workload=workload,
+                  op="write", seed=seed).merge(h_write)
+    # fold every node endpoint's wire registry into the installed one so
+    # a traced run exports per-tag transport counters cluster-wide
+    reg.merge(cluster.metrics_view())
     return {
         "scheme": scheme, "workload": workload, "dist": dist, "seed": seed,
         "theta": theta, "hot_frac": hot_frac, "hot_op_frac": hot_op_frac,
@@ -292,8 +306,8 @@ def run_cluster(scheme: str = "continuity", workload: str = "A", *,
         "replicas": replicas, "ops": ops_done,
         "chaos": dict(cluster.chaos), "partitioned": partitioned,
         "ops_per_s": ops_done / max(wall_us, 1e-9) * 1e6,
-        "p50_us": float(np.percentile(lat, 50)),
-        "p99_us": float(np.percentile(lat, 99)),
+        "p50_us": merged.percentile(50),
+        "p99_us": merged.percentile(99),
         "committed": len(acked), "committed_lost": lost,
         "rebalance_within_bound": bool(rebalance_ok),
         "failover_detected": bool(failover_seen),
@@ -373,6 +387,12 @@ def main(argv=None) -> int:
                    help="CI sizes: small run + join + primary kill + the "
                         "durability and migration drills")
     p.add_argument("--json", default=None, help="write the payload here")
+    p.add_argument("--trace", default=None, metavar="BASE",
+                   help="trace the run under a deterministic TickClock and "
+                        "write BASE.trace.json (Perfetto-loadable) + "
+                        "BASE.metrics.json, including the single-server "
+                        "YCSB scheme trio so `python -m repro.obs.report "
+                        "BASE` prints the continuity-vs-pfarm p50 ratio")
     p.add_argument("--cache", action="store_true",
                    help="run the client-cache fan-in drill instead "
                         "(`repro.cache.fanin`): O(100) clients behind "
@@ -399,14 +419,38 @@ def main(argv=None) -> int:
         ("join", kw["num_ops"] // 3, "pmJ"),
         ("kill", 2 * kw["num_ops"] // 3, "primary"),
     )
-    cell = run_cluster(args.scheme, args.workload, nodes=args.nodes,
-                       replicas=args.replicas, dist=args.dist or "zipf",
-                       events=events, seed=args.seed, **kw)
-    payload = {
-        "cluster": cell,
-        "durability": durability_drill(args.scheme),
-        "migration": migration_drill(args.scheme),
-    }
+    def _drive():
+        cell = run_cluster(args.scheme, args.workload, nodes=args.nodes,
+                           replicas=args.replicas, dist=args.dist or "zipf",
+                           events=events, seed=args.seed, **kw)
+        return cell, {
+            "cluster": cell,
+            "durability": durability_drill(args.scheme),
+            "migration": migration_drill(args.scheme),
+        }
+
+    if args.trace:
+        from repro.rdma.sim import run_ycsb
+        with obs.scope(obs.Tracer(obs.TickClock())) as (tracer, reg):
+            cell, payload = _drive()
+            # the report's headline latency ratio wants the single-server
+            # YCSB scheme trio in the SAME export (e2e.op_us histograms).
+            # The trio runs at run_ycsb's FULL default sizes even under
+            # --smoke: small tables let the probe baselines hit on their
+            # first probe, which inverts the p50 ordering the report gates
+            for sch in ("continuity", "level", "pfarm"):
+                for wl in ("A", "C"):
+                    with obs.span("e2e.cell", scheme=sch, workload=wl):
+                        run_ycsb(sch, wl, seed=args.seed)
+            tpath, mpath = obs.write_export(
+                args.trace, tracer, reg,
+                meta={"scheme": args.scheme, "workload": args.workload,
+                      "seed": args.seed,
+                      "profile": "smoke" if args.smoke else "full"})
+        payload["obs_export"] = {"trace": tpath, "metrics": mpath}
+        print(f"obs export: {tpath} + {mpath}")
+    else:
+        cell, payload = _drive()
     if args.json:
         with open(args.json, "w") as f:
             json.dump(payload, f, indent=2, sort_keys=True, default=str)

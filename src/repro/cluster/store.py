@@ -45,7 +45,7 @@ from typing import Any, Dict, List, NamedTuple, Optional, Tuple
 
 import numpy as np
 
-from repro import api
+from repro import api, obs
 from repro.cluster.directory import Directory
 from repro.cluster.failover import FailoverReport
 from repro.rdma.sim import post_ledger_writes
@@ -54,6 +54,14 @@ from repro.rdma.transport import (DeliveryTimeout, FaultInjector, LinkModel,
 
 U32 = np.uint32
 PAD_QUANTUM = 64
+
+# per-maintenance-step stall SLO (us) when the caller does not pass one:
+# a step is priced at cohorts_moved x LinkModel.cohort_move_us(row), and a
+# step whose priced stall exceeds the SLO counts as one burn
+# (maintenance["slo_burns"] / the maintenance.slo_burn counter — the
+# obs-smoke CI job and the bench obs section gate this at ZERO under
+# default budgets)
+DEFAULT_STEP_SLO_US = 500.0
 
 
 @dataclasses.dataclass
@@ -186,7 +194,7 @@ class ClusterStore:
                       "write_timeouts": 0, "read_timeouts": 0}
         self.maintenance = {"resizes_begun": 0, "steps": 0,
                             "cohorts_moved": 0, "cutovers": 0,
-                            "blocking_resizes": 0}
+                            "blocking_resizes": 0, "slo_burns": 0}
 
     # -- membership plumbing ------------------------------------------------
     def _make_node(self, name: str, slots: Optional[int] = None) -> _Node:
@@ -259,6 +267,7 @@ class ClusterStore:
             # unrelated membership churn until its `resync` runs
             if node.alive and node.reachable and node.epoch == cur:
                 node.epoch = self.epoch
+        obs.event("cluster.epoch_bump", epoch=self.epoch)
 
     def _resident(self, node: _Node) -> Tuple[np.ndarray, np.ndarray]:
         keys, vals, live = node.store._extract(node.table)
@@ -360,12 +369,17 @@ class ClusterStore:
         return self._write("delete", keys, None)
 
     def _write(self, op: str, keys, vals) -> ClusterWriteResult:
+        with obs.span("cluster.write", op=op):
+            return self._write_impl(op, keys, vals)
+
+    def _write_impl(self, op: str, keys, vals) -> ClusterWriteResult:
         keys = np.asarray(keys, U32).reshape(-1, 4)
         B = keys.shape[0]
         if self.read_only:
             # quorum loss: refuse the whole batch rather than ack data the
             # cluster cannot place on a full replica set
             self.chaos["writes_rejected_read_only"] += B
+            obs.event("cluster.write_rejected_read_only", n=B)
             return ClusterWriteResult(np.zeros((B,), bool),
                                       np.zeros((B,)), 0.0)
         vals = None if vals is None else np.asarray(vals, U32).reshape(-1, 4)
@@ -400,6 +414,7 @@ class ClusterStore:
                     # client never saw the commit), which keeps the
                     # zero-committed-loss invariant trivially true for them
                     self.chaos["write_timeouts"] += 1
+                    obs.event("cluster.write_timeout", node=node.name)
                     ok[m] = False
                     continue
                 if comp is not None:
@@ -410,6 +425,10 @@ class ClusterStore:
 
     # -- reads --------------------------------------------------------------
     def lookup(self, keys) -> ClusterReadResult:
+        with obs.span("cluster.read"):
+            return self._lookup_impl(keys)
+
+    def _lookup_impl(self, keys) -> ClusterReadResult:
         keys = np.asarray(keys, U32).reshape(-1, 4)
         B = keys.shape[0]
         values = np.zeros((B, 4), U32)
@@ -455,6 +474,7 @@ class ClusterStore:
                     # stay unresolved (a dual-read window may still retry
                     # them on the other directory's owner)
                     self.chaos["read_timeouts"] += 1
+                    obs.event("cluster.read_timeout", node=name)
                     continue
                 lat[m] = np.maximum(lat[m],
                                     comp.op_us[: int(m.sum())])
@@ -515,6 +535,10 @@ class ClusterStore:
         directories' member sets — a stamp taken here stays honest for
         its node through the window.  The cutover's ownership changes
         surface as source mismatches at the cache, never as stale hits."""
+        with obs.span("cache.fill"):
+            return self._lookup_stamped_impl(keys)
+
+    def _lookup_stamped_impl(self, keys) -> ClusterStampedRead:
         keys = np.asarray(keys, U32).reshape(-1, 4)
         B = keys.shape[0]
         src = np.full((B,), "", object)
@@ -558,6 +582,10 @@ class ClusterStore:
         member and delivery-timed-out sub-batches report unresolved;
         callers MUST treat unresolved as a failed validation (miss),
         never a hit."""
+        with obs.span("cache.validate"):
+            return self._version_read_impl(keys)
+
+    def _version_read_impl(self, keys) -> ClusterStampResult:
         keys = np.asarray(keys, U32).reshape(-1, 4)
         B = keys.shape[0]
         lat = np.zeros((B,))
@@ -595,6 +623,10 @@ class ClusterStore:
         scan is the contiguous PM range around the start record on its
         owner — it never spans shards.  ``found`` reports the start
         record resolving; the fetched range rides in the plan's bytes."""
+        with obs.span("cluster.scan"):
+            return self._scan_impl(keys, spans)
+
+    def _scan_impl(self, keys, spans) -> ClusterReadResult:
         keys = np.asarray(keys, U32).reshape(-1, 4)
         spans = np.maximum(np.asarray(spans, np.int64).reshape(-1), 1)
         B = keys.shape[0]
@@ -639,7 +671,36 @@ class ClusterStore:
         bench prices.  ``step_slo_us`` hands sizing to the per-step stall
         SLO controller instead of a fixed cohort count: ``begin_resize``
         derives the budget from the `LinkModel` and ``budget=None`` lets
-        each step consume it.  Returns one action dict per shard touched."""
+        each step consume it.  Returns one action dict per shard touched.
+
+        Every advancing step is priced (cohorts moved x the `LinkModel`
+        cohort-move stall) against the step SLO — `DEFAULT_STEP_SLO_US`
+        unless ``step_slo_us`` overrides it — feeding the
+        ``maintenance.step_us`` gauge and, on overrun, the
+        ``maintenance.slo_burn`` counter; a BLOCKING baseline resize is
+        priced over its whole item count (the stop-the-world stall)."""
+        with obs.span("cluster.maintenance"):
+            return self._maintenance_impl(budget, trigger_lf, factor,
+                                          step_slo_us)
+
+    def _price_step(self, node: _Node, moved: int,
+                    step_slo_us: Optional[float]) -> None:
+        row = float(getattr(node.store.cfg, "row_bytes", 256))
+        per = (self._link or LinkModel()).cohort_move_us(
+            read_bytes=row, write_bytes=row + 16)
+        step_us = moved * per
+        slo = step_slo_us if step_slo_us is not None else DEFAULT_STEP_SLO_US
+        reg = obs.get_registry()
+        reg.gauge("maintenance.step_us", node=node.name).set(step_us)
+        reg.gauge("maintenance.step_slo_us").set(slo)
+        if step_us > slo:
+            reg.counter("maintenance.slo_burn").inc()
+            self.maintenance["slo_burns"] += 1
+        obs.event("resize.step_priced", node=node.name, moved=moved,
+                  step_us=round(step_us, 3), slo_us=slo)
+
+    def _maintenance_impl(self, budget, trigger_lf, factor,
+                          step_slo_us) -> List[dict]:
         actions: List[dict] = []
         for node in self._nodes.values():
             if not self._serving(node):
@@ -657,24 +718,32 @@ class ClusterStore:
                 if not hasattr(node.store, "resize_write"):
                     node.store, node.table = node.store.resize_cutover(rs)
                     self.maintenance["blocking_resizes"] += 1
+                    self._price_step(node, rs.n_items, step_slo_us)
+                    obs.event("resize.blocking", node=node.name,
+                              moved=rs.n_items)
                     actions.append({"node": node.name, "action": "blocking",
                                     "lf": lf, "moved": rs.n_items})
                     continue
                 node.resize = rs
                 node.table = rs.table
+                obs.event("resize.begin", node=node.name,
+                          cohorts=rs.store.cfg.num_pairs)
                 actions.append({"node": node.name, "action": "begin",
                                 "lf": lf, "cohorts": rs.store.cfg.num_pairs})
             else:
+                moved = (budget if budget is not None
+                         else (node.resize.step_budget or 1))
                 rs = node.store.resize_step(node.resize, budget)
                 node.table = rs.table
                 self.maintenance["steps"] += 1
-                self.maintenance["cohorts_moved"] += (
-                    budget if budget is not None
-                    else (node.resize.step_budget or 1))
+                self.maintenance["cohorts_moved"] += moved
+                self._price_step(node, moved, step_slo_us)
                 if rs.done:
                     node.store, node.table = node.store.resize_cutover(rs)
                     node.resize = None
                     self.maintenance["cutovers"] += 1
+                    obs.event("resize.cutover", node=node.name,
+                              moved=rs.moved)
                     actions.append({"node": node.name, "action": "cutover",
                                     "moved": rs.moved,
                                     "n_items": rs.n_items})
@@ -690,6 +759,11 @@ class ClusterStore:
         """COPY phase: add the node, ship it every key it will own.  Reads
         keep routing through the OLD directory (dual-read covers the
         window); `complete_join` is the cutover."""
+        with obs.span("cluster.join.copy", node=name):
+            return self._begin_join_impl(name, node_slots)
+
+    def _begin_join_impl(self, name: str,
+                         node_slots: Optional[int] = None) -> _Migration:
         assert self._mig is None, "a migration is already in flight"
         new_dir = self.directory.with_node(name)
         self._nodes[name] = self._make_node(name, node_slots)
@@ -714,6 +788,8 @@ class ClusterStore:
         assert self._mig is not None, "no migration in flight"
         mig = self._mig
         joined = set(mig.new_dir.nodes) - set(self.directory.nodes)
+        obs.event("cluster.join.cutover", node=next(iter(joined)),
+                  copied=mig.copied)
         self.directory = mig.new_dir
         self._mig = None
         self._bump_epoch()
@@ -780,6 +856,7 @@ class ClusterStore:
         Detection (heartbeat timeout) and promotion are the
         `FailoverController`'s job."""
         self._nodes[name].alive = False
+        obs.event("cluster.kill", node=name)
 
     # -- partitions & fencing ----------------------------------------------
     def partition(self, name: str) -> None:
@@ -791,6 +868,7 @@ class ClusterStore:
         node = self._nodes[name]
         assert node.alive and node.reachable, name
         node.reachable = False
+        obs.event("cluster.partition", node=name)
         self._bump_epoch()
 
     def heal(self, name: str) -> None:
@@ -800,6 +878,7 @@ class ClusterStore:
         node = self._nodes[name]
         assert node.alive and not node.reachable, name
         node.reachable = True
+        obs.event("cluster.heal", node=name)
 
     def stale_write(self, name: str, keys, vals) -> int:
         """A client that has not heard about the partition writes THROUGH
@@ -850,6 +929,10 @@ class ClusterStore:
 
         Then the node gets the current epoch token and `_serving`
         accepts it again."""
+        with obs.span("cluster.resync", node=name):
+            return self._resync_impl(name)
+
+    def _resync_impl(self, name: str) -> HealReport:
         node = self._nodes[name]
         assert node.alive and node.reachable, name
         assert node.epoch < self.epoch, f"{name} is already current"
@@ -900,6 +983,8 @@ class ClusterStore:
             if unowned.any():
                 self._padded_write("delete", node, Kn[unowned], None)
         node.epoch = self.epoch
+        obs.event("cluster.resynced", node=name, stale_detected=detected,
+                  resynced=resynced)
         return HealReport(node=name, stale_acks_detected=detected,
                           resynced=resynced)
 
@@ -921,6 +1006,10 @@ class ClusterStore:
         be crashed OR partitioned past the suspicion grace window — a
         partitioned ex-primary is fenced out the same way, and every
         stale ack it took is detected here."""
+        with obs.span("cluster.failover", node=dead):
+            return self._failover_impl(dead)
+
+    def _failover_impl(self, dead: str) -> FailoverReport:
         node = self._nodes[dead]
         assert not (node.alive and node.reachable), dead
         self._detect_stale(node)
@@ -947,10 +1036,12 @@ class ClusterStore:
             else:
                 self._mig = dataclasses.replace(self._mig, new_dir=nd)
         recovery = {}
+        obs.event("failover.fenced", node=dead, epoch=self.epoch)
         for node in self._nodes.values():
             if not self._serving(node):
                 continue
             node.table, report = node.store.recover(node.table)
+            obs.event("failover.recovered", node=node.name)
             if node.resize is not None:
                 # a survivor mid-split restarts BOTH images; the handle
                 # resumes from the recovered tables (tokens are host
@@ -991,12 +1082,25 @@ class ClusterStore:
                     okn, _ = self._padded_write("update", node, K[fix],
                                                 V[fix])
                     recopied += int(okn.sum())
+        obs.event("failover.promoted", node=dead, promoted=promoted,
+                  recopied=recopied)
         return FailoverReport(dead=dead, promoted_keys=promoted,
                               recopied=recopied, recovery=recovery)
 
     # -- diagnostics --------------------------------------------------------
     def total_resident(self) -> int:
         return len(self._distinct_resident()[0])
+
+    def metrics_view(self) -> obs.MetricsRegistry:
+        """ONE registry merged across every node endpoint (counters add,
+        histograms merge buckets, gauges keep the worst observed) — the
+        cross-node roll-up a traced run exports.  Per-node registries
+        stay intact on each `RemoteMemory`."""
+        reg = obs.MetricsRegistry()
+        for node in self._nodes.values():
+            if node.mem is not None:
+                reg.merge(node.mem.metrics)
+        return reg
 
     def stats(self) -> dict:
         out = {"scheme": self.scheme, "nodes": {}, "replicas":

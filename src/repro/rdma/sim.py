@@ -26,6 +26,7 @@ from typing import Dict, Optional
 import jax
 import numpy as np
 
+from repro import obs
 from repro.core.continuity import SLOT_BYTES
 from repro.data import ycsb
 from repro.rdma import verbs as rv
@@ -127,7 +128,10 @@ def run_ycsb(scheme: str, workload: str, *, num_records: int = 3000,
     order_ids = list(loaded)      # insertion order (D's read-latest axis)
     next_id = num_records
 
-    read_lat, write_lat = [], []
+    # per-op-type latency sketches (local per cell; folded into the
+    # installed obs registry at the end so a traced run exports them
+    # under e2e.op_us{scheme,workload,op})
+    h_read, h_write = obs.Histogram(), obs.Histogram()
     ops_done = 0
     while ops_done < num_ops:
         if workload == "D":
@@ -140,8 +144,8 @@ def run_ycsb(scheme: str, workload: str, *, num_records: int = 3000,
             ids = loaded[scramble[zipf.sample(rng, n_read)]]
         if n_read:
             hits = store.lookup(table, ycsb.make_key(ids))
-            comp = mem.post(hits.plan)
-            read_lat.append(comp.op_us)
+            comp = mem.post(hits.plan, tag="read")
+            h_read.record_many(comp.op_us)
         if n_scan:
             # YCSB-E short scans: start key zipf-ranked, span uniform.
             # The scan's wire cost IS the scan plan (the start record
@@ -151,8 +155,9 @@ def run_ycsb(scheme: str, workload: str, *, num_records: int = 3000,
             spans = ycsb.scan_lengths(rng, n_scan)
             skeys = ycsb.make_key(starts)
             store.lookup(table, skeys)
-            comp = mem.post(store.scan_plan(table, skeys, spans))
-            read_lat.append(comp.op_us)
+            comp = mem.post(store.scan_plan(table, skeys, spans),
+                            tag="scan")
+            h_read.record_many(comp.op_us)
         if n_ins:
             ins_ids = np.arange(next_id, next_id + n_ins)
             next_id += n_ins
@@ -163,7 +168,7 @@ def run_ycsb(scheme: str, workload: str, *, num_records: int = 3000,
             comp = post_ledger_writes(mem, int(iok.sum()),
                                       int(ires.ledger.pm_writes))
             if comp is not None:
-                write_lat.append(comp.op_us)
+                h_write.record_many(comp.op_us)
         if n_upd:
             # F's updates are the write half of read-modify-write: they
             # target the keys the SAME round just read (the RMW tail of
@@ -175,24 +180,32 @@ def run_ycsb(scheme: str, workload: str, *, num_records: int = 3000,
             comp = post_ledger_writes(mem, int(np.asarray(ures.ok).sum()),
                                       int(ures.ledger.pm_writes))
             if comp is not None:
-                write_lat.append(comp.op_us)
+                h_write.record_many(comp.op_us)
         ops_done += n_logical
     jax.block_until_ready(table)
 
-    lat = np.concatenate(read_lat + write_lat)
+    # all percentiles come from the merged sketch — the same buckets the
+    # obs export carries, so bench numbers and exports cannot disagree
+    merged = obs.Histogram()
+    merged.merge(h_read)
+    merged.merge(h_write)
+    reg = obs.get_registry()
+    reg.histogram("e2e.op_us", scheme=scheme, workload=workload,
+                  op="read").merge(h_read)
+    reg.histogram("e2e.op_us", scheme=scheme, workload=workload,
+                  op="write").merge(h_write)
     out = {
         "ops_per_s": ops_done / mem.total_us * 1e6,
-        "p50_us": float(np.percentile(lat, 50)),
-        "p99_us": float(np.percentile(lat, 99)),
+        "p50_us": merged.percentile(50),
+        "p99_us": merged.percentile(99),
         "doorbells": float(mem.doorbells),
         "verbs_per_op": mem.total_verbs / ops_done,
         "bytes_per_op": mem.total_bytes / ops_done,
     }
-    if read_lat:
-        out["read_p50_us"] = float(np.percentile(np.concatenate(read_lat), 50))
-    if write_lat:
-        out["write_p50_us"] = float(
-            np.percentile(np.concatenate(write_lat), 50))
+    if h_read.count:
+        out["read_p50_us"] = h_read.percentile(50)
+    if h_write.count:
+        out["write_p50_us"] = h_write.percentile(50)
     return out
 
 

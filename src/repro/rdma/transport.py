@@ -29,6 +29,8 @@ from typing import NamedTuple, Optional
 
 import numpy as np
 
+from repro.obs import trace as obs
+from repro.obs.metrics import MetricsRegistry
 from repro.rdma import verbs as rv
 
 
@@ -176,27 +178,96 @@ class RemoteMemory:
 
     def __init__(self, link: Optional[LinkModel] = None,
                  faults: Optional[FaultInjector] = None,
-                 retry: Optional[RetryPolicy] = None):
+                 retry: Optional[RetryPolicy] = None,
+                 registry: Optional[MetricsRegistry] = None):
         self.link = link or LinkModel()
         self.faults = faults
         # faults without a retry policy would silently lose rounds; the
         # default policy makes every drop a timeout + backoff + replay
         self.retry = retry or (RetryPolicy() if faults is not None else None)
-        self.total_us = 0.0
-        self.doorbells = 0
-        self.posts = 0
-        self.total_verbs = 0
-        self.total_bytes = 0
-        self.retries = 0        # rounds replayed after a timeout
-        self.timeouts = 0       # dropped deliveries waited out
-        self.duplicates = 0     # rounds the NIC delivered twice
-        self.reorders = 0       # intra-round reordered deliveries
-        self.backoff_us = 0.0   # total backoff waited before replays
-        self.give_ups = 0       # rounds that exhausted max_attempts
-        # per-tag wire counters: callers label posts ("lookup", "validate",
-        # "fill", ...) so the cache benchmarks can separate validation
-        # traffic from miss traffic on ONE endpoint without guessing
-        self.by_tag: dict = {}
+        # every wire counter lives in the endpoint's registry; the legacy
+        # attribute API (``mem.doorbells`` etc.) survives as properties
+        # reading it, and ``stats()`` is a view over the same sinks
+        self.metrics = registry if registry is not None else MetricsRegistry()
+        # callers label posts ("lookup", "validate", "fill", ...) so the
+        # cache benchmarks can separate validation traffic from miss
+        # traffic on ONE endpoint; first-seen order keeps by_tag stable
+        self._tags: list = []
+
+    def _count(self, name: str, n: float = 1,
+               tag: Optional[str] = None) -> None:
+        self.metrics.counter(name).inc(n)
+        if tag is not None:
+            self.metrics.counter(name, tag=tag).inc(n)
+
+    # ---- legacy counter attributes, now registry views -------------------
+    @property
+    def total_us(self) -> float:
+        return self.metrics.value("rdma.simulated_us")
+
+    @property
+    def posts(self) -> int:
+        return int(self.metrics.value("rdma.posts"))
+
+    @property
+    def doorbells(self) -> int:
+        return int(self.metrics.value("rdma.doorbells"))
+
+    @property
+    def total_verbs(self) -> int:
+        return int(self.metrics.value("rdma.verbs"))
+
+    @property
+    def total_bytes(self) -> int:
+        return int(self.metrics.value("rdma.bytes"))
+
+    @property
+    def retries(self) -> int:
+        """Rounds replayed after a timeout."""
+        return int(self.metrics.value("rdma.retries"))
+
+    @property
+    def timeouts(self) -> int:
+        """Dropped deliveries waited out."""
+        return int(self.metrics.value("rdma.timeouts"))
+
+    @property
+    def duplicates(self) -> int:
+        """Rounds the NIC delivered twice."""
+        return int(self.metrics.value("rdma.duplicates"))
+
+    @property
+    def reorders(self) -> int:
+        """Intra-round reordered deliveries."""
+        return int(self.metrics.value("rdma.reorders"))
+
+    @property
+    def backoff_us(self) -> float:
+        """Total backoff waited before replays."""
+        return self.metrics.value("rdma.backoff_us")
+
+    @property
+    def give_ups(self) -> int:
+        """Rounds that exhausted max_attempts."""
+        return int(self.metrics.value("rdma.give_ups"))
+
+    @property
+    def by_tag(self) -> dict:
+        """Per-tag wire counters incl. per-tag retries/timeouts (so cache
+        validate retries are attributable apart from write retries)."""
+        v = self.metrics.value
+        out = {}
+        for t in self._tags:
+            out[t] = {
+                "posts": int(v("rdma.posts", tag=t)),
+                "doorbells": int(v("rdma.doorbells", tag=t)),
+                "verbs": int(v("rdma.verbs", tag=t)),
+                "bytes": int(v("rdma.bytes", tag=t)),
+                "simulated_us": v("rdma.simulated_us", tag=t),
+                "retries": int(v("rdma.retries", tag=t)),
+                "timeouts": int(v("rdma.timeouts", tag=t)),
+            }
+        return out
 
     @classmethod
     def from_policy(cls, policy, link: Optional[LinkModel] = None,
@@ -209,12 +280,14 @@ class RemoteMemory:
             return None
         return cls(link, faults=faults, retry=retry)
 
-    def _deliver_round(self, round_cost_us: float) -> float:
+    def _deliver_round(self, round_cost_us: float,
+                       tag: Optional[str] = None) -> float:
         """One doorbell round through the fault/retry loop: returns the
         simulated time the round took (clean = RTT + service; each drop
         adds a timeout + backoff; a duplicate pays the service twice; a
         reorder skews completion by one RTT).  Raises `DeliveryTimeout`
-        when ``retry.max_attempts`` deliveries all dropped."""
+        when ``retry.max_attempts`` deliveries all dropped.  ``tag``
+        attributes retry/timeout counts to the post's traffic class."""
         clean = self.link.rtt_us + round_cost_us
         if self.faults is None:
             return clean
@@ -223,20 +296,24 @@ class RemoteMemory:
         for attempt in range(self.retry.max_attempts):
             outcome = self.faults.draw()
             if outcome == "drop":
-                self.timeouts += 1
-                self.retries += 1
+                self._count("rdma.timeouts", tag=tag)
+                self._count("rdma.retries", tag=tag)
                 back = self.retry.backoff_us(attempt, self.faults.rng)
-                self.backoff_us += back
+                self._count("rdma.backoff_us", back)
+                obs.event("rdma.retry", attempt=attempt, tag=tag or "",
+                          backoff_us=round(back, 3))
                 spent += self.retry.timeout_us + back
                 continue
             if outcome == "dup":
-                self.duplicates += 1
+                self._count("rdma.duplicates")
                 return spent + clean + round_cost_us   # second copy drains too
             if outcome == "reorder":
-                self.reorders += 1
+                self._count("rdma.reorders")
                 return spent + clean + self.link.rtt_us
             return spent + clean
-        self.give_ups += 1
+        self._count("rdma.give_ups", tag=tag)
+        obs.event("rdma.give_up", tag=tag or "",
+                  attempts=self.retry.max_attempts)
         raise DeliveryTimeout(
             f"round dropped {self.retry.max_attempts} times "
             f"(waited {spent:.1f}us)")
@@ -258,15 +335,26 @@ class RemoteMemory:
         cost = self.link.verb_cost_us(verb, nbytes, fence)    # (B, M)
 
         rounds = int((depth + 1)[active].max()) if active.any() else 0
+        traced = obs.get_tracer() is not None
+        is_write = (verb == rv.WRITE) | (verb == rv.CAS)
         batch_us = 0.0
         try:
             for d in range(rounds):
                 sel = active & (depth == d)
                 if sel.any():
-                    batch_us += self._deliver_round(float(cost[sel].sum()))
+                    batch_us += self._deliver_round(float(cost[sel].sum()),
+                                                    tag=tag)
+                    if traced:
+                        obs.event("rdma.doorbell", round=d,
+                                  verbs=int(sel.sum()), tag=tag or "")
+                        nf = int((fence & is_write & sel).sum())
+                        if nf:
+                            obs.event("rdma.fence_wait", n=nf, round=d,
+                                      tag=tag or "")
         except DeliveryTimeout:
-            self.total_us += batch_us
-            self.posts += 1
+            self._count("rdma.simulated_us", batch_us, tag=tag)
+            self._count("rdma.posts", tag=tag)
+            self._note_tag(tag)
             raise
 
         # unloaded per-op latency: each op pays one RTT per round it
@@ -276,23 +364,27 @@ class RemoteMemory:
 
         nverbs = int(active.sum())
         nb = int(nbytes[active].sum())
-        self.total_us += batch_us
-        self.doorbells += rounds
-        self.posts += 1
-        self.total_verbs += nverbs
-        self.total_bytes += nb
-        if tag is not None:
-            t = self.by_tag.setdefault(
-                tag, {"posts": 0, "doorbells": 0, "verbs": 0, "bytes": 0,
-                      "simulated_us": 0.0})
-            t["posts"] += 1
-            t["doorbells"] += rounds
-            t["verbs"] += nverbs
-            t["bytes"] += nb
-            t["simulated_us"] += batch_us
+        self._count("rdma.simulated_us", batch_us, tag=tag)
+        self._count("rdma.posts", tag=tag)
+        self._count("rdma.doorbells", rounds, tag=tag)
+        self._count("rdma.verbs", nverbs, tag=tag)
+        self._count("rdma.bytes", nb, tag=tag)
+        self._note_tag(tag)
+        # flush-boundary histogram feed: one record_many per post, never
+        # per verb (DESIGN.md §13) — per-tag latency tails come for free
+        lbl = {"tag": tag} if tag is not None else {}
+        self.metrics.histogram("rdma.op_us", **lbl).record_many(op_us)
+        self.metrics.histogram("rdma.post_us", **lbl).record(batch_us)
+        self.metrics.histogram("rdma.rounds_per_post", **lbl).record(rounds)
         return Completion(batch_us, op_us, rounds, nverbs, nb)
 
+    def _note_tag(self, tag: Optional[str]) -> None:
+        if tag is not None and tag not in self._tags:
+            self._tags.append(tag)
+
     def stats(self) -> dict:
+        """A view over the endpoint registry — shape unchanged from the
+        pre-registry counters (callers index it blindly)."""
         out = {
             "posts": self.posts,
             "doorbells": self.doorbells,
@@ -312,6 +404,7 @@ class RemoteMemory:
             out["give_ups"] = self.give_ups
             if self.faults is not None:
                 out["injected"] = dict(self.faults.injected)
-        if self.by_tag:
-            out["by_tag"] = {k: dict(v) for k, v in self.by_tag.items()}
+        by_tag = self.by_tag
+        if by_tag:
+            out["by_tag"] = by_tag
         return out
